@@ -1,0 +1,89 @@
+"""Screening-sweep implementations head-to-head (paper Alg. 1 cost model).
+
+  naive      : per-feature python loop over neg_min (the paper's literal
+               Algorithm 1 — O(mn) with per-feature kernel-launch overhead)
+  batched    : one fused jnp sweep (our TPU adaptation; still multi-pass)
+  fused-op   : the Pallas-kernel wrapper (single pass over X; on CPU this
+               runs the jnp fallback — on TPU it is the Mosaic kernel; the
+               win measured here is the pass-fusion, the VMEM win is
+               structural and shows in the dry-run bytes term)
+
+Reports us/feature — the paper's claim is that screening cost ~ one gradient
+evaluation; these numbers substantiate it.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lambda_max, screen_bounds, theta_at_lambda_max
+from repro.core.screening import (
+    FeatureReductions,
+    screen_bounds_from_reductions,
+    shared_scalars,
+)
+from repro.data import make_sparse_classification
+
+
+def _naive_loop(X, y, lam1, lam2, theta1, n_features=64):
+    """Paper Algorithm 1: feature-at-a-time (first n_features for timing)."""
+    sh = shared_scalars(y, lam1, lam2, theta1)
+    outs = []
+    for j in range(n_features):
+        f = X[j:j + 1]
+        rhs = jnp.stack([y * theta1, y, jnp.ones_like(y)], axis=1)
+        d = f @ rhs
+        red = FeatureReductions(d_theta=d[:, 0], d_one=d[:, 1], d_y=d[:, 2],
+                                d_sq=jnp.sum(f * f, axis=1))
+        outs.append(screen_bounds_from_reductions(red, sh))
+    return jnp.concatenate(outs)
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(log=print):
+    ds = make_sparse_classification(m=8192, n=1024, seed=13)
+    X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+    m = X.shape[0]
+    lmax = lambda_max(X, y)
+    theta1 = theta_at_lambda_max(y, lmax)
+    lam2 = 0.5 * lmax
+
+    n_naive = 64
+    t_naive = _time(lambda: _naive_loop(X, y, lmax, lam2, theta1, n_naive), reps=1)
+    t_batched = _time(lambda: screen_bounds(X, y, lmax, lam2, theta1))
+
+    # fused Pallas op: on CPU this must run in interpret mode (python-level
+    # emulation — correctness path, not a perf path), so time a small slice
+    # and report it as such; the TPU win is structural (1 HBM pass vs 4, see
+    # EXPERIMENTS.md §Perf / svm_roofline).
+    from repro.kernels.ops import screen_bounds_op
+    m_f = 512
+    t_fused = _time(lambda: screen_bounds_op(X[:m_f], y, lmax, lam2, theta1,
+                                             block_m=256, block_n=512,
+                                             interpret=True), reps=1)
+
+    us_naive = t_naive / n_naive * 1e6
+    us_batched = t_batched / m * 1e6
+    us_fused = t_fused / m_f * 1e6
+    log(f"# screening sweep cost (m={m}, n={X.shape[1]})")
+    log(f"naive per-feature : {us_naive:10.2f} us/feature")
+    log(f"batched jnp       : {us_batched:10.3f} us/feature "
+        f"(x{us_naive / us_batched:.0f} vs naive)")
+    log(f"fused op (interpret-mode emulation, m={m_f}): {us_fused:10.3f} us/feature")
+    return [
+        ("screen_naive", us_naive, "per-feature loop (paper Alg.1)"),
+        ("screen_batched", us_batched, "one fused jnp sweep"),
+        ("screen_fused_interp", us_fused, "Pallas interpret emulation (CPU)"),
+    ]

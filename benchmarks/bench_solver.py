@@ -1,0 +1,46 @@
+"""Solver-side tables: warm-start effect and problem-size scaling of FISTA
+(the substrate the screening accelerates — paper Sec. 6.7's training cost)."""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fista_solve, lambda_max
+from repro.data import make_sparse_classification
+
+
+def run(log=print):
+    rows = []
+    log("# FISTA iterations: cold vs warm start along the path")
+    ds = make_sparse_classification(m=2000, n=400, seed=17)
+    X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+    lmax = float(lambda_max(X, y))
+    prev = None
+    log("lambda_ratio,cold_iters,warm_iters")
+    for r in (0.8, 0.6, 0.4):
+        lam = r * lmax
+        cold = fista_solve(X, y, lam, max_iters=30000, tol=1e-10)
+        if prev is not None:
+            warm = fista_solve(X, y, lam, w0=prev.w, b0=prev.b,
+                               max_iters=30000, tol=1e-10)
+            log(f"{r},{int(cold.n_iters)},{int(warm.n_iters)}")
+            rows.append(("fista_warm_start", 0.0,
+                         f"r={r} cold={int(cold.n_iters)} warm={int(warm.n_iters)}"))
+        prev = cold
+
+    log("# solve-time scaling with kept-feature count (screening's win)")
+    log("m_kept,solve_ms")
+    full = np.asarray(X)
+    for m_kept in (128, 512, 2000):
+        Xr = jnp.asarray(full[:m_kept])
+        res = fista_solve(Xr, y, 0.4 * lmax, max_iters=30000, tol=1e-10)  # warm jit
+        t0 = time.perf_counter()
+        res = fista_solve(Xr, y, 0.4 * lmax, max_iters=30000, tol=1e-10)
+        res.w.block_until_ready()
+        dt = (time.perf_counter() - t0) * 1e3
+        log(f"{m_kept},{dt:.1f}")
+        rows.append((f"fista_m{m_kept}", dt * 1e3, f"iters={int(res.n_iters)}"))
+    return rows

@@ -1,0 +1,144 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh):
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS          [s]
+    memory     = HLO_bytes_per_device / HBM_BW              [s]
+    collective = collective_bytes_per_device / ICI_BW       [s]
+
+(cost_analysis on an SPMD module is per-partition, i.e. per-device, as is the
+optimized-HLO collective audit.) Dominant term = the bottleneck; the roofline
+fraction reported in EXPERIMENTS.md §Perf is
+``compute / max(compute, memory, collective)`` — how close the cell is to
+being MXU-bound, the best the workload can do on this mesh.
+
+MODEL_FLOPS: 6·N·T for train, 2·N·T for prefill, 2·N_active·B for one decode
+step (per device: divided by the mesh size). The ratio MODEL_FLOPS/HLO_FLOPs
+flags remat/redundancy waste (ratio << 1 ⇒ compiled compute is mostly
+overhead; > 1 ⇒ cost model undercounts fused ops).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12      # bf16 / chip (TPU v5e-class target)
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link
+
+
+def model_flops_total(arch: str, shape: str) -> float:
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    tokens = sh["batch"] * sh["seq"]
+    if sh["kind"] == "train":
+        return 6.0 * cfg.param_count() * tokens if not cfg.moe_num_experts \
+            else 6.0 * cfg.active_param_count() * tokens
+    if sh["kind"] == "prefill":
+        n = cfg.active_param_count() if cfg.moe_num_experts else cfg.param_count()
+        return 2.0 * n * tokens
+    # decode: one token per sequence in the batch
+    n = cfg.active_param_count() if cfg.moe_num_experts else cfg.param_count()
+    return 2.0 * n * sh["batch"]
+
+
+def analyse(rec: dict) -> dict:
+    n_dev = rec["devices"]
+    comp = rec["flops"] / PEAK_FLOPS
+    mem = rec["bytes_accessed"] / HBM_BW
+    coll = rec["collective_bytes_total"] / ICI_BW
+    dom = max(("compute", comp), ("memory", mem), ("collective", coll),
+              key=lambda t: t[1])
+    mf = model_flops_total(rec["arch"], rec["shape"]) / n_dev
+    frac = comp / max(comp, mem, coll) if max(comp, mem, coll) > 0 else 0.0
+    return {
+        **rec,
+        "t_compute_s": comp,
+        "t_memory_s": mem,
+        "t_collective_s": coll,
+        "dominant": dom[0],
+        "roofline_fraction": frac,
+        "model_flops_per_dev": mf,
+        "useful_flops_ratio": mf / rec["flops"] if rec["flops"] else 0.0,
+    }
+
+
+def render(records: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | roofline frac | useful/HLO flops | cost source |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if r.get("skipped"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"SKIP | — | — | {r['skipped'][:48]}… |")
+            continue
+        a = analyse(r)
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+            f"| {a['t_compute_s']:.2e} | {a['t_memory_s']:.2e} "
+            f"| {a['t_collective_s']:.2e} | **{a['dominant']}** "
+            f"| {a['roofline_fraction']:.2f} | {a['useful_flops_ratio']:.2f} "
+            f"| {a.get('cost_source', '')} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="pod16x16",
+                    help="roofline table mesh (single-pod per the brief)")
+    ap.add_argument("--out", default="artifacts/roofline.md")
+    args = ap.parse_args()
+
+    # scan-mode artifacts carry the memory/compile proof; cost-mode artifacts
+    # (unrolled lowering) carry accurate flops/bytes/collectives. Merge.
+    base, cost, cost_base = {}, {}, {}
+    for p in sorted(Path(args.dir).glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("mesh") != args.mesh and not rec.get("skipped"):
+            continue
+        key = (rec["arch"], rec["shape"])
+        name = p.stem
+        if name.endswith("__cost"):
+            cost[key] = rec
+        elif name.endswith("__cost_base"):
+            cost_base[key] = rec
+        elif name.endswith("__base"):
+            continue  # scan-mode baseline variant: §Perf only
+        elif key not in base or not base[key].get("skipped"):
+            base[key] = rec
+    # fall back to baseline-cost numbers where no optimized-cost cell exists
+    for key, rec in cost_base.items():
+        cost.setdefault(key, rec)
+
+    uniq = []
+    for key in sorted(base):
+        rec = dict(base[key])
+        if key in cost and not rec.get("skipped"):
+            c = cost[key]
+            rec.update(
+                flops=c["flops"], bytes_accessed=c["bytes_accessed"],
+                collectives=c["collectives"],
+                collective_bytes_total=c["collective_bytes_total"],
+            )
+            rec["cost_source"] = "unrolled"
+        else:
+            rec["cost_source"] = "scan(x~L undercount)"
+        uniq.append(rec)
+
+    table = render(uniq)
+    Path(args.out).write_text(table + "\n")
+    print(table)
+    print(f"\nwritten to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table. Prints
+``name,us_per_call,derived`` CSV plus human-readable sections.
+
+PYTHONPATH=src python -m benchmarks.run [--only screening|path|kernels|solver]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import bench_kernels, bench_path, bench_screening, bench_solver
+
+    suites = {
+        "screening": bench_screening.run,
+        "path": bench_path.run,
+        "kernels": bench_kernels.run,
+        "solver": bench_solver.run,
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    all_rows = []
+    for name, fn in suites.items():
+        print(f"\n===== {name} =====")
+        all_rows.extend(fn(log=print))
+
+    print("\n===== CSV =====")
+    print("name,us_per_call,derived")
+    for name, us, derived in all_rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: safe screening for the sparse SVM in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    fista_solve,
+    lambda_max,
+    screen,
+    svm_path,
+    theta_at_lambda_max,
+)
+from repro.data import make_sparse_classification
+
+# 1. data: 2000 features x 300 samples, 12 truly-informative features
+ds = make_sparse_classification(m=2000, n=300, k_active=12, seed=0)
+X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+
+# 2. lambda_max in closed form (paper Eq. 26): above it, w* = 0
+lmax = float(lambda_max(X, y))
+print(f"lambda_max = {lmax:.3f}")
+
+# 3. screen features for lambda = 0.7*lmax using the exact dual point at lmax
+#    (screening power grows as lambda2 -> lambda1; the path below shows the
+#    sequential rule staying strong across the whole grid)
+theta1 = theta_at_lambda_max(y, jnp.asarray(lmax))
+lam2 = 0.7 * lmax
+keep, bounds = screen(X, y, lmax, lam2, theta1)
+print(f"screening keeps {int(keep.sum())}/{X.shape[0]} features "
+      f"(rejected {100 * (1 - float(keep.mean())):.1f}%)")
+
+# 4. solve the reduced problem — same solution, fraction of the work
+idx = np.nonzero(np.asarray(keep))[0]
+res_red = fista_solve(jnp.asarray(np.asarray(X)[idx]), y, lam2,
+                      max_iters=20000, tol=1e-10)
+res_full = fista_solve(X, y, lam2, max_iters=20000, tol=1e-10)
+print(f"objective reduced={float(res_red.obj):.6f} full={float(res_full.obj):.6f} "
+      f"(identical => screening was safe)")
+
+# 5. a whole regularization path with sequential screening
+path = svm_path(ds.X, ds.y, n_lambdas=8, lam_min_ratio=0.1)
+print("path kept counts :", path.kept.tolist())
+print("path active nnz  :", path.active.tolist())

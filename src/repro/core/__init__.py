@@ -1,0 +1,24 @@
+"""Paper core: safe screening for the L1-regularized L2-loss SVM."""
+
+from .dual import (  # noqa: F401
+    bias_at_lambda_max,
+    duality_gap_estimate,
+    first_features,
+    lambda_max,
+    primal_objective,
+    theta_at_lambda_max,
+    theta_from_primal,
+    xi_from_primal,
+)
+from .screening import (  # noqa: F401
+    SAFE_TAU,
+    FeatureReductions,
+    ScreenShared,
+    feature_reductions,
+    screen,
+    screen_bounds,
+    screen_bounds_from_reductions,
+    shared_scalars,
+)
+from .solver import FistaResult, fista_solve, lipschitz_estimate, soft_threshold  # noqa: F401
+from .path import PathResult, default_lambda_grid, svm_path  # noqa: F401

@@ -1,0 +1,198 @@
+"""Regularization-path driver with sequential safe screening (paper Sec. 6.7).
+
+Walks a decreasing grid ``lam_max = lam_0 > lam_1 > ... > lam_{T-1}``. At each
+step the known dual point ``theta(lam_{k})`` screens features for
+``lam_{k+1}``; the reduced problem is solved with a warm-started FISTA and the
+solution is scattered back to full coordinates.
+
+Two execution modes:
+
+* ``reduce="gather"`` — physically gathers the kept rows of X (padded to a
+  power-of-two bucket so jit re-traces at most O(log m) times). This realizes
+  the paper's speedup: solver cost scales with the *kept* feature count.
+* ``reduce="mask"``   — multiplies screened rows by 0 and keeps static shapes
+  (useful inside fully-jitted pipelines / for exactness tests).
+
+Exactness note: the rule is *safe* given an exact ``theta1``. We compute
+``theta1`` from a finite-precision primal solve (paper Eq. 20), so the path
+solves to a tight tolerance and screens with the ``SAFE_TAU`` margin;
+property tests (tests/test_screening.py) verify zero false rejections across
+random instances.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dual import (
+    bias_at_lambda_max,
+    lambda_max,
+    safe_theta_and_delta,
+    theta_at_lambda_max,
+)
+from .screening import (
+    SAFE_TAU,
+    FeatureReductions,
+    screen_bounds_from_reductions,
+    shared_scalars,
+)
+from .solver import fista_solve
+
+__all__ = ["PathResult", "svm_path", "default_lambda_grid"]
+
+
+@dataclass
+class PathResult:
+    lambdas: np.ndarray            # (T,)
+    weights: np.ndarray            # (T, m)
+    biases: np.ndarray             # (T,)
+    objectives: np.ndarray         # (T,)
+    kept: np.ndarray               # (T,) kept feature count fed to the solver
+    active: np.ndarray             # (T,) nnz(w) in the solution
+    solver_iters: np.ndarray       # (T,)
+    wall_times: np.ndarray         # (T,) seconds per step (solve + screen)
+    screen_times: np.ndarray       # (T,) seconds spent screening
+    screened: bool = True
+    extras: dict = field(default_factory=dict)
+
+
+def default_lambda_grid(lam_max_val: float, n_lambdas: int = 10, lam_min_ratio: float = 0.1) -> np.ndarray:
+    return np.geomspace(lam_max_val, lam_max_val * lam_min_ratio, n_lambdas)
+
+
+def _bucket(n: int) -> int:
+    """Round up to the next power of two (min 8) to bound retracing."""
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+def svm_path(
+    X: jax.Array,
+    y: jax.Array,
+    lambdas: Optional[Sequence[float]] = None,
+    n_lambdas: int = 10,
+    lam_min_ratio: float = 0.1,
+    screening: bool = True,
+    reduce: str = "gather",
+    tol: float = 1e-9,
+    max_iters: int = 4000,
+    tau: float = SAFE_TAU,
+) -> PathResult:
+    """Solve the L1-L2-SVM path, optionally with sequential safe screening."""
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    m, n = X.shape
+
+    lam_max_val = float(lambda_max(X, y))
+    if lambdas is None:
+        lambdas = default_lambda_grid(lam_max_val, n_lambdas, lam_min_ratio)
+    lambdas = np.asarray(lambdas, dtype=np.float64)
+    T = len(lambdas)
+
+    # theta-independent reductions, shared across the whole path (paper 6.4)
+    d_one = np.asarray(X @ y)           # fhat^T 1
+    d_y = np.asarray(X @ jnp.ones((n,), X.dtype))  # fhat^T y
+    d_sq = np.asarray(jnp.sum(X * X, axis=1))
+
+    weights = np.zeros((T, m), dtype=np.float64)
+    biases = np.zeros((T,), dtype=np.float64)
+    objectives = np.zeros((T,), dtype=np.float64)
+    kept = np.zeros((T,), dtype=np.int64)
+    active = np.zeros((T,), dtype=np.int64)
+    iters = np.zeros((T,), dtype=np.int64)
+    wall = np.zeros((T,), dtype=np.float64)
+    s_times = np.zeros((T,), dtype=np.float64)
+
+    # step 0: closed form at lam_max (w = 0); delta = 0 (theta exact here)
+    b0 = float(bias_at_lambda_max(y))
+    theta_prev = theta_at_lambda_max(y, jnp.asarray(lambdas[0]))
+    delta_prev = jnp.asarray(0.0, X.dtype)
+    lam_prev = float(lambdas[0])
+    w_full = np.zeros((m,), dtype=np.float64)
+    biases[0] = b0
+    xi0 = np.maximum(0.0, 1.0 - np.asarray(y) * b0)
+    objectives[0] = 0.5 * float(np.sum(xi0 * xi0))
+    kept[0] = 0
+
+    w_host = np.zeros((m,), dtype=np.float64)
+    b_host = b0
+
+    for k in range(1, T):
+        lam = float(lambdas[k])
+        t0 = time.perf_counter()
+
+        if screening:
+            st0 = time.perf_counter()
+            d_theta = np.asarray(X @ (y * theta_prev))
+            red = FeatureReductions(
+                d_theta=jnp.asarray(d_theta, jnp.float32),
+                d_one=jnp.asarray(d_one, jnp.float32),
+                d_y=jnp.asarray(d_y, jnp.float32),
+                d_sq=jnp.asarray(d_sq, jnp.float32),
+            )
+            sh = shared_scalars(y, jnp.asarray(lam_prev), jnp.asarray(lam),
+                                theta_prev, delta=delta_prev)
+            bounds = np.asarray(screen_bounds_from_reductions(red, sh))
+            mask = bounds >= tau
+            s_times[k] = time.perf_counter() - st0
+        else:
+            mask = np.ones((m,), dtype=bool)
+
+        idx = np.nonzero(mask)[0]
+        kept[k] = len(idx)
+
+        if reduce == "gather" and screening:
+            pad = min(_bucket(max(len(idx), 1)), m)  # never exceed m rows
+            sel = np.zeros((pad,), dtype=np.int64)
+            sel[: len(idx)] = idx
+            Xr = jnp.asarray(np.asarray(X)[sel])
+            if len(idx) < pad:  # zero out padding rows (duplicate of idx[0])
+                padmask = np.zeros((pad, 1), dtype=np.asarray(X).dtype)
+                padmask[: len(idx)] = 1.0
+                Xr = Xr * jnp.asarray(padmask)
+            w0 = jnp.asarray(w_host[sel] * (np.arange(pad) < len(idx)))
+        else:
+            Xr = X * jnp.asarray(mask[:, None], X.dtype)
+            sel = np.arange(m)
+            w0 = jnp.asarray(w_host * mask)
+
+        res = fista_solve(Xr, y, jnp.asarray(lam), w0=w0.astype(X.dtype),
+                          b0=jnp.asarray(b_host, X.dtype), max_iters=max_iters, tol=tol)
+        res_w = np.asarray(res.w, dtype=np.float64)
+
+        w_full[:] = 0.0
+        if reduce == "gather" and screening:
+            w_full[sel[: len(idx)]] = res_w[: len(idx)]
+        else:
+            w_full = res_w
+
+        b_host = float(res.b)
+        w_host = w_full.copy()
+
+        theta_prev, delta_prev = safe_theta_and_delta(
+            X, y, jnp.asarray(w_full, X.dtype), jnp.asarray(b_host, X.dtype),
+            jnp.asarray(lam),
+        )
+        lam_prev = lam
+
+        weights[k] = w_full
+        biases[k] = b_host
+        objectives[k] = float(res.obj)
+        active[k] = int(np.sum(np.abs(w_full) > 1e-10))
+        iters[k] = int(res.n_iters)
+        wall[k] = time.perf_counter() - t0
+
+    return PathResult(
+        lambdas=lambdas, weights=weights, biases=biases, objectives=objectives,
+        kept=kept, active=active, solver_iters=iters, wall_times=wall,
+        screen_times=s_times, screened=screening,
+        extras={"lam_max": lam_max_val},
+    )

@@ -1,0 +1,2 @@
+from .svm import make_sparse_classification, SvmDataset  # noqa: F401
+from .tokens import TokenPipeline, synthetic_batch_specs  # noqa: F401

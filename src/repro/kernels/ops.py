@@ -1,0 +1,100 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handle padding to block multiples, dtype policy (fp32 accumulation), backend
+dispatch (Mosaic on TPU, ``interpret=True`` elsewhere / in tests), and
+packing of the feature-independent scalars.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.screening import shared_scalars
+from . import hinge as _hinge
+from . import screen as _screen
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def screen_bounds_op(
+    X: jax.Array,
+    y: jax.Array,
+    lam1,
+    lam2,
+    theta1: jax.Array,
+    block_m: int = 256,
+    block_n: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused screening bounds for all m features (kernel-backed)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = X.shape
+    yf = y.astype(jnp.float32)
+    tf = theta1.astype(jnp.float32)
+    rhs = jnp.stack([yf * tf, yf, jnp.ones_like(yf), jnp.zeros_like(yf)], axis=1)
+    sh = shared_scalars(yf, lam1, lam2, tf)
+    scalars = _screen.pack_shared(sh)
+
+    Xp = _pad_to(_pad_to(X, block_m, 0), block_n, 1)
+    rhs_p = _pad_to(rhs, block_n, 0)
+    out = _screen.screen_bounds_pallas(
+        Xp, rhs_p, scalars, block_m=block_m, block_n=block_n, interpret=interpret
+    )
+    return out[:m]
+
+
+def hinge_margin_op(
+    X: jax.Array, w: jax.Array, y: jax.Array, b,
+    block_m: int = 256, block_n: int = 512, interpret: bool | None = None,
+):
+    """(xi, loss) = fused margin/residual sweep (kernel-backed)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = X.shape
+    Xp = _pad_to(_pad_to(X, block_m, 0), block_n, 1)
+    wp = _pad_to(w, block_m, 0)
+    # pad y with +1 labels against margin 0 -> xi = max(0, 1-1*(0+b)); to keep
+    # padded slots inert we pad y with 0 => xi = 1 - 0 = 1?? No: xi = max(0, 1-0*(u+b)) = 1.
+    # Instead pad y with a sentinel and mask xi after the call.
+    yp = _pad_to(y, block_n, 0)
+    xi, loss = _hinge.hinge_margin_pallas(
+        Xp, wp, yp, jnp.asarray(b, jnp.float32),
+        block_m=block_m, block_n=block_n, interpret=interpret,
+    )
+    if yp.shape[0] != n:
+        mask = (jnp.arange(yp.shape[0]) < n).astype(jnp.float32)
+        xi = xi * mask
+        # padded slots contributed 0.5 * 1^2 each to the loss (y=0 => xi=1)
+        loss = loss - 0.5 * jnp.sum(1.0 - mask)
+    return xi[:n], loss
+
+
+def hinge_grad_op(
+    X: jax.Array, y: jax.Array, xi: jax.Array,
+    block_m: int = 256, block_n: int = 512, interpret: bool | None = None,
+) -> jax.Array:
+    """g = -X (y*xi) (kernel-backed)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = X.shape
+    Xp = _pad_to(_pad_to(X, block_m, 0), block_n, 1)
+    v = _pad_to(y.astype(jnp.float32) * xi.astype(jnp.float32), block_n, 0)
+    g = _hinge.hinge_grad_pallas(Xp, v, block_m=block_m, block_n=block_n,
+                                 interpret=interpret)
+    return g[:m]

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.screening import (
+    FeatureReductions,
+    screen_bounds_from_reductions,
+    shared_scalars,
+)
+
+
+def screen_bounds_ref(
+    X: jax.Array, y: jax.Array, lam1, lam2, theta1: jax.Array
+) -> jax.Array:
+    """Oracle for kernels.screen.screen_bounds_pallas (fp32 accumulation)."""
+    Xf = X.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    tf = theta1.astype(jnp.float32)
+    rhs = jnp.stack([yf * tf, yf, jnp.ones_like(yf)], axis=1)
+    d = Xf @ rhs
+    red = FeatureReductions(
+        d_theta=d[:, 0], d_one=d[:, 1], d_y=d[:, 2], d_sq=jnp.sum(Xf * Xf, axis=1)
+    )
+    sh = shared_scalars(yf, lam1, lam2, tf)
+    return screen_bounds_from_reductions(red, sh)
+
+
+def hinge_stats_ref(
+    X: jax.Array, y: jax.Array, w: jax.Array, b
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for kernels.hinge: margins u, residual xi, loss (fp32 accum)."""
+    Xf = X.astype(jnp.float32)
+    u = Xf.T @ w.astype(jnp.float32) + jnp.asarray(b, jnp.float32)
+    xi = jnp.maximum(0.0, 1.0 - y.astype(jnp.float32) * u)
+    loss = 0.5 * jnp.sum(xi * xi)
+    return u, xi, loss
+
+
+def hinge_grad_ref(X: jax.Array, y: jax.Array, xi: jax.Array) -> jax.Array:
+    """Oracle for the gradient kernel: g = -X (y * xi)."""
+    return -(X.astype(jnp.float32) @ (y.astype(jnp.float32) * xi.astype(jnp.float32)))

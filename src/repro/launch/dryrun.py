@@ -1,0 +1,220 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on 512
+placeholder host devices, and extract the roofline inputs.
+
+MUST be run as its own process (``python -m repro.launch.dryrun ...``): the
+device-count override below has to land before jax initializes.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, get_config, input_specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import init_train_state, make_serve_step, make_train_step  # noqa: E402
+from repro.launch.hlo_analysis import _shape_bytes, collective_stats  # noqa: E402,F401
+from repro.models import transformer as tr  # noqa: E402
+from repro.models.sharding import input_sharding_specs, param_specs  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+def build_cell(cfg, shape_name, mesh):
+    """Returns (fn, args_SDS, in_shardings) for a cell."""
+    kind = SHAPES[shape_name]["kind"]
+    specs = input_specs(cfg, shape_name)
+    in_specs = input_sharding_specs(cfg, specs, mesh)
+
+    if kind == "train":
+        state_sds = jax.eval_shape(
+            lambda k: init_train_state(cfg, k), jax.random.PRNGKey(0))
+        pspecs = param_specs(state_sds.params, mesh)
+        state_specs = jax.tree_util.tree_map(
+            lambda l: P(), state_sds, is_leaf=lambda l: isinstance(l, jax.ShapeDtypeStruct))
+        state_specs = state_specs._replace(
+            params=pspecs,
+            opt=state_sds.opt._replace(
+                step=P(),
+                mu=param_specs(state_sds.opt.mu, mesh),
+                nu=param_specs(state_sds.opt.nu, mesh),
+            ),
+        )
+        step = make_train_step(cfg)
+        args = (state_sds, specs)
+        shard = (state_specs, in_specs)
+        return step, args, shard
+
+    params_sds = jax.eval_shape(
+        lambda k: tr.init_params(cfg, k), jax.random.PRNGKey(0))
+    pspecs = param_specs(params_sds, mesh)
+
+    if kind == "prefill":
+        def fn(params, batch):
+            return tr.prefill(params, cfg, batch,
+                              max_seq=SHAPES[shape_name]["seq"])
+        return fn, (params_sds, specs), (pspecs, in_specs)
+
+    # decode
+    serve = make_serve_step(cfg)
+    cache_sds = specs["cache"]
+    args = (params_sds, cache_sds, specs["tokens"], specs["positions"])
+    shard = (pspecs, in_specs["cache"], in_specs["tokens"], in_specs["positions"])
+    return serve, args, shard
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             force: bool = False, cost_mode: bool = False,
+             baseline: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = ("__cost_base" if baseline else "__cost") if cost_mode else (
+        "__base" if baseline else "")
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    if baseline:
+        # §Perf "before" configuration: grouped GQA layout, monolithic CE,
+        # fp32 MoE combine, 2048-token dispatch groups
+        kw = dict(gqa_grouped=True, loss_chunk=0, moe_combine_f32=True)
+        if cfg.moe_num_experts:
+            kw["moe_group_size"] = 2048
+        cfg = cfg.replace(**kw)
+    else:
+        # production defaults: H-space GQA (config default) + chunked CE +
+        # dots-saveable remat policy (§Perf iter 5).
+        # (attn_probs_bf16 measured flat on the byte model — §Perf iter 4
+        # refuted — so it stays opt-in.)
+        cfg = cfg.replace(loss_chunk=512, remat="dots")
+    if cost_mode:
+        # unrolled layers + single-chunk attention: XLA costs every layer and
+        # the full attention, instead of counting loop bodies once. Flop-
+        # equivalent to the production scan program (chunking never changes
+        # flops); used ONLY for cost/collective extraction, never for the
+        # memory/compile proof.
+        kw = dict(unroll_segments=True, blockwise_q=8192, blockwise_kv=8192)
+        if cfg.ssm_state:
+            # cap unrolled SSD chunk count at 8: intra-chunk flops grow with
+            # the chunk (∝ Q), so this *overcounts* SSM compute slightly —
+            # conservative for the roofline (noted in EXPERIMENTS.md).
+            seq = SHAPES[shape_name]["seq"]
+            kw["ssm_chunk"] = max(cfg.ssm_chunk, seq // 8)
+        cfg = cfg.replace(**kw)
+    skips = cfg.shape_skips()
+    if shape_name in skips:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "skipped": skips[shape_name]}
+        out_path.write_text(json.dumps(rec, indent=2))
+        return rec
+
+    t0 = time.perf_counter()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, args, shard = build_cell(cfg, shape_name, mesh)
+    to_ns = lambda spec_tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+    in_shardings = to_ns(shard)
+
+    import contextlib
+    jitted = jax.jit(fn, in_shardings=in_shardings)
+    # ambient mesh activates logical_constraint placements (disabled in the
+    # §Perf baseline configuration, which predates them)
+    ctx = contextlib.nullcontext() if baseline else jax.set_mesh(mesh)
+    with ctx:
+        lowered = jitted.lower(*args)
+        t_lower = time.perf_counter() - t0
+
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t1
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    colls = collective_stats(hlo)
+
+    n_dev = mesh.size
+    mem_rec = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        mem_rec[attr] = int(getattr(mem, attr, 0) or 0)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "cost_mode": cost_mode,
+        "baseline": baseline,
+        "devices": n_dev,
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "memory": mem_rec,
+        "collectives": colls,
+        "collective_bytes_total": int(sum(c["bytes"] for c in colls.values())),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "hlo_ops": hlo.count("\n"),
+    }
+    out_path.write_text(json.dumps(rec, indent=2))
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+          f"flops={rec['flops']:.3e} bytes={rec['bytes_accessed']:.3e} "
+          f"coll={rec['collective_bytes_total']:.3e} "
+          f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+    print(f"  memory_analysis: {mem_rec}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--cost-mode", action="store_true",
+                    help="unrolled lowering for accurate cost analysis")
+    ap.add_argument("--baseline", action="store_true",
+                    help="pre-optimization configuration (§Perf 'before')")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, mp, out_dir, force=args.force,
+                             cost_mode=args.cost_mode, baseline=args.baseline)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nAll dry-run cells compiled successfully.")
+
+
+if __name__ == "__main__":
+    main()

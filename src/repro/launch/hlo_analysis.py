@@ -1,0 +1,49 @@
+"""Optimized-HLO analysis helpers (collective audit for the roofline).
+
+Import-safe: no jax device-state side effects (unlike launch.dryrun, whose
+module-level XLA_FLAGS override is required to precede jax init in its own
+process and must never be imported for utilities).
+"""
+
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in optimized HLO."""
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+?) (all-reduce|all-gather|"
+                     r"reduce-scatter|all-to-all|collective-permute)", line)
+        if not m:
+            continue
+        shape_txt, op = m.groups()
+        # '-start' variants match the base name followed by '-start('
+        stats[op]["count"] += 1
+        stats[op]["bytes"] += _shape_bytes(shape_txt)
+    return stats
+
+

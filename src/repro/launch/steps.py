@@ -1,0 +1,110 @@
+"""jit-able train / serve step builders shared by the trainer and the dry-run.
+
+``make_train_step(cfg)`` returns ``step(state, batch) -> (state, metrics)``
+with gradient-accumulation microbatching (compute/comm overlap: the DP
+all-reduce of each microbatch's gradient is emitted inside the accumulation
+scan, letting the XLA latency-hiding scheduler overlap it with the next
+microbatch's compute).
+
+``make_serve_step(cfg)`` returns the single-token decode step used by the
+serving loop and the decode-shape dry-run cells.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tr
+from repro.optim import adamw_update, cosine_schedule
+from repro.optim.adamw import AdamWState, adamw_init
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamWState
+
+
+def init_train_state(cfg, key, moment_dtype=jnp.float32) -> TrainState:
+    params = tr.init_params(cfg, key)
+    return TrainState(params=params, opt=adamw_init(params, moment_dtype))
+
+
+def make_train_step(
+    cfg,
+    base_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10_000,
+    microbatches: int = 1,
+    weight_decay: float = 0.1,
+):
+    def loss(params, batch):
+        l, metrics = tr.loss_fn(params, cfg, batch)
+        return l, metrics
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def step(state: TrainState, batch):
+        if microbatches > 1:
+            B = batch["tokens"].shape[0]
+            mb = B // microbatches
+            resh = jax.tree_util.tree_map(
+                lambda x: x.reshape(microbatches, mb, *x.shape[1:]), batch)
+
+            def acc(carry, mbatch):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(state.params, mbatch)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, lsum), _ = jax.lax.scan(acc, (zeros, 0.0), resh)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss_val = lsum / microbatches
+            metrics = {}
+        else:
+            (loss_val, metrics), grads = grad_fn(state.params, batch)
+
+        lr = cosine_schedule(state.opt.step, base_lr, warmup_steps, total_steps)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, lr, weight_decay=weight_decay)
+
+        # NaN/Inf step rejection: a poisoned step is skipped wholesale (the
+        # fault-tolerance contract — a bad node's overflow must not corrupt
+        # the run; the trainer logs and continues).
+        bad = ~jnp.isfinite(loss_val)
+        gn = opt_metrics["grad_norm"]
+        bad = bad | ~jnp.isfinite(gn)
+        keep = lambda new, old: jax.tree_util.tree_map(
+            lambda a, b: jnp.where(bad, b, a), new, old)
+        new_params = keep(new_params, state.params)
+        new_opt = AdamWState(
+            step=jnp.where(bad, state.opt.step, new_opt.step),
+            mu=keep(new_opt.mu, state.opt.mu),
+            nu=keep(new_opt.nu, state.opt.nu),
+        )
+        out_metrics = {
+            "loss": loss_val, "lr": lr, "grad_norm": gn,
+            "skipped": bad.astype(jnp.int32),
+        }
+        out_metrics.update({k: v for k, v in metrics.items()})
+        return TrainState(new_params, new_opt), out_metrics
+
+    return step
+
+
+def make_serve_step(cfg):
+    """decode: (params, cache, tokens, positions) -> (logits, cache)."""
+    def step(params, cache, tokens, positions):
+        return tr.decode_step(params, cfg, tokens, positions, cache)
+    return step
+
+
+def make_prefill(cfg, max_seq: Optional[int] = None):
+    def run(params, batch):
+        return tr.prefill(params, cfg, batch, max_seq=max_seq)
+    return run

@@ -1,0 +1,289 @@
+"""Attention: GQA/MQA with RoPE, blockwise (flash-style) prefill, windowed
+local attention, and single-token decode against a KV cache.
+
+No S x S score tensor is ever materialized for long sequences: prefill uses a
+two-level lax.scan (query chunks x key chunks) with an online-softmax carry,
+which is the TPU-friendly reformulation of flash attention in pure JAX (the
+XLA scheduler pipelines the chunk loop; VMEM pressure is bounded by the
+chunk sizes from the config).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init
+from .sharding import logical_constraint as _lc, model_axis_size
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype):
+    D = cfg.d_model
+    H, G, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], D, H * hd, dtype),
+        "wk": dense_init(ks[1], D, G * hd, dtype),
+        "wv": dense_init(ks[2], D, G * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, D, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((G * hd,), dtype)
+        p["bv"] = jnp.zeros((G * hd,), dtype)
+    return p
+
+
+def _project_qkv(params, x, cfg, positions, act_dtype):
+    B, S, D = x.shape
+    H, G, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = x @ params["wq"].astype(act_dtype)
+    k = x @ params["wk"].astype(act_dtype)
+    v = x @ params["wv"].astype(act_dtype)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(act_dtype)
+        k = k + params["bk"].astype(act_dtype)
+        v = v + params["bv"].astype(act_dtype)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, G, hd)
+    v = v.reshape(B, S, G, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = _lc(q, "batch", None, "heads", None)
+    k = _lc(k, "batch", None, "heads", None)   # no-op when G % tp != 0
+    v = _lc(v, "batch", None, "heads", None)
+    return q, k, v
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, *, causal, window, q_chunk, kv_chunk,
+                  unroll=False, grouped=False, probs_bf16=False):
+    """Online-softmax attention. q/k: (B,S,{H,G},dk); v: (B,Sk,G,dv).
+
+    dk may differ from dv (MLA concatenates rope dims into q/k only).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, G, _ = k.shape
+    dv = v.shape[-1]
+    rep = H // G
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    # GQA in H-space: repeating K/V to H heads keeps every attention tensor
+    # shardable on the head axis — but ONLY pays off when H divides the
+    # model axis (the repeat alone is pure extra bytes otherwise, measured on
+    # arctic's 56 heads: +1.8x memory term). Adaptive: repeat iff sharding is
+    # actually unlocked; explicit score constraints do the placement
+    # (EXPERIMENTS.md §Perf iterations 1/1b).
+    tp = model_axis_size()
+    use_hspace = (rep > 1 and not grouped and tp > 0
+                  and H % tp == 0 and G % tp != 0)
+    if use_hspace:
+        k = _lc(jnp.repeat(k, rep, axis=2), "batch", None, "heads", None)
+        v = _lc(jnp.repeat(v, rep, axis=2), "batch", None, "heads", None)
+    elif rep > 1:
+        return _sdpa_grouped_baseline(q, k, v, q_pos, k_pos, causal=causal,
+                                      window=window, q_chunk=q_chunk,
+                                      kv_chunk=kv_chunk, unroll=unroll)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq = (Sq + q_chunk - 1) // q_chunk
+    nk = (Sk + kv_chunk - 1) // kv_chunk
+    # pad to chunk multiples
+    q = _pad_axis(q, nq * q_chunk, 1)
+    k = _pad_axis(k, nk * kv_chunk, 1)
+    v = _pad_axis(v, nk * kv_chunk, 1)
+    q_pos = _pad_axis(q_pos, nq * q_chunk, 1, fill=-1)       # (B, Sq)
+    k_pos = _pad_axis(k_pos, nk * kv_chunk, 1, fill=2**30)   # (B, Sk)
+
+    qc = q.reshape(B, nq, q_chunk, H, hd).transpose(1, 0, 3, 2, 4)   # (nq,B,H,qc,hd)
+    kc = k.reshape(B, nk, kv_chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nk, kv_chunk, H, dv).transpose(1, 0, 3, 2, 4)
+    qpc = q_pos.reshape(B, nq, q_chunk).transpose(1, 0, 2)
+    kpc = k_pos.reshape(B, nk, kv_chunk).transpose(1, 0, 2)
+
+    def q_step(_, q_blk):
+        qi, qp = q_blk       # (B,H,qc,hd), (B,qc)
+        qi32 = qi.astype(jnp.float32) * scale
+
+        def kv_step(carry, kv_blk):
+            m_prev, l_prev, acc = carry
+            ki, vi, kp = kv_blk
+            s = jnp.einsum("bhqd,bhkd->bhqk", qi32, ki.astype(jnp.float32))
+            s = _lc(s, "batch", "heads", None, None)
+            mask = jnp.ones((B, 1, q_chunk, kv_chunk), bool)
+            dq = qp[:, None, :, None]
+            dk = kp[:, None, None, :]
+            if causal:
+                mask &= dk <= dq
+            if window:
+                mask &= dq - dk < window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            if probs_bf16:
+                # §Perf iter 4: p is in [0,1] — bf16 storage halves the
+                # attention-chain bytes; the PV dot still accumulates fp32.
+                pv = jax.lax.dot_general(
+                    p.astype(jnp.bfloat16), vi.astype(jnp.bfloat16),
+                    ((( 3,), (2,)), ((0, 1), (0, 1))),
+                    preferred_element_type=jnp.float32)
+            else:
+                pv = jnp.einsum("bhqk,bhkd->bhqd", p, vi.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kc, vc, kpc),
+                                      unroll=unroll)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(qi.dtype)
+
+    _, out = jax.lax.scan(q_step, None, (qc, qpc), unroll=unroll)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(B, nq * q_chunk, H, dv)
+    return out[:, :Sq]
+
+
+def _sdpa_grouped_baseline(q, k, v, q_pos, k_pos, *, causal, window, q_chunk,
+                           kv_chunk, unroll=False):
+    """Baseline grouped-(G, rep) layout — §Perf before/after reference only."""
+    B, Sq, H, hd = q.shape
+    _, Sk, G, _ = k.shape
+    dv = v.shape[-1]
+    rep = H // G
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq = (Sq + q_chunk - 1) // q_chunk
+    nk = (Sk + kv_chunk - 1) // kv_chunk
+    q = _pad_axis(q, nq * q_chunk, 1)
+    k = _pad_axis(k, nk * kv_chunk, 1)
+    v = _pad_axis(v, nk * kv_chunk, 1)
+    q_pos = _pad_axis(q_pos, nq * q_chunk, 1, fill=-1)
+    k_pos = _pad_axis(k_pos, nk * kv_chunk, 1, fill=2**30)
+
+    qc = q.reshape(B, nq, q_chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    kc = k.reshape(B, nk, kv_chunk, G, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nk, kv_chunk, G, dv).transpose(1, 0, 3, 2, 4)
+    qpc = q_pos.reshape(B, nq, q_chunk).transpose(1, 0, 2)
+    kpc = k_pos.reshape(B, nk, kv_chunk).transpose(1, 0, 2)
+
+    def q_step(_, q_blk):
+        qi, qp = q_blk
+        qg = (qi.astype(jnp.float32) * scale).reshape(B, G, rep, q_chunk, hd)
+
+        def kv_step(carry, kv_blk):
+            m_prev, l_prev, acc = carry
+            ki, vi, kp = kv_blk
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", qg, ki.astype(jnp.float32))
+            mask = jnp.ones((B, 1, 1, q_chunk, kv_chunk), bool)
+            dq = qp[:, None, None, :, None]
+            dk = kp[:, None, None, None, :]
+            if causal:
+                mask &= dk <= dq
+            if window:
+                mask &= dq - dk < window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bgkd->bgrqd", p, vi.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, G, rep, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, G, rep, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, G, rep, q_chunk, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kc, vc, kpc),
+                                      unroll=unroll)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.reshape(B, H, q_chunk, dv).astype(qi.dtype)
+
+    _, out = jax.lax.scan(q_step, None, (qc, qpc), unroll=unroll)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(B, nq * q_chunk, H, dv)
+    return out[:, :Sq]
+
+
+def _pad_axis(x, size, axis, fill=0):
+    if x.shape[axis] == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, size - x.shape[axis])
+    return jnp.pad(x, pads, constant_values=fill)
+
+
+def attention_forward(
+    params, x, cfg, positions, *, cache=None, cache_index=None, act_dtype=jnp.bfloat16
+):
+    """Full-sequence attention (train / prefill).
+
+    Returns (out, new_kv) where new_kv = (k, v) for cache construction.
+    """
+    q, k, v = _project_qkv(params, x, cfg, positions, act_dtype)
+    out = _sdpa_chunked(
+        q, k, v, positions, positions,
+        causal=True, window=cfg.attn_window,
+        q_chunk=cfg.blockwise_q, kv_chunk=cfg.blockwise_kv,
+        unroll=cfg.unroll_segments, grouped=cfg.gqa_grouped,
+        probs_bf16=cfg.attn_probs_bf16,
+    )
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, -1) @ params["wo"].astype(act_dtype)
+    return out, (k, v)
+
+
+def attention_decode(
+    params, x, cfg, positions, k_cache, v_cache, cache_pos, *, act_dtype=jnp.bfloat16
+):
+    """One-token decode. x: (B,1,D); k/v_cache: (B,W,G,hd) ring buffers.
+
+    ``positions`` (B,) absolute positions; ``cache_pos`` (B,) write slot
+    (== positions for full cache, positions % window for ring buffers).
+    Returns (out, k_cache, v_cache).
+    """
+    B = x.shape[0]
+    H, G, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q, k, v = _project_qkv(params, x, cfg, positions[:, None], act_dtype)
+
+    oh = jax.nn.one_hot(cache_pos, k_cache.shape[1], dtype=k.dtype)  # (B, W)
+    k_cache = k_cache * (1.0 - oh[..., None, None]) + oh[..., None, None] * k
+    v_cache = v_cache * (1.0 - oh[..., None, None]) + oh[..., None, None] * v
+
+    rep = H // G
+    tp = model_axis_size()
+    use_hspace = rep > 1 and tp > 0 and H % tp == 0 and G % tp != 0
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    W = k_cache.shape[1]
+    slot = jnp.arange(W)[None, :]                      # (1, W)
+    if cfg.attn_window:
+        written = slot < jnp.minimum(positions[:, None] + 1, W)
+    else:
+        written = slot <= positions[:, None]
+
+    if use_hspace or rep == 1:  # H-space (see _sdpa_chunked sharding note)
+        if rep > 1:
+            kf = _lc(jnp.repeat(kf, rep, axis=2), "batch", None, "heads", None)
+            vf = _lc(jnp.repeat(vf, rep, axis=2), "batch", None, "heads", None)
+        qh = (q.astype(jnp.float32) / jnp.sqrt(hd))[:, 0]  # (B,H,hd)
+        s = _lc(jnp.einsum("bhd,bkhd->bhk", qh, kf), "batch", "heads", None)
+        s = jnp.where(written[:, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhk,bkhd->bhd", p, vf)
+    else:  # grouped decode (H not shardable anyway — skip the repeat bytes)
+        qg = (q.astype(jnp.float32) / jnp.sqrt(hd))[:, 0].reshape(B, G, rep, hd)
+        s = jnp.einsum("bgrd,bkgd->bgrk", qg, kf)
+        s = jnp.where(written[:, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bgrk,bkgd->bgrd", p, vf).reshape(B, H, hd)
+    out = out.reshape(B, 1, H * hd).astype(act_dtype) @ params["wo"].astype(act_dtype)
+    return out, k_cache, v_cache

@@ -1,0 +1,104 @@
+"""Decode-cache layout per architecture family.
+
+The cache is a pytree mirroring the layer-stack segment structure (see
+transformer.py): ``{"segments": [ {"s{i}": stacked-cache-per-slot} ]}`` plus
+an optional encoder cross-attention cache for enc-dec models.
+
+Per-slot caches:
+  attn : k/v ring buffers  (B, W, G, hd)   W = min(attn_window or S, S)
+  mla  : latent + rope key (B, S, L) / (B, S, R)   [the MLA memory win]
+  ssm  : conv tail (B, K-1, Cdim) + SSD state (B, nh, P, N)
+  rec  : conv tail (B, K-1, R)   + RG-LRU state (B, R)
+
+SSM/rec states are fp32 (recurrences are numerically touchy); K/V and
+latents are bf16 (matches production serving).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def segments_of(cfg):
+    """[(pattern_tuple, n_units)] decomposition of the layer stack."""
+    if cfg.family == "hybrid" and cfg.hybrid_pattern:
+        p = len(cfg.hybrid_pattern)
+        n_units, rem = divmod(cfg.num_layers, p)
+        segs = []
+        if n_units:
+            segs.append((tuple(cfg.hybrid_pattern), n_units))
+        if rem:
+            segs.append((tuple(cfg.hybrid_pattern[:rem]), 1))
+        return segs
+    kind = {"ssm": "ssm"}.get(cfg.family, "attn")
+    if cfg.family == "moe" and cfg.mla_kv_lora:
+        kind = "mla"
+    return [((kind,), cfg.num_layers)]
+
+
+def _slot_cache_spec(cfg, kind, batch, max_seq, make):
+    B = batch
+    bf16, f32 = jnp.bfloat16, jnp.float32
+    G, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if kind == "attn":
+        W = min(cfg.attn_window, max_seq) if cfg.attn_window else max_seq
+        c = {"k": make((B, W, G, hd), bf16), "v": make((B, W, G, hd), bf16)}
+        if cfg.family == "encdec":
+            c["ck"] = make((B, cfg.enc_seq, G, hd), bf16)
+            c["cv"] = make((B, cfg.enc_seq, G, hd), bf16)
+        return c
+    if kind == "mla":
+        return {
+            "c": make((B, max_seq, cfg.mla_kv_lora), bf16),
+            "r": make((B, max_seq, cfg.mla_rope_dim), bf16),
+        }
+    if kind == "ssm":
+        d_in = cfg.ssm_expand * cfg.d_model
+        nh = d_in // cfg.ssm_head_dim
+        conv_dim = d_in + 2 * cfg.ssm_state
+        return {
+            "conv": make((B, cfg.ssm_conv - 1, conv_dim), bf16),
+            "state": make((B, nh, cfg.ssm_head_dim, cfg.ssm_state), f32),
+        }
+    if kind == "rec":
+        R = cfg.rnn_width or cfg.d_model
+        return {
+            "conv": make((B, cfg.ssm_conv - 1, R), bf16),
+            "h": make((B, R), f32),
+        }
+    raise ValueError(kind)
+
+
+def _build(cfg, batch, max_seq, make):
+    segs = []
+    for pattern, n_units in segments_of(cfg):
+        slots = {}
+        for si, kind in enumerate(pattern):
+            spec = _slot_cache_spec(cfg, kind, batch, max_seq, make)
+            slots[f"s{si}"] = jax.tree_util.tree_map(
+                lambda s: _stack(s, n_units, make), spec)
+        segs.append(slots)
+    return {"segments": segs}
+
+
+def _stack(leaf, n, make):
+    if isinstance(leaf, jax.ShapeDtypeStruct):
+        return jax.ShapeDtypeStruct((n, *leaf.shape), leaf.dtype)
+    return jnp.broadcast_to(leaf[None], (n, *leaf.shape)).copy()
+
+
+def cache_specs(cfg, batch: int, max_seq: int):
+    """ShapeDtypeStruct cache pytree (dry-run; no allocation)."""
+    return _build(cfg, batch, max_seq, _struct)
+
+
+def init_cache(cfg, batch: int, max_seq: int):
+    """Zero-initialized cache (real serving)."""
+    def make(shape, dtype):
+        return jnp.zeros(shape, dtype)
+    return _build(cfg, batch, max_seq, make)

@@ -1,0 +1,123 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings, init helpers.
+
+Parameters are plain pytrees (nested dicts of jax.Arrays). Every ``init_*``
+function is pure and usable under ``jax.eval_shape`` so the dry-run can build
+parameter ShapeDtypeStructs without allocating.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(key, shape, scale, dtype):
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+def dense_init(key, in_dim, out_dim, dtype, scale=None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(in_dim))
+    return truncated_normal(key, (in_dim, out_dim), scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = x * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated SiLU or plain GELU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, dtype, gated=True):
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(ks[0], d_model, d_ff, dtype),
+        "wo": dense_init(ks[1], d_ff, d_model, dtype),
+    }
+    if gated:
+        p["wg"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp(params, x, gated=True, act_dtype=jnp.bfloat16):
+    h = x @ params["wi"].astype(act_dtype)
+    if gated:
+        g = x @ params["wg"].astype(act_dtype)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ params["wo"].astype(act_dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / lm head
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab, d_model, dtype):
+    return {"tok": truncated_normal(key, (vocab, d_model), 1.0, dtype)}
+
+
+def embed(params, tokens, act_dtype=jnp.bfloat16):
+    return jnp.take(params["tok"], tokens, axis=0).astype(act_dtype)
+
+
+def lm_logits(head, x, act_dtype=jnp.bfloat16):
+    return x @ head.astype(act_dtype)
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array, vocab_real: int) -> jax.Array:
+    """Mean next-token CE; padded vocab columns masked out."""
+    logits = logits.astype(jnp.float32)
+    if logits.shape[-1] > vocab_real:
+        neg = jnp.full((logits.shape[-1] - vocab_real,), -1e30, jnp.float32)
+        logits = logits.at[..., vocab_real:].set(neg)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

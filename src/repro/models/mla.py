@@ -1,0 +1,107 @@
+"""Multi-head Latent Attention (DeepSeek-V2): low-rank compressed KV cache.
+
+Prefill materializes per-head K/V from the compressed latent and runs the
+blockwise flash path. Decode uses the *absorbed* formulation: the k-up
+projection is folded into the query so attention scores are computed directly
+against the (B, S, kv_lora) latent cache + the shared rope key — the cache is
+``kv_lora + rope_dim`` floats per token instead of ``2*H*hd`` (the paper's
+~24x KV memory saving; visible in the roofline memory term).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import NEG_INF, _sdpa_chunked
+from .layers import apply_rope, dense_init
+
+
+def init_mla(key, cfg, dtype):
+    D = cfg.d_model
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    L, R = cfg.mla_kv_lora, cfg.mla_rope_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], D, H * (hd + R), dtype),
+        "w_dkv": dense_init(ks[1], D, L, dtype),
+        "w_krope": dense_init(ks[2], D, R, dtype),
+        "k_up": dense_init(ks[3], L, H * hd, dtype),
+        "v_up": dense_init(ks[4], L, H * hd, dtype),
+        "wo": dense_init(ks[5], H * hd, D, dtype),
+    }
+
+
+def _project_q(params, x, cfg, positions, act_dtype):
+    B, S, _ = x.shape
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    R = cfg.mla_rope_dim
+    q = (x @ params["wq"].astype(act_dtype)).reshape(B, S, H, hd + R)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_forward(params, x, cfg, positions, act_dtype=jnp.bfloat16):
+    """Train/prefill path. Returns (out, (c_kv, k_rope)) for the cache."""
+    B, S, _ = x.shape
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    R = cfg.mla_rope_dim
+
+    q_nope, q_rope = _project_q(params, x, cfg, positions, act_dtype)
+    c_kv = x @ params["w_dkv"].astype(act_dtype)                    # (B,S,L)
+    k_rope = (x @ params["w_krope"].astype(act_dtype))[:, :, None, :]  # (B,S,1,R)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+
+    # materialized path (prefill): per-head K/V from the latent
+    k_nope = (c_kv @ params["k_up"].astype(act_dtype)).reshape(B, S, H, hd)
+    v = (c_kv @ params["v_up"].astype(act_dtype)).reshape(B, S, H, hd)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, R))], axis=-1)
+    out = _sdpa_chunked(
+        q, k, v, positions, positions, causal=True, window=0,
+        q_chunk=cfg.blockwise_q, kv_chunk=cfg.blockwise_kv,
+        unroll=cfg.unroll_segments,
+    )
+    out = out.reshape(B, S, H * hd) @ params["wo"].astype(act_dtype)
+    return out, (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_decode(params, x, cfg, positions, c_cache, r_cache, cache_pos,
+               act_dtype=jnp.bfloat16):
+    """Absorbed single-token decode against the latent cache.
+
+    c_cache: (B, W, L) latent; r_cache: (B, W, R) shared rope key.
+    """
+    B = x.shape[0]
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    L, R = cfg.mla_kv_lora, cfg.mla_rope_dim
+
+    q_nope, q_rope = _project_q(params, x, cfg, positions[:, None], act_dtype)
+    c_new = x[:, 0] @ params["w_dkv"].astype(act_dtype)             # (B,L)
+    r_new = apply_rope(
+        (x @ params["w_krope"].astype(act_dtype))[:, :, None, :],
+        positions[:, None], cfg.rope_theta)[:, 0, 0]                # (B,R)
+
+    W = c_cache.shape[1]
+    oh = jax.nn.one_hot(cache_pos, W, dtype=c_cache.dtype)          # (B,W)
+    c_cache = c_cache * (1 - oh[..., None]) + oh[..., None] * c_new[:, None]
+    r_cache = r_cache * (1 - oh[..., None]) + oh[..., None] * r_new[:, None]
+
+    # absorb k_up into q: q_lat (B,H,L)
+    k_up = params["k_up"].astype(act_dtype).reshape(L, H, hd)
+    q_lat = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0], k_up)
+    scale = 1.0 / jnp.sqrt(hd + R)
+    s = jnp.einsum("bhl,bwl->bhw", q_lat.astype(jnp.float32),
+                   c_cache.astype(jnp.float32))
+    s += jnp.einsum("bhr,bwr->bhw", q_rope[:, 0].astype(jnp.float32),
+                    r_cache.astype(jnp.float32))
+    s *= scale
+    valid = jnp.arange(W)[None, :] <= positions[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhw,bwl->bhl", p, c_cache.astype(jnp.float32))  # (B,H,L)
+    v_up = params["v_up"].astype(act_dtype).reshape(L, H, hd)
+    out = jnp.einsum("bhl,lhd->bhd", ctx.astype(act_dtype), v_up)
+    out = out.reshape(B, 1, H * hd) @ params["wo"].astype(act_dtype)
+    return out, c_cache, r_cache

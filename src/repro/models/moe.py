@@ -1,0 +1,130 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-based dispatch/combine
+einsums (GShard/Switch style), shared experts (DeepSeek) and a parallel dense
+residual FFN (Arctic).
+
+Expert-parallel layout: the expert dimension E shards over the "model" mesh
+axis (EP); dispatch/combine tensors carry E so all heavy per-expert compute
+and the dispatch one-hots stay local to the expert shard — the all-to-all is
+expressed implicitly by XLA through the (tokens -> experts -> tokens)
+einsum resharding.
+
+Memory discipline: tokens are routed in groups of ``moe_group_size`` along
+the sequence so the [T, E, C] combine tensor stays bounded; capacity
+C = ceil(group * top_k / E * capacity_factor), rounded up to a multiple of 4.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+from .sharding import logical_constraint as _lc
+
+
+def init_moe(key, cfg, dtype):
+    D = cfg.d_model
+    E, Fe = cfg.moe_num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], D, E, dtype, scale=0.02),
+        "wi": jax.vmap(lambda k: dense_init(k, D, Fe, dtype))(jax.random.split(ks[1], E)),
+        "wg": jax.vmap(lambda k: dense_init(k, D, Fe, dtype))(jax.random.split(ks[2], E)),
+        "wo": jax.vmap(lambda k: dense_init(k, Fe, D, dtype))(jax.random.split(ks[3], E)),
+    }
+    if cfg.moe_num_shared:
+        Fs = cfg.moe_num_shared * Fe
+        p["shared"] = {
+            "wi": dense_init(ks[4], D, Fs, dtype),
+            "wg": dense_init(jax.random.fold_in(ks[4], 1), D, Fs, dtype),
+            "wo": dense_init(jax.random.fold_in(ks[4], 2), Fs, D, dtype),
+        }
+    if cfg.moe_dense_ff:
+        Fd = cfg.moe_dense_ff
+        p["dense"] = {
+            "wi": dense_init(ks[5], D, Fd, dtype),
+            "wg": dense_init(jax.random.fold_in(ks[5], 1), D, Fd, dtype),
+            "wo": dense_init(jax.random.fold_in(ks[5], 2), Fd, D, dtype),
+        }
+    return p
+
+
+def _capacity(group: int, top_k: int, n_experts: int, factor: float) -> int:
+    c = int(group * top_k / n_experts * factor) + 1
+    return max(top_k, (c + 3) // 4 * 4)
+
+
+def moe_forward(params, x, cfg, act_dtype=jnp.bfloat16):
+    """x: (B, S, D) -> (out, aux_loss)."""
+    B, S, D = x.shape
+    E, k = cfg.moe_num_experts, cfg.moe_top_k
+    g_sz = min(cfg.moe_group_size, S)
+    n_g = S // g_sz if S % g_sz == 0 else 1
+    if S % g_sz != 0:
+        g_sz = S
+    C = _capacity(g_sz, k, E, cfg.moe_capacity_factor)
+
+    xg = x.reshape(B, n_g, g_sz, D)
+    logits = (xg @ params["router"].astype(act_dtype)).astype(jnp.float32)  # (B,n,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                                  # (B,n,T,k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # choice-major positions in each expert queue
+    oh = jax.nn.one_hot(top_i, E, dtype=jnp.float32)                        # (B,n,T,k,E)
+    ohf = oh.transpose(0, 1, 3, 2, 4).reshape(B, n_g, k * g_sz, E)          # choice-major
+    pos = jnp.cumsum(ohf, axis=2) - 1.0                                     # (B,n,kT,E)
+    pos = jnp.sum(pos * ohf, axis=-1).reshape(B, n_g, k, g_sz)              # (B,n,k,T)
+    pos = pos.transpose(0, 1, 3, 2)                                         # (B,n,T,k)
+    fits = pos < C
+
+    # combine tensor (B,n,T,E,C) = sum over choices of gate * onehot(e) * onehot(c).
+    # Built directly in bf16 (entries are disjoint gate values <= 1 — no
+    # accumulation cancellation); this tensor dominates MoE activation bytes
+    # (§Perf iteration 3). ``moe_combine_f32`` restores the fp32 baseline.
+    cdt = jnp.float32 if cfg.moe_combine_f32 else act_dtype
+    combine = jnp.zeros((B, n_g, g_sz, E, C), cdt)
+    for j in range(k):
+        sel = (
+            jax.nn.one_hot(top_i[..., j], E, dtype=cdt)[..., :, None]
+            * jax.nn.one_hot(pos[..., j].astype(jnp.int32), C, dtype=cdt)[..., None, :]
+        )
+        combine = combine + ((top_p[..., j] * fits[..., j])
+                             .astype(cdt))[..., None, None] * sel
+    combine = _lc(combine, "batch", None, None, "expert", None)
+    dispatch = _lc((combine > 0).astype(act_dtype),
+                   "batch", None, None, "expert", None)
+
+    # tokens -> expert buffers (the implicit all-to-all of EP)
+    xe = jnp.einsum("bntec,bntd->bnecd", dispatch, xg.astype(act_dtype))
+    xe = _lc(xe, "batch", None, "expert", None, None)
+    del sel  # keep the per-choice one-hots out of the live set
+    wi = params["wi"].astype(act_dtype)
+    wg = params["wg"].astype(act_dtype)
+    wo = params["wo"].astype(act_dtype)
+    h = jnp.einsum("bnecd,edf->bnecf", xe, wi)
+    g = jnp.einsum("bnecd,edf->bnecf", xe, wg)
+    he = jax.nn.silu(g) * h
+    ye = jnp.einsum("bnecf,efd->bnecd", he, wo)
+    ye = _lc(ye, "batch", None, "expert", None, None)
+    # expert buffers -> tokens
+    out = jnp.einsum("bntec,bnecd->bntd", combine.astype(act_dtype), ye)
+    out = out.reshape(B, S, D)
+
+    # load-balancing auxiliary loss (Switch-style)
+    frac_tokens = jnp.mean(oh.sum(3) / k, axis=(0, 1, 2))
+    frac_probs = jnp.mean(probs, axis=(0, 1, 2))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+
+    # shared experts / dense residual run on all tokens
+    if "shared" in params:
+        sp = params["shared"]
+        h = x @ sp["wi"].astype(act_dtype)
+        g = x @ sp["wg"].astype(act_dtype)
+        out = out + (jax.nn.silu(g) * h) @ sp["wo"].astype(act_dtype)
+    if "dense" in params:
+        dp = params["dense"]
+        h = x @ dp["wi"].astype(act_dtype)
+        g = x @ dp["wg"].astype(act_dtype)
+        out = out + (jax.nn.silu(g) * h) @ dp["wo"].astype(act_dtype)
+    return out, aux

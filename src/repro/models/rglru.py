@@ -1,0 +1,96 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Recurrence: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t), with
+a_t = exp(c * softplus(Lambda) * (-sigmoid(W_r x_t))) — the real-gated linear
+recurrent unit. Train/prefill uses ``jax.lax.associative_scan`` (log-depth,
+TPU-friendly; the GPU paper uses a custom linear-scan kernel — the
+associative reformulation is the TPU-native equivalent). Decode is the O(1)
+per-token update on a (B, d_rnn) state.
+
+The full Griffin block: x -> [gelu gate branch | conv1d -> RG-LRU branch]
+-> elementwise merge -> out projection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+from .sharding import logical_constraint as _lc
+
+_C = 8.0  # Griffin's recurrence sharpness constant
+
+
+def init_rglru(key, cfg, dtype):
+    D = cfg.d_model
+    R = cfg.rnn_width or D
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate": dense_init(ks[0], D, R, dtype),
+        "w_rec_in": dense_init(ks[1], D, R, dtype),
+        "conv_w": 0.1 * jax.random.normal(ks[2], (cfg.ssm_conv, R), jnp.float32).astype(dtype),
+        "conv_b": jnp.zeros((R,), dtype),
+        "w_r": dense_init(ks[3], R, R, dtype, scale=0.02),
+        "w_i": dense_init(ks[4], R, R, dtype, scale=0.02),
+        "lam": jnp.full((R,), 2.0, jnp.float32),  # softplus(2) ~ 2.1 -> slow decay
+        "out_proj": dense_init(ks[5], R, D, dtype),
+    }
+
+
+def _conv1d(x, w, b, state=None):
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    return out + b.astype(x.dtype), xp[:, -(K - 1):]
+
+
+def _gates(params, u):
+    """log a_t (<=0) and scaled input for the recurrence."""
+    r = jax.nn.sigmoid((u @ params["w_r"].astype(u.dtype)).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ params["w_i"].astype(u.dtype)).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r        # (.., R)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    x_in = beta * i * u.astype(jnp.float32)
+    return log_a, x_in
+
+
+def rglru_forward(params, x, cfg, conv_state=None, h_state=None,
+                  act_dtype=jnp.bfloat16):
+    """Full-sequence Griffin recurrent block. Returns (out, (conv_state, h))."""
+    B, S, D = x.shape
+    gate = _lc(jax.nn.gelu(x @ params["w_gate"].astype(act_dtype)),
+               "batch", None, "ffn")
+    u = _lc(x @ params["w_rec_in"].astype(act_dtype), "batch", None, "ffn")
+    u, new_conv = _conv1d(u, params["conv_w"], params["conv_b"], conv_state)
+
+    log_a, x_in = _gates(params, u)
+    a = jnp.exp(log_a)
+    if h_state is not None:
+        # fold the carried state into step 0's input
+        x_in = x_in.at[:, 0].add(a[:, 0] * h_state.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, x_in), axis=1)
+    new_h = h[:, -1]
+    y = (gate * h.astype(act_dtype)) @ params["out_proj"].astype(act_dtype)
+    return y, (new_conv, new_h)
+
+
+def rglru_decode(params, x, cfg, conv_state, h_state, act_dtype=jnp.bfloat16):
+    """O(1) single-token step. x: (B,1,D)."""
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(act_dtype))
+    u = x @ params["w_rec_in"].astype(act_dtype)
+    u, new_conv = _conv1d(u, params["conv_w"], params["conv_b"], conv_state)
+    log_a, x_in = _gates(params, u[:, 0])
+    h = jnp.exp(log_a) * h_state.astype(jnp.float32) + x_in
+    y = (gate[:, 0] * h.astype(act_dtype)) @ params["out_proj"].astype(act_dtype)
+    return y[:, None], (new_conv, h)

@@ -1,0 +1,172 @@
+"""Mamba-2 (SSD — state-space duality) block, TPU-adapted.
+
+Chunked SSD: the sequence is split into chunks of ``ssm_chunk``; intra-chunk
+interactions are a masked (decay-weighted) quadratic form computed on the MXU,
+inter-chunk interactions flow through a tiny (nh, P, N) state carried by a
+lax.scan over chunks — the standard linear-in-S / matmul-rich formulation
+from the SSD paper, which is exactly the right shape for a systolic array
+(contrast the original CUDA selective-scan kernel: warp-level scans do not
+map to TPU; the chunked dual does — see DESIGN.md hardware-adaptation notes).
+
+Single-token decode is the O(1) recurrence on the (B, nh, P, N) state, which
+is why this family is eligible for the 500k-token long-context cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm
+from .sharding import logical_constraint as _lc
+
+
+def init_ssm(key, cfg, dtype):
+    D = cfg.d_model
+    d_in = cfg.ssm_expand * D
+    N = cfg.ssm_state
+    nh = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * N
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * d_in + 2 * N + nh, dtype),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32) + jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[2], d_in, D, dtype),
+    }
+
+
+def _split_proj(params, x, cfg, act_dtype):
+    D = cfg.d_model
+    d_in = cfg.ssm_expand * D
+    N = cfg.ssm_state
+    nh = d_in // cfg.ssm_head_dim
+    zxbcdt = x @ params["in_proj"].astype(act_dtype)
+    z = _lc(zxbcdt[..., :d_in], "batch", None, "ffn")
+    xbc = zxbcdt[..., d_in:d_in + d_in + 2 * N]
+    dt = zxbcdt[..., -nh:]
+    return z, xbc, dt, d_in, N, nh
+
+
+def _causal_conv(xbc, w, b, conv_state=None):
+    """Depthwise causal conv, width K. xbc: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i].astype(xbc.dtype) for i in range(K))
+    new_state = xp[:, -(K - 1):]
+    return jax.nn.silu(out + b.astype(xbc.dtype)), new_state
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk, init_state=None, unroll=False):
+    """Chunked SSD core.
+
+    xh: (B,S,nh,P) inputs; dt: (B,S,nh) softplus'd step; A: (nh,) < 0;
+    Bm/Cm: (B,S,N) shared across heads (n_groups=1).
+    Returns (y: (B,S,nh,P), final_state: (B,nh,P,N)).
+    """
+    Bsz, S, nh, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = S // Q
+    assert S % Q == 0, (S, Q)
+
+    la = (dt * A[None, None, :]).reshape(Bsz, nc, Q, nh)      # log a_t (<0)
+    xc = xh.reshape(Bsz, nc, Q, nh, P)
+    dtc = dt.reshape(Bsz, nc, Q, nh)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    cum = jnp.cumsum(la, axis=2)                               # L_t within chunk
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,nc,Q_t,Q_s,nh)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # clamp BEFORE exp: for s > t the exponent is positive and can overflow
+    # fp32, which would poison gradients through the where (NaN trap).
+    seg = jnp.where(causal, seg, -60.0)
+    decay = jnp.exp(seg) * causal
+
+    # intra-chunk: y[t] = sum_s C_t.B_s decay(t,s) dt_s x_s
+    cb = jnp.einsum("bctn,bcsn->bcts", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    m = cb[..., None] * decay * dtc[:, :, None, :, :]          # (B,nc,t,s,nh)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", m, xc.astype(jnp.float32))
+
+    # per-chunk aggregated state contribution: sum_s exp(L_Q - L_s) dt_s B_s x_s
+    tail = jnp.exp(cum[:, :, -1:, :] - cum) * dtc              # (B,nc,Q,nh)
+    sc = jnp.einsum("bcsh,bcsn,bcshp->bchpn", tail, Bc.astype(jnp.float32),
+                    xc.astype(jnp.float32))
+
+    # inter-chunk scan of the (nh,P,N) state
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # (B,nc,nh)
+    s0 = jnp.zeros((Bsz, nh, P, N), jnp.float32) if init_state is None \
+        else init_state.astype(jnp.float32)
+
+    def step(state, inp):
+        dk, sck = inp                                          # (B,nh), (B,nh,P,N)
+        prev = state
+        new = state * dk[:, :, None, None] + sck
+        return new, prev
+
+    (final_state, prevs) = jax.lax.scan(
+        step, s0, (chunk_decay.transpose(1, 0, 2), sc.transpose(1, 0, 2, 3, 4)),
+        unroll=unroll)
+    prev_states = prevs.transpose(1, 0, 2, 3, 4)               # (B,nc,nh,P,N)
+
+    # inter-chunk output: C_t exp(L_t) S_prev
+    inter_w = jnp.exp(cum)                                     # (B,nc,Q,nh)
+    y_inter = jnp.einsum("bctn,bchpn,bcth->bcthp", Cc.astype(jnp.float32),
+                         prev_states, inter_w)
+    y = (y_intra + y_inter).reshape(Bsz, S, nh, P)
+    return y, final_state
+
+
+def ssm_forward(params, x, cfg, conv_state=None, ssd_state=None, act_dtype=jnp.bfloat16):
+    """Full-sequence Mamba-2 block. Returns (out, (conv_state, ssd_state))."""
+    B, S, D = x.shape
+    z, xbc, dt, d_in, N, nh = _split_proj(params, x, cfg, act_dtype)
+    P = cfg.ssm_head_dim
+
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    xh = xbc[..., :d_in].reshape(B, S, nh, P)
+    Bm = xbc[..., d_in:d_in + N]
+    Cm = xbc[..., d_in + N:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, new_state = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk, ssd_state,
+                               unroll=cfg.unroll_segments)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(act_dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm({"scale": params["norm_scale"]}, y, cfg.norm_eps)
+    return y @ params["out_proj"].astype(act_dtype), (new_conv, new_state)
+
+
+def ssm_decode(params, x, cfg, conv_state, ssd_state, act_dtype=jnp.bfloat16):
+    """O(1) single-token step. x: (B,1,D)."""
+    B = x.shape[0]
+    z, xbc, dt, d_in, N, nh = _split_proj(params, x, cfg, act_dtype)
+    P = cfg.ssm_head_dim
+
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    xh = xbc[:, 0, :d_in].reshape(B, nh, P)
+    Bm = xbc[:, 0, d_in:d_in + N]
+    Cm = xbc[:, 0, d_in + N:]
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,nh)
+    a = jnp.exp(dt * (-jnp.exp(params["A_log"]))[None, :])                  # (B,nh)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32),
+                     xh.astype(jnp.float32))
+    new_state = ssd_state.astype(jnp.float32) * a[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), new_state)
+    y = y + params["D"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, 1, d_in).astype(act_dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm({"scale": params["norm_scale"]}, y, cfg.norm_eps)
+    return y @ params["out_proj"].astype(act_dtype), (new_conv, new_state)

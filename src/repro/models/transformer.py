@@ -1,0 +1,434 @@
+"""Layer-stack assembly: init, train forward, prefill, decode.
+
+The stack is decomposed into *segments* of repeating layer-pattern *units*
+(see cache.segments_of): uniform archs are one segment of a 1-layer pattern;
+RecurrentGemma's (rec, rec, attn) pattern scans over 3-layer units with the
+2-layer remainder as a second (length-1) segment. Each segment is a
+``lax.scan`` over stacked params — compile time stays O(pattern), not O(L) —
+with optional per-unit ``jax.checkpoint`` (remat).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_lib
+from . import mla as mla_lib
+from . import moe as moe_lib
+from . import rglru as rglru_lib
+from . import ssm as ssm_lib
+from .cache import segments_of
+from .sharding import logical_constraint as _lc
+from .layers import (
+    cross_entropy,
+    dense_init,
+    embed,
+    init_embed,
+    init_mlp,
+    init_rmsnorm,
+    lm_logits,
+    mlp,
+    rmsnorm,
+)
+
+
+def _act_dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# per-slot init
+# ---------------------------------------------------------------------------
+
+def _init_slot(key, cfg, kind, dtype):
+    ks = jax.random.split(key, 8)
+    p = {"ln1": init_rmsnorm(cfg.d_model, dtype)}
+    if kind == "attn":
+        p["mix"] = attn_lib.init_attention(ks[0], cfg, dtype)
+        if cfg.family == "encdec":
+            p["cross"] = attn_lib.init_attention(ks[1], cfg, dtype)
+            p["ln_x"] = init_rmsnorm(cfg.d_model, dtype)
+    elif kind == "mla":
+        p["mix"] = mla_lib.init_mla(ks[0], cfg, dtype)
+    elif kind == "ssm":
+        p["mix"] = ssm_lib.init_ssm(ks[0], cfg, dtype)
+    elif kind == "rec":
+        p["mix"] = rglru_lib.init_rglru(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+
+    if kind != "ssm":  # mamba2 blocks have no separate FFN
+        p["ln2"] = init_rmsnorm(cfg.d_model, dtype)
+        if cfg.moe_num_experts:
+            p["moe"] = moe_lib.init_moe(ks[2], cfg, dtype)
+        elif cfg.d_ff:
+            p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype, cfg.gated_mlp)
+    return p
+
+
+def init_params(cfg, key):
+    dtype = jnp.float32 if cfg.param_dtype == "float32" else jnp.bfloat16
+    keys = jax.random.split(key, 8)
+    params = {"embed": init_embed(keys[0], cfg.padded_vocab, cfg.d_model, dtype)}
+
+    segs = []
+    for gi, (pattern, n_units) in enumerate(segments_of(cfg)):
+        slots = {}
+        for si, kind in enumerate(pattern):
+            def one(k, kind=kind):
+                return _init_slot(k, cfg, kind, dtype)
+            ks = jax.random.split(jax.random.fold_in(keys[1], gi * 16 + si), n_units)
+            slots[f"s{si}"] = jax.vmap(one)(ks)
+        segs.append(slots)
+    params["segments"] = segs
+
+    params["final_norm"] = init_rmsnorm(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[2], cfg.d_model, cfg.padded_vocab, dtype)
+
+    if cfg.family == "encdec":
+        enc_slots = jax.vmap(
+            lambda k: {
+                "ln1": init_rmsnorm(cfg.d_model, dtype),
+                "mix": attn_lib.init_attention(jax.random.fold_in(k, 0), cfg, dtype),
+                "ln2": init_rmsnorm(cfg.d_model, dtype),
+                "mlp": init_mlp(jax.random.fold_in(k, 1), cfg.d_model, cfg.d_ff,
+                                dtype, cfg.gated_mlp),
+            }
+        )(jax.random.split(keys[3], cfg.enc_layers))
+        params["encoder"] = {"layers": enc_slots,
+                             "final_norm": init_rmsnorm(cfg.d_model, dtype)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _block_full(p, cfg, kind, x, positions, enc_out, slot_cache):
+    """Full-sequence block (train/prefill). Returns (x, new_cache, aux)."""
+    act = _act_dtype(cfg)
+    aux = jnp.asarray(0.0, jnp.float32)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    new_cache = {}
+
+    if kind == "attn":
+        out, (k, v) = attn_lib.attention_forward(p["mix"], h, cfg, positions,
+                                                 act_dtype=act)
+        if slot_cache is not None:
+            W = slot_cache["k"].shape[1]
+            S = k.shape[1]
+            if S >= W:
+                # ring semantics: decode writes slot = pos % W, so the last W
+                # keys must land at slots (S-W+i) % W — i.e. roll by S % W.
+                kc = jnp.roll(k[:, -W:], S % W, axis=1)
+                vc = jnp.roll(v[:, -W:], S % W, axis=1)
+            else:       # cache larger than prompt: fill the head, zero-pad
+                pad = [(0, 0), (0, W - S), (0, 0), (0, 0)]
+                kc, vc = jnp.pad(k, pad), jnp.pad(v, pad)
+            new_cache["k"] = kc.astype(slot_cache["k"].dtype)
+            new_cache["v"] = vc.astype(slot_cache["v"].dtype)
+    elif kind == "mla":
+        out, (c_kv, k_rope) = mla_lib.mla_forward(p["mix"], h, cfg, positions,
+                                                  act_dtype=act)
+        if slot_cache is not None:
+            W = slot_cache["c"].shape[1]
+            S = c_kv.shape[1]
+            if S < W:
+                c_kv = jnp.pad(c_kv, [(0, 0), (0, W - S), (0, 0)])
+                k_rope = jnp.pad(k_rope, [(0, 0), (0, W - S), (0, 0)])
+            new_cache["c"] = c_kv[:, :W].astype(slot_cache["c"].dtype)
+            new_cache["r"] = k_rope[:, :W].astype(slot_cache["r"].dtype)
+    elif kind == "ssm":
+        out, (conv, state) = ssm_lib.ssm_forward(p["mix"], h, cfg, act_dtype=act)
+        if slot_cache is not None:
+            new_cache["conv"] = conv.astype(slot_cache["conv"].dtype)
+            new_cache["state"] = state
+    elif kind == "rec":
+        out, (conv, hstate) = rglru_lib.rglru_forward(p["mix"], h, cfg,
+                                                      act_dtype=act)
+        if slot_cache is not None:
+            new_cache["conv"] = conv.astype(slot_cache["conv"].dtype)
+            new_cache["h"] = hstate
+    else:
+        raise ValueError(kind)
+    x = x + out
+
+    if "cross" in p and enc_out is not None:
+        hx = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        cx, (ck, cv) = _cross_attention(p["cross"], hx, enc_out, cfg, act)
+        x = x + cx
+        if slot_cache is not None:
+            new_cache["ck"] = ck.astype(slot_cache["ck"].dtype)
+            new_cache["cv"] = cv.astype(slot_cache["cv"].dtype)
+
+    if "moe" in p:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        out2, aux = moe_lib.moe_forward(p["moe"], h2, cfg, act_dtype=act)
+        x = x + out2
+    elif "mlp" in p:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + mlp(p["mlp"], h2, cfg.gated_mlp, act_dtype=act)
+
+    if slot_cache is None:
+        new_cache = None
+    return x, new_cache, aux
+
+
+def _block_decode(p, cfg, kind, x, positions, slot_cache):
+    """Single-token block. Returns (x, new_cache)."""
+    act = _act_dtype(cfg)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    c = dict(slot_cache)
+
+    if kind == "attn":
+        W = slot_cache["k"].shape[1]
+        cache_pos = positions % W if cfg.attn_window else positions
+        out, k_c, v_c = attn_lib.attention_decode(
+            p["mix"], h, cfg, positions, slot_cache["k"], slot_cache["v"],
+            cache_pos, act_dtype=act)
+        c["k"], c["v"] = k_c, v_c
+    elif kind == "mla":
+        out, c_c, r_c = mla_lib.mla_decode(
+            p["mix"], h, cfg, positions, slot_cache["c"], slot_cache["r"],
+            positions, act_dtype=act)
+        c["c"], c["r"] = c_c, r_c
+    elif kind == "ssm":
+        out, (conv, state) = ssm_lib.ssm_decode(
+            p["mix"], h, cfg, slot_cache["conv"], slot_cache["state"], act_dtype=act)
+        c["conv"], c["state"] = conv.astype(slot_cache["conv"].dtype), state
+    elif kind == "rec":
+        out, (conv, hstate) = rglru_lib.rglru_decode(
+            p["mix"], h, cfg, slot_cache["conv"], slot_cache["h"], act_dtype=act)
+        c["conv"], c["h"] = conv.astype(slot_cache["conv"].dtype), hstate
+    else:
+        raise ValueError(kind)
+    x = x + out
+
+    if "cross" in p:
+        hx = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        x = x + _cross_decode(p["cross"], hx, slot_cache["ck"], slot_cache["cv"],
+                              cfg, act)
+
+    if "moe" in p:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        out2, _ = moe_lib.moe_forward(p["moe"], h2, cfg, act_dtype=act)
+        x = x + out2
+    elif "mlp" in p:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + mlp(p["mlp"], h2, cfg.gated_mlp, act_dtype=act)
+    return x, c
+
+
+def _cross_attention(p, x, enc_out, cfg, act):
+    """Non-causal cross attention; k/v from encoder output (no rope)."""
+    B, S, _ = x.shape
+    H, G, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    Se = enc_out.shape[1]
+    q = (x @ p["wq"].astype(act)).reshape(B, S, H, hd)
+    k = (enc_out @ p["wk"].astype(act)).reshape(B, Se, G, hd)
+    v = (enc_out @ p["wv"].astype(act)).reshape(B, Se, G, hd)
+    qp = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    kp = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+    out = attn_lib._sdpa_chunked(q, k, v, qp, kp, causal=False, window=0,
+                                 q_chunk=cfg.blockwise_q, kv_chunk=cfg.blockwise_kv,
+                                 unroll=cfg.unroll_segments)
+    return out.reshape(B, S, H * hd) @ p["wo"].astype(act), (k, v)
+
+
+def _cross_decode(p, x, ck, cv, cfg, act):
+    B = x.shape[0]
+    H, G, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    rep = H // G
+    kf, vf = ck.astype(jnp.float32), cv.astype(jnp.float32)
+    if rep > 1:
+        kf = jnp.repeat(kf, rep, axis=2)
+        vf = jnp.repeat(vf, rep, axis=2)
+    q = (x @ p["wq"].astype(act)).reshape(B, H, hd)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32) / jnp.sqrt(hd), kf)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", pr, vf)
+    return out.reshape(B, 1, H * hd).astype(act) @ p["wo"].astype(act)
+
+
+# ---------------------------------------------------------------------------
+# stack runner
+# ---------------------------------------------------------------------------
+
+def _run_segments(params, cfg, x, positions, cache, enc_out, mode):
+    """mode: 'train' | 'prefill' | 'decode'. Returns (x, new_cache, aux)."""
+    aux_total = jnp.asarray(0.0, jnp.float32)
+    new_segments = []
+
+    for gi, (pattern, n_units) in enumerate(segments_of(cfg)):
+        seg_params = params["segments"][gi]
+        seg_cache = cache["segments"][gi] if cache is not None else None
+
+        def unit(carry, xs):
+            x, aux = carry
+            up, uc = xs
+            if mode != "decode":
+                # decode probes showed the forced residual-stream placement
+                # only costs resharding at batch=decode scale (§Perf arctic)
+                x = _lc(x, "batch", None, None)
+            new_uc = {}
+            for si, kind in enumerate(pattern):
+                sp = up[f"s{si}"]
+                sc = uc[f"s{si}"] if uc is not None else None
+                if mode == "decode":
+                    x, nc = _block_decode(sp, cfg, kind, x, positions, sc)
+                    a = jnp.asarray(0.0, jnp.float32)
+                else:
+                    x, nc, a = _block_full(sp, cfg, kind, x, positions, enc_out, sc)
+                if nc is not None:
+                    new_uc[f"s{si}"] = nc
+                aux = aux + a
+            return (x, aux), (new_uc if new_uc else None)
+
+        body = unit
+        if mode == "train" and cfg.remat != "none":
+            if cfg.remat == "dots":
+                # §Perf iter 5: save matmul outputs, recompute elementwise-
+                # only ops in the backward pass — trades a little saved-
+                # activation memory for skipping the full-layer recompute.
+                policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                body = jax.checkpoint(unit, prevent_cse=False, policy=policy)
+            else:  # "full": recompute everything per unit
+                body = jax.checkpoint(unit, prevent_cse=False)
+
+        if cfg.unroll_segments:
+            # python loop over units: L x larger HLO, but XLA cost analysis
+            # then counts every layer (scan bodies are costed once).
+            unit_caches = []
+            for u in range(n_units):
+                up = jax.tree_util.tree_map(lambda a: a[u], seg_params)
+                uc = (jax.tree_util.tree_map(lambda a: a[u], seg_cache)
+                      if seg_cache is not None else None)
+                (x, aux_total), nc = body((x, aux_total), (up, uc))
+                unit_caches.append(nc)
+            if seg_cache is None:
+                new_segments.append(None)
+            else:
+                new_segments.append(jax.tree_util.tree_map(
+                    lambda *ls: jnp.stack(ls), *unit_caches))
+        elif seg_cache is None:
+            (x, aux_total), _ = jax.lax.scan(
+                lambda c, p: body(c, (p, None)), (x, aux_total), seg_params)
+            new_segments.append(None)
+        else:
+            xs = (seg_params, seg_cache)
+            (x, aux_total), new_sc = jax.lax.scan(body, (x, aux_total), xs)
+            new_segments.append(new_sc)
+
+    new_cache = {"segments": new_segments} if cache is not None else None
+    return x, new_cache, aux_total
+
+
+def _encode(params, cfg, enc_embeds):
+    """Whisper-style encoder over precomputed frame embeddings (stub frontend)."""
+    act = _act_dtype(cfg)
+    x = enc_embeds.astype(act)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def enc_block(x, p):
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        q, k, v = attn_lib._project_qkv(p["mix"], h, cfg, positions, act)
+        out = attn_lib._sdpa_chunked(q, k, v, positions, positions,
+                                     causal=False, window=0,
+                                     q_chunk=cfg.blockwise_q,
+                                     kv_chunk=cfg.blockwise_kv,
+                                     unroll=cfg.unroll_segments)
+        x = x + out.reshape(B, S, -1) @ p["mix"]["wo"].astype(act)
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        return x + mlp(p["mlp"], h2, cfg.gated_mlp, act_dtype=act), None
+
+    if cfg.unroll_segments:
+        for u in range(cfg.enc_layers):
+            p_u = jax.tree_util.tree_map(lambda a: a[u], params["encoder"]["layers"])
+            x, _ = enc_block(x, p_u)
+    else:
+        x, _ = jax.lax.scan(enc_block, x, params["encoder"]["layers"])
+    return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def _embed_inputs(params, cfg, tokens, batch):
+    act = _act_dtype(cfg)
+    x = embed(params["embed"], tokens, act_dtype=act)
+    if cfg.family == "vlm" and "prefix_embeds" in batch:
+        P = cfg.num_prefix_tokens
+        x = jnp.concatenate([batch["prefix_embeds"].astype(act), x[:, P:]], axis=1)
+    return x
+
+
+def _logits(params, cfg, x):
+    act = _act_dtype(cfg)
+    head = params["head"] if "head" in params else params["embed"]["tok"].T
+    out = lm_logits(head, x, act_dtype=act)
+    return _lc(out, *(["batch"] + [None] * (out.ndim - 2) + ["vocab"]))
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, cfg, batch, aux_coef: float = 0.01):
+    """Next-token CE (+ MoE load-balance aux)."""
+    tokens, targets = batch["tokens"], batch["targets"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = _embed_inputs(params, cfg, tokens, batch)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(params, cfg, batch["enc_embeds"])
+    x, _, aux = _run_segments(params, cfg, x, positions, None, enc_out, "train")
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+    if cfg.loss_chunk and S % cfg.loss_chunk == 0 and S > cfg.loss_chunk:
+        # chunked CE: the [B, S, V] logits tensor never materializes — each
+        # sequence chunk's logits live only inside its (remat'd) scan step.
+        # Memory-roofline win: V-sized activations drop from O(S) to O(chunk).
+        nc = S // cfg.loss_chunk
+        xc = x.reshape(B, nc, cfg.loss_chunk, -1).swapaxes(0, 1)
+        tc = targets.reshape(B, nc, cfg.loss_chunk).swapaxes(0, 1)
+
+        @jax.checkpoint
+        def chunk_ce(carry, xs):
+            xb, tb = xs
+            logits = _logits(params, cfg, xb)
+            return carry + cross_entropy(logits, tb, cfg.vocab_size), None
+
+        total, _ = jax.lax.scan(chunk_ce, jnp.asarray(0.0, jnp.float32), (xc, tc),
+                                unroll=cfg.unroll_segments)
+        ce = total / nc
+    else:
+        logits = _logits(params, cfg, x)
+        ce = cross_entropy(logits, targets, cfg.vocab_size)
+    return ce + aux_coef * aux, {"ce": ce, "aux": aux}
+
+
+def prefill(params, cfg, batch, max_seq: Optional[int] = None):
+    """Process a full prompt; returns (last-token logits, cache)."""
+    from .cache import init_cache
+
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cache = init_cache(cfg, batch=B, max_seq=max_seq or S)
+    x = _embed_inputs(params, cfg, tokens, batch)
+    enc_out = _encode(params, cfg, batch["enc_embeds"]) if cfg.family == "encdec" else None
+    x, cache, _ = _run_segments(params, cfg, x, positions, cache, enc_out, "prefill")
+    x = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return _logits(params, cfg, x)[:, 0], cache
+
+
+def decode_step(params, cfg, tokens, positions, cache):
+    """One AR step for a batch. tokens: (B,1); positions: (B,)."""
+    x = embed(params["embed"], tokens, act_dtype=_act_dtype(cfg))
+    x, cache, _ = _run_segments(params, cfg, x, positions, cache, None, "decode")
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x)[:, 0], cache

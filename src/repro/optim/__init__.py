@@ -1,0 +1,3 @@
+from .adamw import AdamWState, adamw_init, adamw_update, clip_by_global_norm  # noqa: F401
+from .schedule import cosine_schedule, linear_warmup  # noqa: F401
+from .compression import int8_compress, int8_decompress, compressed_psum  # noqa: F401

@@ -1,0 +1,73 @@
+"""AdamW with global-norm clipping, decoupled weight decay, and a dtype
+policy for the moments (fp32 default; bf16 for memory-bound giants like
+arctic-480b — see DESIGN.md memory discipline notes).
+
+Pure pytree functions (no optax dependency): states shard exactly like their
+parameters under the pjit partitioner, which is what makes the FSDP layout
+(optimizer state sharded over the data axis) fall out for free.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        update = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        update = update + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * update
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], out,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], out,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu), {"grad_norm": gnorm}

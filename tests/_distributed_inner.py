@@ -1,0 +1,47 @@
+"""Inner script for distributed tests — run in a subprocess with 8 host devices."""
+
+import os
+import re
+
+# strip any inherited device-count override (last flag wins in XLA) so a
+# polluted parent env can never change our device count
+_flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                os.environ.get("XLA_FLAGS", ""))
+os.environ["XLA_FLAGS"] = _flags + " --xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import fista_solve, lambda_max, screen, theta_at_lambda_max  # noqa: E402
+from repro.core.distributed import fista_sharded, screen_sharded, svm_mesh  # noqa: E402
+from repro.data import make_sparse_classification  # noqa: E402
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = svm_mesh(model=4, data=2)
+
+    ds = make_sparse_classification(m=256, n=128, seed=51)
+    X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+    lmax = lambda_max(X, y)
+    theta1 = theta_at_lambda_max(y, lmax)
+    lam2 = 0.4 * lmax
+
+    keep_ref, bounds_ref = screen(X, y, lmax, lam2, theta1)
+    keep_d, bounds_d = screen_sharded(mesh, X, y, lmax, lam2, theta1)
+    np.testing.assert_allclose(
+        np.asarray(bounds_d), np.asarray(bounds_ref), rtol=2e-4, atol=2e-4
+    )
+    mism = int(np.sum(np.asarray(keep_d) != np.asarray(keep_ref)))
+    assert mism <= 2, f"keep-mask mismatch on {mism} features"  # tau-boundary jitter
+
+    ref = fista_solve(X, y, lam2, max_iters=20000, tol=1e-12)
+    dist = fista_sharded(mesh, X, y, lam2, max_iters=20000, tol=1e-12)
+    np.testing.assert_allclose(float(dist.obj), float(ref.obj), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(dist.w), np.asarray(ref.w), atol=5e-3)
+    print("DISTRIBUTED_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+import numpy as np
+import pytest
+
+# NOTE: deliberately NO XLA_FLAGS device-count override here — smoke tests and
+# benches must see the real single CPU device. Only launch/dryrun.py sets the
+# 512-device flag (in its own process, before importing jax).
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,59 @@
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 4)), "b": jnp.zeros((4,))},
+        "opt": {"mu": jnp.ones((8, 4)), "step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    s = _state()
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(5, s, extra={"next_step": 6})
+    assert mgr.latest() == 5
+    restored, manifest = mgr.restore(5, jax.tree_util.tree_map(jnp.zeros_like, s))
+    assert manifest["extra"]["next_step"] == 6
+    for a, b in zip(jax.tree_util.tree_leaves(s), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_k_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for step in (1, 2, 3, 4):
+        mgr.save(step, _state(step))
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_corrupt_latest_falls_back(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(1, _state(1))
+    mgr.save(2, _state(2))
+    (tmp_path / "step_000000000002" / "manifest.json").write_text("{broken")
+    assert mgr.latest() == 1
+
+
+def test_elastic_restore_dtype_cast(tmp_path):
+    """Restart may use a different param dtype policy (elastic/mixed)."""
+    s = _state()
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, s)
+    template = jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.bfloat16) if x.dtype == jnp.float32 else x, s)
+    restored, _ = mgr.restore(1, template)
+    assert restored["params"]["w"].dtype == jnp.bfloat16
+
+
+def test_atomicity_no_tmp_left(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(9, _state())
+    assert not list(tmp_path.glob("*.tmp"))

@@ -1,0 +1,23 @@
+"""Distributed-equivalence tests (run in a subprocess with 8 fake devices so
+the main pytest process keeps its single-device view)."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_sharded_screen_and_solver_match_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "_distributed_inner.py")],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "DISTRIBUTED_OK" in out.stdout

@@ -1,0 +1,79 @@
+"""Unit tests for dry-run machinery that doesn't need 512 devices."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, cells, get_config, input_specs
+from repro.launch.hlo_analysis import _shape_bytes, collective_stats
+
+
+def test_collective_parser_counts_ops():
+    hlo = """
+  %add = f32[4,8]{1,0} add(f32[4,8] %a, f32[4,8] %b)
+  %ar = f32[1024]{0} all-reduce(f32[1024] %x), replica_groups={}
+  %ag.1 = bf16[2,4096]{1,0} all-gather(bf16[2,256] %y), dimensions={1}
+  ROOT %rs = f32[128]{0} reduce-scatter(f32[2048] %z), dimensions={0}
+"""
+    stats = collective_stats(hlo)
+    assert stats["all-reduce"]["count"] == 1
+    assert stats["all-reduce"]["bytes"] == 1024 * 4
+    assert stats["all-gather"]["count"] == 1
+    assert stats["all-gather"]["bytes"] == 2 * 4096 * 2
+    assert stats["reduce-scatter"]["bytes"] == 128 * 4
+    assert stats["all-to-all"]["count"] == 0
+
+
+def test_shape_bytes_tuple():
+    assert _shape_bytes("(f32[8,2], bf16[16])") == 8 * 2 * 4 + 16 * 2
+    assert _shape_bytes("pred[100]") == 100
+    assert _shape_bytes("f32[]") == 4  # scalar
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_are_structs(arch, shape):
+    cfg = get_config(arch)
+    if shape in cfg.shape_skips():
+        pytest.skip("documented skip cell")
+    specs = input_specs(cfg, shape)
+    for leaf in jax.tree_util.tree_leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+    if SHAPES[shape]["kind"] == "decode":
+        assert specs["tokens"].shape[1] == 1
+        assert "cache" in specs
+    else:
+        assert specs["tokens"].shape == (SHAPES[shape]["batch"], SHAPES[shape]["seq"])
+
+
+def test_cells_enumeration():
+    cs = cells(include_skips=True)
+    assert len(cs) == len(ARCHS) * len(SHAPES)
+    skipped = [c for c in cs if c[2]]
+    assert len(skipped) == 8  # 8 full-attention archs skip long_500k
+
+
+def test_vocab_padding_divisible_by_tp():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        assert cfg.padded_vocab % 16 == 0, arch
+        assert cfg.padded_vocab >= cfg.vocab_size
+
+
+def test_param_specs_shard_big_tensors():
+    """On the production mesh, every >=2-D big tensor gets at least one
+    sharded dimension (no accidental full replication of weights)."""
+    from repro.models import transformer as tr
+    from repro.models.sharding import param_specs
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))  # sizes 1: always divides
+    cfg = get_config("granite-8b")
+    sds = jax.eval_shape(lambda k: tr.init_params(cfg, k), jax.random.PRNGKey(0))
+    specs = param_specs(sds, mesh)
+    flat = jax.tree_util.tree_leaves_with_path(specs)
+    sds_flat = jax.tree_util.tree_leaves_with_path(sds)
+    for (path, spec), (_, leaf) in zip(flat, sds_flat):
+        n = int(np.prod(leaf.shape))
+        if n >= 1 << 20:  # >=1M params must shard somewhere
+            assert any(a is not None for a in spec), (path, leaf.shape, spec)

@@ -1,0 +1,83 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    bias_at_lambda_max,
+    duality_gap_estimate,
+    fista_solve,
+    first_features,
+    lambda_max,
+    theta_at_lambda_max,
+    theta_from_primal,
+)
+from repro.data import make_sparse_classification
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_sparse_classification(m=150, n=100, k_active=6, seed=7)
+
+
+def test_lambda_max_zero_solution(ds):
+    X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+    lmax = lambda_max(X, y)
+    res = fista_solve(X, y, 1.02 * lmax, max_iters=3000, tol=1e-12)
+    assert int(jnp.sum(jnp.abs(res.w) > 1e-6)) == 0
+
+
+def test_lambda_max_is_tight(ds):
+    X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+    lmax = lambda_max(X, y)
+    res = fista_solve(X, y, 0.90 * lmax, max_iters=20000, tol=1e-13)
+    assert int(jnp.sum(jnp.abs(res.w) > 1e-7)) >= 1
+
+
+def test_first_feature_matches_solver(ds):
+    X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+    lmax = lambda_max(X, y)
+    j_pred = int(first_features(X, y))
+    res = fista_solve(X, y, 0.95 * lmax, max_iters=20000, tol=1e-13)
+    active = np.nonzero(np.abs(np.asarray(res.w)) > 1e-7)[0]
+    assert j_pred in active.tolist()
+
+
+def test_theta_at_lambda_max_feasible(ds):
+    X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+    lmax = lambda_max(X, y)
+    theta = theta_at_lambda_max(y, lmax)
+    assert abs(float(theta @ y)) < 1e-4
+    corr = jnp.max(jnp.abs(X @ (y * theta)))
+    assert float(corr) <= 1.0 + 1e-5
+    np.testing.assert_allclose(float(corr), 1.0, rtol=1e-5)
+    assert bool(jnp.all(theta >= 0))
+
+
+def test_theta_from_primal_feasible_near_optimum(ds):
+    X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+    lmax = lambda_max(X, y)
+    lam = 0.4 * lmax
+    res = fista_solve(X, y, lam, max_iters=40000, tol=1e-14)
+    theta = theta_from_primal(X, y, res.w, res.b, lam)
+    assert abs(float(theta @ y)) < 1e-3
+    assert float(jnp.max(jnp.abs(X @ (y * theta)))) <= 1.0 + 5e-3
+    assert bool(jnp.all(theta >= 0))
+
+
+def test_duality_gap_small_at_optimum(ds):
+    X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+    lmax = lambda_max(X, y)
+    lam = 0.5 * lmax
+    res = fista_solve(X, y, lam, max_iters=40000, tol=1e-14)
+    gap = duality_gap_estimate(X, y, res.w, res.b, lam)
+    assert float(gap.gap) >= -1e-3  # weak duality (numerical slack)
+    assert float(gap.gap) / max(float(gap.primal), 1e-9) < 0.05
+
+
+def test_bias_at_lambda_max(ds):
+    y = jnp.asarray(ds.y)
+    b = float(bias_at_lambda_max(y))
+    n_pos = float(jnp.sum(y > 0))
+    n_neg = float(jnp.sum(y < 0))
+    np.testing.assert_allclose(b, (n_pos - n_neg) / y.shape[0], rtol=1e-6)

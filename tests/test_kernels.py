@@ -1,0 +1,87 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lambda_max, theta_at_lambda_max
+from repro.data import make_sparse_classification
+from repro.kernels.ops import hinge_grad_op, hinge_margin_op, screen_bounds_op
+from repro.kernels.ref import hinge_grad_ref, hinge_stats_ref, screen_bounds_ref
+
+SHAPES = [(64, 64), (128, 256), (300, 200), (513, 130)]  # incl. non-multiples
+DTYPES = [jnp.float32, jnp.bfloat16]
+BLOCKS = [(64, 128), (128, 128)]
+
+
+def _data(m, n, dtype, seed=0):
+    ds = make_sparse_classification(m=m, n=n, seed=seed)
+    X = jnp.asarray(ds.X).astype(dtype)
+    y = jnp.asarray(ds.y)
+    return X, y
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_screen_kernel_matches_oracle(shape, dtype):
+    m, n = shape
+    X, y = _data(m, n, dtype)
+    lmax = lambda_max(X.astype(jnp.float32), y)
+    theta1 = theta_at_lambda_max(y, lmax)
+    ref = np.asarray(screen_bounds_ref(X, y, lmax, 0.5 * lmax, theta1))
+    out = np.asarray(
+        screen_bounds_op(X, y, lmax, 0.5 * lmax, theta1,
+                         block_m=64, block_n=128, interpret=True)
+    )
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(out, ref, rtol=tol, atol=tol * max(1.0, np.abs(ref).max()))
+
+
+@pytest.mark.parametrize("blocks", BLOCKS)
+def test_screen_kernel_block_shape_invariance(blocks):
+    bm, bn = blocks
+    X, y = _data(256, 256, jnp.float32)
+    lmax = lambda_max(X, y)
+    theta1 = theta_at_lambda_max(y, lmax)
+    ref = np.asarray(screen_bounds_ref(X, y, lmax, 0.3 * lmax, theta1))
+    out = np.asarray(
+        screen_bounds_op(X, y, lmax, 0.3 * lmax, theta1,
+                         block_m=bm, block_n=bn, interpret=True)
+    )
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5 * max(1.0, np.abs(ref).max()))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_hinge_margin_kernel(shape, dtype):
+    m, n = shape
+    X, y = _data(m, n, dtype, seed=3)
+    w = jnp.asarray(np.random.default_rng(1).standard_normal(m), dtype)
+    b = 0.17
+    _, xi_ref, loss_ref = hinge_stats_ref(X, y, w, b)
+    xi, loss = hinge_margin_op(X, w, y, b, block_m=64, block_n=128, interpret=True)
+    tol = 1e-4 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(xi), np.asarray(xi_ref), rtol=tol, atol=tol)
+    np.testing.assert_allclose(float(loss), float(loss_ref), rtol=tol)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_hinge_grad_kernel(shape):
+    m, n = shape
+    X, y = _data(m, n, jnp.float32, seed=4)
+    xi = jnp.asarray(np.random.default_rng(2).random(n), jnp.float32)
+    ref = np.asarray(hinge_grad_ref(X, y, xi))
+    out = np.asarray(hinge_grad_op(X, y, xi, block_m=64, block_n=128, interpret=True))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-4 * max(1.0, np.abs(ref).max()))
+
+
+def test_kernel_padding_is_inert():
+    """Padding rows/cols must not change results for real features."""
+    X, y = _data(100, 90, jnp.float32, seed=6)
+    lmax = lambda_max(X, y)
+    theta1 = theta_at_lambda_max(y, lmax)
+    out1 = np.asarray(screen_bounds_op(X, y, lmax, 0.5 * lmax, theta1,
+                                       block_m=64, block_n=128, interpret=True))
+    out2 = np.asarray(screen_bounds_op(X, y, lmax, 0.5 * lmax, theta1,
+                                       block_m=128, block_n=256, interpret=True))
+    np.testing.assert_allclose(out1, out2, rtol=2e-5, atol=2e-5)

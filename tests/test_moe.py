@@ -1,0 +1,74 @@
+"""MoE layer oracle tests: dispatch/combine einsums == per-token expert loop."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.moe import init_moe, moe_forward
+
+
+def _naive_moe(params, x, cfg):
+    """Per-token loop oracle (no capacity limits)."""
+    B, S, D = x.shape
+    E, k = cfg.moe_num_experts, cfg.moe_top_k
+    logits = (x @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    out = jnp.zeros_like(x, jnp.float32)
+    for e in range(E):
+        h = x @ params["wi"][e]
+        g = x @ params["wg"][e]
+        ye = (jax.nn.silu(g) * h) @ params["wo"][e]          # (B,S,D)
+        w_e = jnp.sum(jnp.where(top_i == e, top_p, 0.0), axis=-1)
+        out = out + w_e[..., None] * ye.astype(jnp.float32)
+    if "shared" in params:
+        sp = params["shared"]
+        out = out + ((jax.nn.silu(x @ sp["wg"]) * (x @ sp["wi"])) @ sp["wo"]).astype(jnp.float32)
+    if "dense" in params:
+        dp = params["dense"]
+        out = out + ((jax.nn.silu(x @ dp["wg"]) * (x @ dp["wi"])) @ dp["wo"]).astype(jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v2-236b", "arctic-480b"])
+def test_moe_matches_naive_loop(arch):
+    cfg = get_smoke_config(arch).replace(dtype="float32",
+                                         moe_capacity_factor=16.0)
+    params = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    out, aux = moe_forward(params, x, cfg, act_dtype=jnp.float32)
+    ref = _naive_moe(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+    assert float(aux) > 0.0
+
+
+def test_moe_capacity_drops_tokens_not_correctness():
+    """With tiny capacity some tokens drop to the residual path (out = 0 for
+    their routed contribution) — outputs stay finite and bounded."""
+    cfg = get_smoke_config("deepseek-v2-236b").replace(
+        dtype="float32", moe_capacity_factor=0.25)
+    params = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    out, _ = moe_forward(params, x, cfg, act_dtype=jnp.float32)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_ssd_streaming_state_handoff():
+    """ssm_forward(full) == ssm_forward(half1) -> state -> ssm_forward(half2)."""
+    from repro.models.ssm import init_ssm, ssm_forward
+
+    cfg = get_smoke_config("mamba2-130m").replace(dtype="float32")
+    params = init_ssm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+
+    full, _ = ssm_forward(params, x, cfg, act_dtype=jnp.float32)
+    h1, (conv, state) = ssm_forward(params, x[:, :32], cfg, act_dtype=jnp.float32)
+    h2, _ = ssm_forward(params, x[:, 32:], cfg, conv_state=conv,
+                        ssd_state=state, act_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 1)),
+                               np.asarray(full), rtol=3e-3, atol=3e-3)

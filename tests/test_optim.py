@@ -1,0 +1,77 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    int8_compress,
+    int8_decompress,
+)
+
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    state = adamw_init(params)
+    target = jnp.asarray([1.0, 1.0, 1.0])
+    for _ in range(300):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state, _ = adamw_update(grads, state, params, lr=0.05,
+                                        weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0), "b": jnp.full((4,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    total = jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree_util.tree_leaves(clipped)))
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(float(gn), np.sqrt(800.0), rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lrs = [float(cosine_schedule(jnp.asarray(s), 1e-3, 10, 100)) for s in range(101)]
+    assert lrs[0] < lrs[10]                      # warmup
+    assert abs(lrs[10] - 1e-3) < 1e-6            # peak
+    assert lrs[100] < lrs[50] < lrs[10]          # decay
+    assert lrs[100] >= 1e-4 - 1e-9               # min ratio floor
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), scale=st.floats(1e-3, 1e3))
+def test_int8_compression_unbiased_and_bounded(seed, scale):
+    key = jax.random.PRNGKey(seed)
+    x = scale * jax.random.normal(key, (256,))
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), 64)
+    dec = jnp.stack([int8_decompress(*int8_compress(x, k)) for k in keys])
+    err = jnp.abs(jnp.mean(dec, axis=0) - x)
+    step = scale * jnp.max(jnp.abs(x)) / 127.0 / scale  # one quant step
+    q_step = float(jnp.max(jnp.abs(x))) / 127.0
+    # stochastic rounding is unbiased: the MC mean converges to x
+    assert float(jnp.max(err)) < 0.6 * q_step
+    # and each sample is within one quantization step
+    assert float(jnp.max(jnp.abs(dec[0] - x))) <= q_step * (1 + 1e-5)
+
+
+def test_error_feedback_converges():
+    """With error feedback, the accumulated compressed sum tracks the true sum."""
+    from repro.optim.compression import int8_compress, int8_decompress
+
+    rng = jax.random.PRNGKey(0)
+    x = jax.random.normal(rng, (128,)) * 0.01
+    err = jnp.zeros_like(x)
+    acc_c, acc_t = jnp.zeros_like(x), jnp.zeros_like(x)
+    for i in range(50):
+        xe = x + err
+        q, s = int8_compress(xe, jax.random.fold_in(rng, i))
+        dec = int8_decompress(q, s)
+        err = xe - dec
+        acc_c += dec
+        acc_t += x
+    rel = float(jnp.linalg.norm(acc_c - acc_t) / jnp.linalg.norm(acc_t))
+    assert rel < 0.02

@@ -1,0 +1,49 @@
+import numpy as np
+import pytest
+
+from repro.core import svm_path
+from repro.data import make_sparse_classification
+
+
+@pytest.fixture(scope="module")
+def paths():
+    ds = make_sparse_classification(m=400, n=150, k_active=10, seed=31)
+    on = svm_path(ds.X, ds.y, n_lambdas=6, lam_min_ratio=0.2, screening=True,
+                  tol=1e-10, max_iters=5000)
+    off = svm_path(ds.X, ds.y, n_lambdas=6, lam_min_ratio=0.2, screening=False,
+                   tol=1e-10, max_iters=5000)
+    return on, off
+
+
+def test_path_exactness(paths):
+    on, off = paths
+    np.testing.assert_allclose(on.objectives, off.objectives, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(on.weights, off.weights, atol=3e-3)
+
+
+def test_screening_reduces_problem_size(paths):
+    on, off = paths
+    assert np.all(on.kept[1:] <= 400)
+    assert on.kept[1] < 400  # near lam_max most features screened
+    assert np.all(off.kept[1:] == 400)
+
+
+def test_kept_superset_of_active(paths):
+    on, _ = paths
+    for k in range(1, len(on.lambdas)):
+        assert on.active[k] <= on.kept[k]
+
+
+def test_active_set_grows_roughly_monotone(paths):
+    on, _ = paths
+    # allow small dips (fp tolerance) but overall growth along the path
+    assert on.active[-1] >= on.active[1]
+
+
+def test_mask_mode_matches_gather_mode():
+    ds = make_sparse_classification(m=200, n=100, seed=33)
+    g = svm_path(ds.X, ds.y, n_lambdas=5, lam_min_ratio=0.3, screening=True,
+                 reduce="gather", tol=1e-10, max_iters=4000)
+    m = svm_path(ds.X, ds.y, n_lambdas=5, lam_min_ratio=0.3, screening=True,
+                 reduce="mask", tol=1e-10, max_iters=4000)
+    np.testing.assert_allclose(g.weights, m.weights, atol=3e-3)

@@ -1,0 +1,71 @@
+"""Fault-tolerance behaviours of the trainer: resume, replay, loss descent."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import TokenPipeline
+from repro.launch.train import train
+
+
+def test_loss_decreases_short_run(tmp_path):
+    out = train("qwen2.5-3b", smoke=True, steps=15, batch=4, seq=64,
+                ckpt_dir=str(tmp_path), ckpt_every=50, log=lambda *a: None)
+    first = np.mean(out["losses"][:3])
+    last = np.mean(out["losses"][-3:])
+    assert last < first, (first, last)
+
+
+def test_resume_is_exact(tmp_path):
+    """Crash at step 10 then resume == uninterrupted 16-step run."""
+    full = train("granite-8b", smoke=True, steps=16, batch=4, seq=32,
+                 ckpt_dir=str(tmp_path / "full"), ckpt_every=8,
+                 log=lambda *a: None)
+    part = train("granite-8b", smoke=True, steps=8, batch=4, seq=32,
+                 ckpt_dir=str(tmp_path / "res"), ckpt_every=8,
+                 log=lambda *a: None)
+    resumed = train("granite-8b", smoke=True, steps=16, batch=4, seq=32,
+                    ckpt_dir=str(tmp_path / "res"), ckpt_every=8,
+                    log=lambda *a: None)
+    # same final losses (bitwise data replay + checkpointed optimizer state)
+    np.testing.assert_allclose(full["losses"][-1], resumed["losses"][-1],
+                               rtol=2e-5)
+    w_full = jax.tree_util.tree_leaves(full["final_state"].params)[0]
+    w_res = jax.tree_util.tree_leaves(resumed["final_state"].params)[0]
+    np.testing.assert_allclose(np.asarray(w_full), np.asarray(w_res),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_data_pipeline_pure_replay():
+    p = TokenPipeline(vocab_size=128, batch_size=4, seq_len=16, seed=3)
+    a = p.batch_at(12)
+    b = p.batch_at(12)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = p.batch_at(13)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_nan_step_rejection():
+    """A poisoned batch must not corrupt params (skip-and-continue)."""
+    from repro.configs import get_smoke_config
+    from repro.launch.steps import init_train_state, make_train_step
+
+    cfg = get_smoke_config("granite-8b")
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg))
+    batch = {"tokens": jnp.zeros((2, 16), jnp.int32),
+             "targets": jnp.zeros((2, 16), jnp.int32)}
+    s1, m1 = step(state, batch)
+    # poison the params' input path via an out-of-range huge embed? instead:
+    # inject NaN by scaling one param to NaN and verify skip flag + rollback
+    bad_params = jax.tree_util.tree_map(lambda x: x, s1.params)
+    bad_params["embed"]["tok"] = bad_params["embed"]["tok"] * jnp.nan
+    s_bad = s1._replace(params=bad_params)
+    s2, m2 = step(s_bad, batch)
+    assert int(m2["skipped"]) == 1
+    # params unchanged (rollback of the poisoned update)
+    a = jax.tree_util.tree_leaves(s_bad.params)[1]
+    b = jax.tree_util.tree_leaves(s2.params)[1]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(s2.opt.step) == int(s_bad.opt.step)
