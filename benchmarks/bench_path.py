@@ -21,26 +21,38 @@ def run(log=print, m=6000, n=400, n_lambdas=16, ratio=0.25):
     ds = make_sparse_classification(m=m, n=n, k_active=20, seed=11)
     kw = dict(n_lambdas=n_lambdas, lam_min_ratio=ratio, tol=1e-9,
               max_iters=8000)
-    # warm both jit caches (bucketed shapes) with a throwaway pass
+    # warm the jit caches (bucketed shapes) with a throwaway pass
     svm_path(ds.X, ds.y, screening=True, **kw)
     svm_path(ds.X, ds.y, screening=False, **kw)
+    svm_path(ds.X, ds.y, rules="composite", **kw)
 
     t0 = time.perf_counter()
     on = svm_path(ds.X, ds.y, screening=True, **kw)
     t_on = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    comp = svm_path(ds.X, ds.y, rules="composite", **kw)
+    t_comp = time.perf_counter() - t0
     t0 = time.perf_counter()
     off = svm_path(ds.X, ds.y, screening=False, **kw)
     t_off = time.perf_counter() - t0
 
     obj_dev = float(np.max(np.abs(on.objectives - off.objectives)
                            / np.maximum(np.abs(off.objectives), 1e-9)))
+    comp_dev = float(np.max(np.abs(comp.objectives - off.objectives)
+                            / np.maximum(np.abs(off.objectives), 1e-9)))
     log(f"# path speedup (m={m}, n={n}, {n_lambdas} lambdas)")
-    log(f"kept per step      : {on.kept.tolist()}")
-    log(f"active per step    : {on.active.tolist()}")
-    log(f"screen overhead    : {on.screen_times.sum() * 1e3:.1f} ms total")
-    log(f"path time ON/OFF   : {t_on:.3f}s / {t_off:.3f}s -> speedup x{t_off / t_on:.2f}")
-    log(f"max rel obj dev    : {obj_dev:.2e} (safety: identical solutions)")
+    log(f"kept per step       : {on.kept.tolist()}")
+    log(f"active per step     : {on.active.tolist()}")
+    log(f"composite samples   : {comp.kept_samples.tolist()} "
+        f"(verify re-solves: {int(comp.verify_rounds.sum())})")
+    log(f"screen overhead     : {on.screen_times.sum() * 1e3:.1f} ms total")
+    log(f"path time feat/comp/OFF: {t_on:.3f}s / {t_comp:.3f}s / {t_off:.3f}s "
+        f"-> speedup x{t_off / t_on:.2f} / x{t_off / t_comp:.2f}")
+    log(f"max rel obj dev     : feat {obj_dev:.2e}, composite {comp_dev:.2e} "
+        f"(safety: identical solutions)")
     return [
         ("path_screened", t_on * 1e6, f"speedup=x{t_off / t_on:.2f}"),
+        ("path_composite", t_comp * 1e6,
+         f"speedup=x{t_off / t_comp:.2f} obj_dev={comp_dev:.2e}"),
         ("path_unscreened", t_off * 1e6, f"obj_dev={obj_dev:.2e}"),
     ]

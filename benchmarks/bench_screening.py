@@ -1,18 +1,26 @@
-"""Paper table: screening (rejection) rate vs lambda ratio, across designs.
+"""Paper table: screening (rejection) rate vs lambda ratio, across designs —
+plus the rule sweep (feature / sample / composite) over a whole path.
 
-Mirrors the paper's evaluation axis: how many features the rule discards as a
+Mirrors the paper's evaluation axis: how many units each rule discards as a
 function of lambda2/lambda1, on dense / sparse / correlated designs, with
-theta1 exact (lambda1 = lambda_max) and sequential (solved theta1).
+theta1 exact (lambda1 = lambda_max) and sequential (solved theta1). The rule
+sweep drives :class:`repro.core.PathDriver` with each registered reduction
+and records per-step kept counts and wall times into a
+``BENCH_screening.json`` trajectory file so successive PRs can diff
+screening power and overhead.
 """
 
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    PathDriver,
     fista_solve,
     lambda_max,
     screen,
@@ -22,10 +30,11 @@ from repro.core.dual import safe_theta_and_delta
 from repro.data import make_sparse_classification
 
 RATIOS = (0.95, 0.9, 0.8, 0.7, 0.5, 0.3, 0.1)
+RULE_SPECS = ("feature_vi", "sample_vi", "composite", None)
+TRAJECTORY_PATH = Path(__file__).resolve().parent.parent / "BENCH_screening.json"
 
 
-def run(log=print):
-    rows = []
+def _rate_tables(rows, log):
     datasets = {
         "dense": dict(m=4000, n=500, density=1.0, correlated=0.0),
         "sparse": dict(m=4000, n=500, density=0.1, correlated=0.0),
@@ -61,4 +70,51 @@ def run(log=print):
         rej = 1.0 - float(jnp.mean(keep))
         log(f"sequential,{r},{rej:.4f},,")
         rows.append(("screen_rate_sequential", 0.0, f"ratio={r} rejected={rej:.4f}"))
+
+
+def _rule_sweep(rows, log, m=2000, n=400, n_lambdas=10, lam_min_ratio=0.05):
+    """Drive the path with each rule config; emit the trajectory JSON."""
+    ds = make_sparse_classification(m=m, n=n, k_active=20, seed=11)
+    log(f"\n# rule sweep over the path (m={m}, n={n}, {n_lambdas} lambdas)")
+    log("rules,path_s,kept_features,kept_samples,verify_resolves")
+    traj = {
+        "bench": "screening_rule_sweep",
+        "instance": {"m": m, "n": n, "n_lambdas": n_lambdas,
+                     "lam_min_ratio": lam_min_ratio, "seed": 11},
+        "runs": [],
+    }
+    for spec in RULE_SPECS:
+        name = spec or "none"
+        driver = PathDriver(rules=spec)
+        driver.run(ds.X, ds.y, n_lambdas=n_lambdas,
+                   lam_min_ratio=lam_min_ratio)  # warm jit caches
+        t0 = time.perf_counter()
+        r = driver.run(ds.X, ds.y, n_lambdas=n_lambdas,
+                       lam_min_ratio=lam_min_ratio)
+        dt = time.perf_counter() - t0
+        log(f"{name},{dt:.3f},{r.kept.tolist()},{r.kept_samples.tolist()},"
+            f"{int(r.verify_rounds.sum())}")
+        rows.append((f"path_rules_{name}", dt * 1e6,
+                     f"kept_last={int(r.kept[-1])} "
+                     f"samples_last={int(r.kept_samples[-1])}"))
+        traj["runs"].append({
+            "rules": name,
+            "path_seconds": dt,
+            "lambdas": [float(v) for v in r.lambdas],
+            "kept_features": [int(v) for v in r.kept],
+            "kept_samples": [int(v) for v in r.kept_samples],
+            "active": [int(v) for v in r.active],
+            "solver_iters": [int(v) for v in r.solver_iters],
+            "screen_seconds": float(r.screen_times.sum()),
+            "verify_resolves": int(r.verify_rounds.sum()),
+            "max_obj": float(np.max(np.abs(r.objectives))),
+        })
+    TRAJECTORY_PATH.write_text(json.dumps(traj, indent=2))
+    log(f"wrote trajectory file: {TRAJECTORY_PATH}")
+
+
+def run(log=print):
+    rows = []
+    _rate_tables(rows, log)
+    _rule_sweep(rows, log)
     return rows

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Minimal CI: run the tier-1 suite on CPU jax (see ROADMAP.md).
+#
+#   ./scripts/ci.sh            # full tier-1
+#   ./scripts/ci.sh -m 'not slow'   # extra pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"

@@ -43,13 +43,20 @@ def save_pytree(tree, path: Path):
     np.savez(path, **_flatten(tree))
 
 
-def load_pytree(template, path: Path):
-    """Restore into the structure of ``template`` (values replaced)."""
+def load_pytree(template, path: Path, strict: bool = True):
+    """Restore into the structure of ``template`` (values replaced).
+
+    ``strict=False`` lets state schemas evolve: template leaves missing from
+    the checkpoint keep their template (initial) value instead of raising —
+    use when restoring checkpoints written before a new state field existed.
+    """
     data = np.load(path, allow_pickle=False)
     flat = dict(data.items())
 
     def fn(p, leaf):
         key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        if not strict and key not in flat:
+            return leaf
         arr = flat[key]
         return arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr
 
@@ -112,8 +119,8 @@ class CheckpointManager:
         except Exception:
             return False
 
-    def restore(self, step: int, template: Any):
+    def restore(self, step: int, template: Any, strict: bool = True):
         d = self.dir / f"step_{step:012d}"
-        state = load_pytree(template, d / "state.npz")
+        state = load_pytree(template, d / "state.npz", strict=strict)
         manifest = json.loads((d / "manifest.json").read_text())
         return state, manifest

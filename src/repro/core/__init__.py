@@ -21,4 +21,14 @@ from .screening import (  # noqa: F401
     shared_scalars,
 )
 from .solver import FistaResult, fista_solve, lipschitz_estimate, soft_threshold  # noqa: F401
-from .path import PathResult, default_lambda_grid, svm_path  # noqa: F401
+from .path import PathDriver, PathResult, default_lambda_grid, svm_path  # noqa: F401
+from .rules import (  # noqa: F401
+    CompositeRule,
+    ConvexRegion,
+    FeatureVIRule,
+    SampleVIRule,
+    ScreeningRule,
+    available_rules,
+    get_rule,
+    make_rules,
+)

@@ -29,9 +29,15 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 def shard_map(f, mesh, in_specs, out_specs, check_rep=False):
-    """Thin compat wrapper over jax.shard_map (jax>=0.8 keyword API)."""
-    return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                         check_vma=check_rep)
+    """Thin compat wrapper: jax>=0.8 ``jax.shard_map`` (check_vma keyword) or
+    the older ``jax.experimental.shard_map`` (check_rep keyword)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_rep)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_rep)
 
 from .screening import (
     SAFE_TAU,
@@ -154,19 +160,27 @@ def fista_sharded(
     w0: Optional[jax.Array] = None,
     b0: Optional[jax.Array] = None,
     data_axes=("data",),
+    sample_mask: Optional[jax.Array] = None,
 ) -> FistaResult:
-    """Distributed FISTA on 2-D sharded X. Same math as solver.fista_solve."""
+    """Distributed FISTA on 2-D sharded X. Same math as solver.fista_solve.
+
+    ``sample_mask`` (0/1 over samples, sharded like ``y``) drops screened
+    samples from the loss without reshaping the sharded operands — the
+    mask-mode counterpart of the sample-screening rules (core/rules).
+    """
     lam = jnp.asarray(lam, jnp.float32)
     m, n = X.shape
+    if sample_mask is None:
+        sample_mask = jnp.ones_like(y)
 
-    def local(x_blk, y_blk, w_blk, b_scalar):
+    def local(x_blk, y_blk, sm_blk, w_blk, b_scalar):
         def margins(w):
             part = x_blk.T @ w  # (n_loc,)
             return jax.lax.psum(part, "model")
 
         def grad(w, b):
             u = margins(w) + b
-            xi = jnp.maximum(0.0, 1.0 - y_blk * u)
+            xi = sm_blk * jnp.maximum(0.0, 1.0 - y_blk * u)
             gw = -(x_blk @ (y_blk * xi))
             gw = jax.lax.psum(gw, data_axes)
             gb = -jnp.sum(y_blk * xi)
@@ -179,7 +193,7 @@ def fista_sharded(
 
         def objective(w, b):
             u = margins(w) + b
-            xi = jnp.maximum(0.0, 1.0 - y_blk * u)
+            xi = sm_blk * jnp.maximum(0.0, 1.0 - y_blk * u)
             loss = 0.5 * jnp.sum(xi * xi)
             loss = jax.lax.psum(loss, data_axes)
             l1 = jax.lax.psum(jnp.sum(jnp.abs(w)), "model")
@@ -246,9 +260,10 @@ def fista_sharded(
     fn = shard_map(
         local,
         mesh=mesh,
-        in_specs=(P("model", *data_axes), P(*data_axes), P("model"), P()),
+        in_specs=(P("model", *data_axes), P(*data_axes), P(*data_axes),
+                  P("model"), P()),
         out_specs=(P("model"), P(), P(), P(), P()),
         check_rep=False,
     )
-    w, b, obj, k, conv = fn(X, y, w0, b0)
+    w, b, obj, k, conv = fn(X, y, jnp.asarray(sample_mask, jnp.float32), w0, b0)
     return FistaResult(w=w, b=b, obj=obj, n_iters=k, converged=conv)

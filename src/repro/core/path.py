@@ -1,23 +1,38 @@
-"""Regularization-path driver with sequential safe screening (paper Sec. 6.7).
+"""Rule-agnostic regularization-path driver with pluggable screening.
 
 Walks a decreasing grid ``lam_max = lam_0 > lam_1 > ... > lam_{T-1}``. At each
-step the known dual point ``theta(lam_{k})`` screens features for
-``lam_{k+1}``; the reduced problem is solved with a warm-started FISTA and the
-solution is scattered back to full coordinates.
+step the previous primal/dual pair parameterizes a
+:class:`~repro.core.rules.base.ConvexRegion`; every configured
+:class:`~repro.core.rules.base.ScreeningRule` then contributes a keep-mask on
+its axis (feature rows and/or sample columns of ``X``), the reduced problem
+is solved with a warm-started FISTA, and the solution is scattered back to
+full coordinates. Rules that are not a-priori safe (``needs_verification``)
+are checked at the solved point and violators re-admitted before the step is
+accepted — so the accepted solution is exact regardless of screening.
 
-Two execution modes:
+Two execution modes, applied on *both* axes:
 
-* ``reduce="gather"`` — physically gathers the kept rows of X (padded to a
-  power-of-two bucket so jit re-traces at most O(log m) times). This realizes
-  the paper's speedup: solver cost scales with the *kept* feature count.
-* ``reduce="mask"``   — multiplies screened rows by 0 and keeps static shapes
-  (useful inside fully-jitted pipelines / for exactness tests).
+* ``reduce="gather"`` — physically gathers kept rows/columns (padded to a
+  power-of-two bucket so jit re-traces at most O(log) times). Solver cost
+  scales with ``kept_features x kept_samples`` — the multiplicative payoff of
+  simultaneous reduction.
+* ``reduce="mask"``   — static shapes; screened features are zeroed rows,
+  screened samples are dropped from the loss via the solver's
+  ``sample_mask`` (zeroing columns would *not* be equivalent: an all-zero
+  column still contributes ``max(0, 1 - y_i b)^2`` to the loss).
 
-Exactness note: the rule is *safe* given an exact ``theta1``. We compute
-``theta1`` from a finite-precision primal solve (paper Eq. 20), so the path
-solves to a tight tolerance and screens with the ``SAFE_TAU`` margin;
-property tests (tests/test_screening.py) verify zero false rejections across
-random instances.
+Trust-region movement estimates for the sample rule come from observed path
+movement: after each accepted step the driver records
+``||w_k - w_{k-1}||_2`` and ``|b_k - b_{k-1}|`` and predicts the next step's
+movement as ``shrink_factor`` times that (first-order continuation on a
+geometric grid). The first screened step has no history and keeps all
+samples — correct anyway, since near ``lam_max`` nearly every sample is a
+support vector.
+
+Exactness: feature rules are safe given ``||theta1 - theta*|| <= delta``
+(gap-certified, see dual.safe_theta_and_delta); sample rules are exact at
+termination via the verification loop. Property tests cover both
+(tests/test_screening.py, tests/test_rules.py).
 """
 
 from __future__ import annotations
@@ -36,15 +51,18 @@ from .dual import (
     safe_theta_and_delta,
     theta_at_lambda_max,
 )
-from .screening import (
-    SAFE_TAU,
-    FeatureReductions,
-    screen_bounds_from_reductions,
-    shared_scalars,
+from .rules import (
+    AXIS_FEATURES,
+    AXIS_SAMPLES,
+    ConvexRegion,
+    FeatureVIRule,
+    make_rules,
 )
+from .rules.base import solve_with_verification
+from .screening import SAFE_TAU
 from .solver import fista_solve
 
-__all__ = ["PathResult", "svm_path", "default_lambda_grid"]
+__all__ = ["PathResult", "PathDriver", "svm_path", "default_lambda_grid"]
 
 
 @dataclass
@@ -59,6 +77,9 @@ class PathResult:
     wall_times: np.ndarray         # (T,) seconds per step (solve + screen)
     screen_times: np.ndarray       # (T,) seconds spent screening
     screened: bool = True
+    kept_samples: np.ndarray = None  # (T,) samples fed to the solver
+    verify_rounds: np.ndarray = None  # (T,) sample-verification re-solves
+    rules: tuple = ()
     extras: dict = field(default_factory=dict)
 
 
@@ -74,6 +95,220 @@ def _bucket(n: int) -> int:
     return b
 
 
+class PathDriver:
+    """Applies an arbitrary list of screening rules along the lambda path.
+
+    ``rules`` accepts anything :func:`~repro.core.rules.base.make_rules`
+    does: ``"feature_vi"``, ``"sample_vi"``, ``"composite"``, a list of
+    names, or rule instances. An empty list solves the unscreened path.
+    """
+
+    def __init__(
+        self,
+        rules="feature_vi",
+        *,
+        reduce: str = "gather",
+        tol: float = 1e-9,
+        max_iters: int = 4000,
+        shrink_factor: float = 1.5,
+        max_verify_rounds: int = 3,
+    ):
+        if reduce not in ("gather", "mask"):
+            raise ValueError(f"reduce must be 'gather' or 'mask', got {reduce!r}")
+        self.rules = make_rules(rules)
+        self.reduce = reduce
+        self.tol = float(tol)
+        self.max_iters = int(max_iters)
+        self.shrink_factor = float(shrink_factor)
+        self.max_verify_rounds = int(max_verify_rounds)
+
+    # -- reduction helpers -------------------------------------------------
+
+    def _feature_select(self, X_np, f_idx, m):
+        """Bucket-padded gather of kept feature rows (zeroed padding)."""
+        pad = min(_bucket(max(len(f_idx), 1)), m)
+        sel = np.zeros((pad,), dtype=np.int64)
+        sel[: len(f_idx)] = f_idx
+        valid = np.arange(pad) < len(f_idx)
+        return sel, valid
+
+    def _solve(self, Xr, yr, lam, w0, b0, sample_mask):
+        return fista_solve(
+            Xr, yr, jnp.asarray(lam), w0=w0, b0=b0,
+            max_iters=self.max_iters, tol=self.tol,
+            sample_mask=sample_mask,
+        )
+
+    # -- main loop ---------------------------------------------------------
+
+    def run(
+        self,
+        X: jax.Array,
+        y: jax.Array,
+        lambdas: Optional[Sequence[float]] = None,
+        n_lambdas: int = 10,
+        lam_min_ratio: float = 0.1,
+    ) -> PathResult:
+        X = jnp.asarray(X)
+        y = jnp.asarray(y)
+        m, n = X.shape
+        X_np = np.asarray(X)
+        y_np = np.asarray(y)
+
+        feature_rules = [r for r in self.rules if r.axis == AXIS_FEATURES]
+        sample_rules = [r for r in self.rules if r.axis == AXIS_SAMPLES]
+        for rule in self.rules:
+            rule.prepare(X, y)
+
+        lam_max_val = float(lambda_max(X, y))
+        if lambdas is None:
+            lambdas = default_lambda_grid(lam_max_val, n_lambdas, lam_min_ratio)
+        lambdas = np.asarray(lambdas, dtype=np.float64)
+        T = len(lambdas)
+
+        weights = np.zeros((T, m), dtype=np.float64)
+        biases = np.zeros((T,), dtype=np.float64)
+        objectives = np.zeros((T,), dtype=np.float64)
+        kept = np.zeros((T,), dtype=np.int64)
+        kept_s = np.zeros((T,), dtype=np.int64)
+        vrounds = np.zeros((T,), dtype=np.int64)
+        active = np.zeros((T,), dtype=np.int64)
+        iters = np.zeros((T,), dtype=np.int64)
+        wall = np.zeros((T,), dtype=np.float64)
+        s_times = np.zeros((T,), dtype=np.float64)
+        sample_masks: dict[int, np.ndarray] = {}  # accepted per-step masks
+
+        # step 0: closed form at lam_max (w = 0); delta = 0 (theta exact here)
+        b0 = float(bias_at_lambda_max(y))
+        theta_prev = theta_at_lambda_max(y, jnp.asarray(lambdas[0]))
+        delta_prev = jnp.asarray(0.0, X.dtype)
+        lam_prev = float(lambdas[0])
+        biases[0] = b0
+        xi0 = np.maximum(0.0, 1.0 - y_np * b0)
+        objectives[0] = 0.5 * float(np.sum(xi0 * xi0))
+
+        w_host = np.zeros((m,), dtype=np.float64)
+        b_host = b0
+        # trust-region movement state (inf until one step of history exists)
+        dw_pred = float("inf")
+        db_pred = float("inf")
+
+        for k in range(1, T):
+            lam = float(lambdas[k])
+            t0 = time.perf_counter()
+
+            # -- screening: one region, every rule --------------------------
+            st0 = time.perf_counter()
+            f_mask = np.ones((m,), dtype=bool)
+            s_mask = np.ones((n,), dtype=bool)
+            if self.rules:
+                region = ConvexRegion.build(
+                    y, lam_prev, lam, theta_prev, delta=delta_prev,
+                    w1=jnp.asarray(w_host, X.dtype), b1=b_host,
+                    dw=dw_pred, db=db_pred,
+                )
+                for rule in feature_rules:
+                    f_mask &= np.asarray(rule.keep(rule.bounds(X, y, region)))
+                for rule in sample_rules:
+                    s_mask &= np.asarray(rule.keep(rule.bounds(X, y, region)))
+            s_times[k] = time.perf_counter() - st0
+
+            f_idx = np.nonzero(f_mask)[0]
+            kept[k] = len(f_idx)
+
+            # -- solve + verification loop ----------------------------------
+            warm = {"w": w_host, "b": b_host}  # latest available point
+
+            def solve(mask):
+                s_idx = np.nonzero(mask)[0]
+                res, w_full = self._solve_reduced(
+                    X, y, X_np, lam, f_mask, f_idx, mask, s_idx,
+                    warm["w"], warm["b"],
+                )
+                warm["w"], warm["b"] = w_full, float(res.b)
+                return res, w_full, float(res.b)
+
+            res, w_full, b_new, rounds = solve_with_verification(
+                solve, sample_rules, X_np, y_np, s_mask,
+                max_rounds=self.max_verify_rounds,
+            )
+
+            kept_s[k] = int(s_mask.sum())
+            vrounds[k] = rounds
+            if sample_rules:
+                sample_masks[k] = s_mask.copy()
+
+            # -- movement estimates for the next step's trust region --------
+            # (weights[k-1]/biases[k-1] hold the previous accepted solution;
+            # at k=1 that is the closed form w=0, b=b* at lam_max)
+            dw_pred = self.shrink_factor * float(np.linalg.norm(w_full - weights[k - 1]))
+            db_pred = self.shrink_factor * abs(b_new - biases[k - 1])
+
+            b_host = b_new
+            w_host = w_full.copy()
+
+            theta_prev, delta_prev = safe_theta_and_delta(
+                X, y, jnp.asarray(w_full, X.dtype), jnp.asarray(b_host, X.dtype),
+                jnp.asarray(lam),
+            )
+            lam_prev = lam
+
+            weights[k] = w_full
+            biases[k] = b_host
+            objectives[k] = float(res.obj)
+            active[k] = int(np.sum(np.abs(w_full) > 1e-10))
+            iters[k] = int(res.n_iters)
+            wall[k] = time.perf_counter() - t0
+
+        kept_s[0] = 0
+        return PathResult(
+            lambdas=lambdas, weights=weights, biases=biases, objectives=objectives,
+            kept=kept, active=active, solver_iters=iters, wall_times=wall,
+            screen_times=s_times, screened=bool(self.rules),
+            kept_samples=kept_s, verify_rounds=vrounds,
+            rules=tuple(r.name for r in self.rules),
+            extras={"lam_max": lam_max_val, "sample_masks": sample_masks},
+        )
+
+    # -- one reduced solve -------------------------------------------------
+
+    def _solve_reduced(self, X, y, X_np, lam, f_mask, f_idx, s_mask, s_idx,
+                       w_host, b_host):
+        """Reduce X on both axes per self.reduce, solve, scatter w back."""
+        m, n = X.shape
+        screening_f = len(f_idx) < m
+        screening_s = len(s_idx) < n
+        dtype = X_np.dtype
+
+        if self.reduce == "gather" and (screening_f or screening_s):
+            sel_f, valid_f = self._feature_select(X_np, f_idx, m)
+            pad_n = min(_bucket(max(len(s_idx), 1)), n) if screening_s else n
+            sel_s = np.zeros((pad_n,), dtype=np.int64)
+            sel_s[: len(s_idx)] = s_idx if screening_s else np.arange(n)
+            valid_s = np.arange(pad_n) < (len(s_idx) if screening_s else n)
+
+            Xr = X_np[np.ix_(sel_f, sel_s)]
+            # zero padded rows AND columns: padding must not distort the
+            # Lipschitz estimate (duplicate columns inflate sigma_max badly)
+            Xr = Xr * valid_f[:, None].astype(dtype)
+            Xr = Xr * valid_s[None, :].astype(dtype)
+            yr = jnp.asarray((np.asarray(y)[sel_s] * valid_s).astype(dtype))
+            w0 = jnp.asarray((w_host[sel_f] * valid_f).astype(dtype))
+            smask = jnp.asarray(valid_s.astype(dtype)) if screening_s else None
+            res = self._solve(jnp.asarray(Xr), yr, lam, w0,
+                              jnp.asarray(b_host, X.dtype), smask)
+            w_full = np.zeros((m,), dtype=np.float64)
+            w_full[sel_f[: len(f_idx)]] = np.asarray(res.w, np.float64)[: len(f_idx)]
+        else:
+            Xr = X * jnp.asarray(f_mask[:, None], X.dtype)
+            w0 = jnp.asarray((w_host * f_mask).astype(dtype))
+            smask = jnp.asarray(s_mask.astype(dtype)) if screening_s else None
+            res = self._solve(Xr, y, lam, w0, jnp.asarray(b_host, X.dtype), smask)
+            w_full = np.asarray(res.w, dtype=np.float64) * f_mask
+
+        return res, w_full
+
+
 def svm_path(
     X: jax.Array,
     y: jax.Array,
@@ -85,114 +320,17 @@ def svm_path(
     tol: float = 1e-9,
     max_iters: int = 4000,
     tau: float = SAFE_TAU,
+    rules=None,
 ) -> PathResult:
-    """Solve the L1-L2-SVM path, optionally with sequential safe screening."""
-    X = jnp.asarray(X)
-    y = jnp.asarray(y)
-    m, n = X.shape
+    """Solve the L1-L2-SVM path with configurable screening rules.
 
-    lam_max_val = float(lambda_max(X, y))
-    if lambdas is None:
-        lambdas = default_lambda_grid(lam_max_val, n_lambdas, lam_min_ratio)
-    lambdas = np.asarray(lambdas, dtype=np.float64)
-    T = len(lambdas)
-
-    # theta-independent reductions, shared across the whole path (paper 6.4)
-    d_one = np.asarray(X @ y)           # fhat^T 1
-    d_y = np.asarray(X @ jnp.ones((n,), X.dtype))  # fhat^T y
-    d_sq = np.asarray(jnp.sum(X * X, axis=1))
-
-    weights = np.zeros((T, m), dtype=np.float64)
-    biases = np.zeros((T,), dtype=np.float64)
-    objectives = np.zeros((T,), dtype=np.float64)
-    kept = np.zeros((T,), dtype=np.int64)
-    active = np.zeros((T,), dtype=np.int64)
-    iters = np.zeros((T,), dtype=np.int64)
-    wall = np.zeros((T,), dtype=np.float64)
-    s_times = np.zeros((T,), dtype=np.float64)
-
-    # step 0: closed form at lam_max (w = 0); delta = 0 (theta exact here)
-    b0 = float(bias_at_lambda_max(y))
-    theta_prev = theta_at_lambda_max(y, jnp.asarray(lambdas[0]))
-    delta_prev = jnp.asarray(0.0, X.dtype)
-    lam_prev = float(lambdas[0])
-    w_full = np.zeros((m,), dtype=np.float64)
-    biases[0] = b0
-    xi0 = np.maximum(0.0, 1.0 - np.asarray(y) * b0)
-    objectives[0] = 0.5 * float(np.sum(xi0 * xi0))
-    kept[0] = 0
-
-    w_host = np.zeros((m,), dtype=np.float64)
-    b_host = b0
-
-    for k in range(1, T):
-        lam = float(lambdas[k])
-        t0 = time.perf_counter()
-
-        if screening:
-            st0 = time.perf_counter()
-            d_theta = np.asarray(X @ (y * theta_prev))
-            red = FeatureReductions(
-                d_theta=jnp.asarray(d_theta, jnp.float32),
-                d_one=jnp.asarray(d_one, jnp.float32),
-                d_y=jnp.asarray(d_y, jnp.float32),
-                d_sq=jnp.asarray(d_sq, jnp.float32),
-            )
-            sh = shared_scalars(y, jnp.asarray(lam_prev), jnp.asarray(lam),
-                                theta_prev, delta=delta_prev)
-            bounds = np.asarray(screen_bounds_from_reductions(red, sh))
-            mask = bounds >= tau
-            s_times[k] = time.perf_counter() - st0
-        else:
-            mask = np.ones((m,), dtype=bool)
-
-        idx = np.nonzero(mask)[0]
-        kept[k] = len(idx)
-
-        if reduce == "gather" and screening:
-            pad = min(_bucket(max(len(idx), 1)), m)  # never exceed m rows
-            sel = np.zeros((pad,), dtype=np.int64)
-            sel[: len(idx)] = idx
-            Xr = jnp.asarray(np.asarray(X)[sel])
-            if len(idx) < pad:  # zero out padding rows (duplicate of idx[0])
-                padmask = np.zeros((pad, 1), dtype=np.asarray(X).dtype)
-                padmask[: len(idx)] = 1.0
-                Xr = Xr * jnp.asarray(padmask)
-            w0 = jnp.asarray(w_host[sel] * (np.arange(pad) < len(idx)))
-        else:
-            Xr = X * jnp.asarray(mask[:, None], X.dtype)
-            sel = np.arange(m)
-            w0 = jnp.asarray(w_host * mask)
-
-        res = fista_solve(Xr, y, jnp.asarray(lam), w0=w0.astype(X.dtype),
-                          b0=jnp.asarray(b_host, X.dtype), max_iters=max_iters, tol=tol)
-        res_w = np.asarray(res.w, dtype=np.float64)
-
-        w_full[:] = 0.0
-        if reduce == "gather" and screening:
-            w_full[sel[: len(idx)]] = res_w[: len(idx)]
-        else:
-            w_full = res_w
-
-        b_host = float(res.b)
-        w_host = w_full.copy()
-
-        theta_prev, delta_prev = safe_theta_and_delta(
-            X, y, jnp.asarray(w_full, X.dtype), jnp.asarray(b_host, X.dtype),
-            jnp.asarray(lam),
-        )
-        lam_prev = lam
-
-        weights[k] = w_full
-        biases[k] = b_host
-        objectives[k] = float(res.obj)
-        active[k] = int(np.sum(np.abs(w_full) > 1e-10))
-        iters[k] = int(res.n_iters)
-        wall[k] = time.perf_counter() - t0
-
-    return PathResult(
-        lambdas=lambdas, weights=weights, biases=biases, objectives=objectives,
-        kept=kept, active=active, solver_iters=iters, wall_times=wall,
-        screen_times=s_times, screened=screening,
-        extras={"lam_max": lam_max_val},
-    )
+    Back-compatible wrapper over :class:`PathDriver`: ``screening=True``
+    defaults to the paper's feature rule (with ``tau``); pass ``rules=``
+    (``"sample_vi"``, ``"composite"``, a list, or instances) to choose
+    other reductions. ``screening=False`` (or ``rules=[]``) disables all.
+    """
+    if rules is None:
+        rules = [FeatureVIRule(tau=tau)] if screening else []
+    driver = PathDriver(rules=rules, reduce=reduce, tol=tol, max_iters=max_iters)
+    return driver.run(X, y, lambdas=lambdas, n_lambdas=n_lambdas,
+                      lam_min_ratio=lam_min_ratio)

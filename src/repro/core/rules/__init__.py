@@ -1,0 +1,69 @@
+"""Pluggable safe-screening rules for the sparse SVM path.
+
+The paper's variational-inequality feature screen is one member of a family
+of reduction rules; this package makes the family a first-class subsystem so
+new rules plug into the same path driver, kernels, and benchmarks instead of
+forking the stack.
+
+Architecture
+------------
+* :mod:`.base` — the :class:`ScreeningRule` protocol (``axis``, ``bounds``,
+  ``keep``, optional ``verify``), the shared :class:`ConvexRegion` built once
+  per path step (VI set scalars + dual anchor ``(theta1, delta)`` + primal
+  anchor ``(w1, b1, dw, db)``), and the string registry
+  (``register_rule`` / ``get_rule`` / ``available_rules`` / ``make_rules``).
+* :mod:`.feature_vi` — the paper's rule (Sec. 6): discard feature ``j`` when
+  ``max_{theta in K} |fhat_j^T theta| < tau``. A-priori safe.
+* :mod:`.sample_vi` — margin-certified sample screening with a-posteriori
+  KKT verification (exact at termination), plus the certified-but-loose
+  a-priori slack caps ``sample_slack_caps`` with an honest derivation of why
+  a-priori sample screening cannot work for this loss.
+* :mod:`.composite` — simultaneous feature + sample reduction; the two axes
+  multiply (``kept_m * kept_n`` solver cost).
+
+Registered rules: ``"feature_vi"``, ``"sample_vi"``, ``"composite"``.
+
+Usage
+-----
+>>> from repro.core.path import PathDriver
+>>> PathDriver(rules="composite").run(X, y, n_lambdas=10)       # both axes
+>>> PathDriver(rules=["feature_vi"]).run(X, y)                  # paper rule
+>>> PathDriver(rules=[]).run(X, y)                              # no screening
+
+Adding a rule: subclass :class:`ScreeningRule`, decorate with
+``@register_rule("my_rule")``, implement ``bounds``/``keep`` (and ``verify``
+if not a-priori safe) — the driver, ``svm_path``, ``launch/train_svm.py``,
+and ``benchmarks/bench_screening.py`` pick it up by name. Planned next
+rules (see ROADMAP): DVI (dual VI at the previous-previous step), EDPP-style
+projection rules, and dynamic (in-solver) gap screening.
+"""
+
+from .base import (  # noqa: F401
+    AXIS_FEATURES,
+    AXIS_SAMPLES,
+    ConvexRegion,
+    ScreeningRule,
+    available_rules,
+    get_rule,
+    make_rules,
+    register_rule,
+)
+from .feature_vi import FeatureVIRule  # noqa: F401
+from .sample_vi import SampleVIRule, sample_margin_surplus, sample_slack_caps  # noqa: F401
+from .composite import CompositeRule  # noqa: F401
+
+__all__ = [
+    "AXIS_FEATURES",
+    "AXIS_SAMPLES",
+    "ConvexRegion",
+    "ScreeningRule",
+    "FeatureVIRule",
+    "SampleVIRule",
+    "CompositeRule",
+    "available_rules",
+    "get_rule",
+    "make_rules",
+    "register_rule",
+    "sample_margin_surplus",
+    "sample_slack_caps",
+]

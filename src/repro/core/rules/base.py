@@ -1,0 +1,252 @@
+"""Screening-rule protocol, shared region geometry, and the rule registry.
+
+A *screening rule* inspects the optimality region of the next path step and
+certifies that some problem units (feature rows or sample columns of ``X``)
+cannot influence the solution at ``lam2``, so the solver can drop them.
+Every rule answers three questions:
+
+* ``axis``    — which axis of ``X`` it reduces (``"features"`` or
+  ``"samples"``);
+* ``bounds``  — a per-unit scalar score derived from the region (an upper
+  bound on the dual correlation for features, a lower bound on the margin
+  for samples);
+* ``keep``    — which units survive, given those scores.
+
+Rules that cannot certify safety *a priori* (see
+:class:`~repro.core.rules.sample_vi.SampleVIRule`) additionally implement
+``verify`` so the path driver can check the screened units at the solved
+point and re-admit violators before accepting a step — exact at
+termination.
+
+The :class:`ConvexRegion` bundles everything a rule may consume: the paper's
+VI set ``K = Ball ∩ Halfspace ∩ Hyperplane`` for ``theta*(lam2)`` (via the
+precomputed :class:`~repro.core.screening.ScreenShared` scalars), the dual
+anchor ``theta1`` with its inexactness radius ``delta``, and the primal
+anchor ``(w1, b1)`` with the driver's trust-region movement estimates
+``(dw, db)``. Feature rules read the dual part; sample rules read the
+primal part; both are built once per path step and shared across rules.
+
+Registry: implementations self-register under a short name
+(``@register_rule("feature_vi")``) so drivers, launchers, and benchmarks can
+be configured with strings — ``make_rules("composite")`` — without importing
+concrete classes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..screening import ScreenShared, shared_scalars
+
+__all__ = [
+    "ConvexRegion",
+    "ScreeningRule",
+    "register_rule",
+    "get_rule",
+    "available_rules",
+    "make_rules",
+    "solve_with_verification",
+    "AXIS_FEATURES",
+    "AXIS_SAMPLES",
+]
+
+AXIS_FEATURES = "features"
+AXIS_SAMPLES = "samples"
+
+
+@dataclass(frozen=True)
+class ConvexRegion:
+    """Everything the rules may know about ``theta*(lam2)`` / ``(w*, b*)(lam2)``.
+
+    Dual side (always present): ``theta1`` is a (near-)optimal dual point at
+    ``lam1`` with ``||theta1 - theta*(lam1)|| <= delta``; ``shared`` holds the
+    VI-set scalars of paper Sec. 6.4, delta-inflated so the set still contains
+    ``theta*(lam2)`` under inexact solves.
+
+    Primal side (optional): ``(w1, b1)`` is the primal anchor matching
+    ``theta1`` and ``(dw, db)`` are trust-region radii — estimates of
+    ``||w*(lam2) - w1||_2`` and ``|b*(lam2) - b1|`` supplied by the path
+    driver from observed path movement. ``dw = inf`` (the default) makes every
+    margin bound vacuous, i.e. sample rules keep everything.
+    """
+
+    y: jax.Array
+    lam1: float
+    lam2: float
+    theta1: jax.Array
+    delta: float = 0.0
+    shared: Optional[ScreenShared] = None
+    w1: Optional[jax.Array] = None
+    b1: float = 0.0
+    dw: float = float("inf")
+    db: float = float("inf")
+    extras: dict = field(default_factory=dict)
+
+    @classmethod
+    def build(
+        cls,
+        y: jax.Array,
+        lam1,
+        lam2,
+        theta1: jax.Array,
+        delta=0.0,
+        w1: Optional[jax.Array] = None,
+        b1=0.0,
+        dw: float = float("inf"),
+        db: float = float("inf"),
+    ) -> "ConvexRegion":
+        sh = shared_scalars(y, jnp.asarray(lam1), jnp.asarray(lam2), theta1,
+                            delta=delta)
+        return cls(y=y, lam1=float(lam1), lam2=float(lam2), theta1=theta1,
+                   delta=delta, shared=sh, w1=w1, b1=float(b1),
+                   dw=float(dw), db=float(db))
+
+    def with_primal(self, w1, b1, dw, db) -> "ConvexRegion":
+        return replace(self, w1=w1, b1=float(b1), dw=float(dw), db=float(db))
+
+
+class ScreeningRule:
+    """Base class / protocol for screening rules.
+
+    Subclasses set ``name`` and ``axis`` and implement ``bounds`` + ``keep``.
+    ``prepare`` is an optional once-per-path hook for theta-independent
+    precomputation (paper Sec. 6.4 "precompute & share"); ``verify`` is only
+    meaningful when ``needs_verification`` is True.
+    """
+
+    name: str = "base"
+    axis: str = AXIS_FEATURES
+    #: a-priori safe rules never reject a unit that matters; rules with
+    #: ``needs_verification=True`` must be checked via :meth:`verify` at the
+    #: solved point before the step is accepted.
+    needs_verification: bool = False
+
+    # -- region -----------------------------------------------------------
+    @staticmethod
+    def region(y, lam1, lam2, theta1, delta=0.0, **primal) -> ConvexRegion:
+        """Build the shared region (drivers usually call ConvexRegion.build)."""
+        return ConvexRegion.build(y, lam1, lam2, theta1, delta=delta, **primal)
+
+    # -- per-unit scores --------------------------------------------------
+    def prepare(self, X: jax.Array, y: jax.Array) -> None:
+        """Optional once-per-path precomputation hook (default: no-op)."""
+
+    def bounds(self, X: jax.Array, y: jax.Array, region: ConvexRegion) -> jax.Array:
+        raise NotImplementedError
+
+    def keep(self, bounds: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def screen(self, X, y, region) -> tuple[jax.Array, jax.Array]:
+        b = self.bounds(X, y, region)
+        return self.keep(b), b
+
+    # -- a posteriori check (verified rules only) -------------------------
+    def verify(self, X, y, w, b, screened_idx) -> jax.Array:
+        """Indices (into ``screened_idx``) violating the certificate at (w, b)."""
+        raise NotImplementedError(f"rule {self.name!r} is a-priori safe")
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"{type(self).__name__}(name={self.name!r}, axis={self.axis!r})"
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+_RULES: dict[str, type] = {}
+
+
+def register_rule(name: str):
+    """Class decorator: register a ScreeningRule under ``name``."""
+
+    def deco(cls):
+        cls.name = name
+        _RULES[name] = cls
+        return cls
+
+    return deco
+
+
+def available_rules() -> tuple[str, ...]:
+    return tuple(sorted(_RULES))
+
+
+def get_rule(name: str, **kwargs) -> ScreeningRule:
+    try:
+        cls = _RULES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown screening rule {name!r}; available: {available_rules()}"
+        ) from None
+    return cls(**kwargs)
+
+
+def solve_with_verification(
+    solve: Callable[[np.ndarray], tuple],
+    sample_rules: Sequence[ScreeningRule],
+    X_np: np.ndarray,
+    y_np: np.ndarray,
+    s_mask: np.ndarray,
+    max_rounds: int = 3,
+):
+    """The verified-sample-screening solve protocol, shared by every driver.
+
+    ``solve(s_mask) -> (result, w_full, b)`` solves the reduced problem with
+    the given sample keep-mask (warm-starting is the closure's business).
+    Screened samples are then margin-checked at the solution by each
+    verifying rule; violators are re-admitted and the solve repeated. After
+    ``max_rounds`` re-solves the mask is reset entirely (exact full-sample
+    solve), so termination is guaranteed and the accepted solution always
+    satisfies every screened sample's ``xi_i = 0`` certificate.
+
+    Mutates ``s_mask`` in place; returns ``(result, w_full, b, rounds)``.
+    """
+    rounds = 0
+    while True:
+        res, w_full, b = solve(s_mask)
+        if s_mask.all() or not sample_rules:
+            return res, w_full, b, rounds
+        scr_idx = np.nonzero(~s_mask)[0]
+        viols = [
+            np.asarray(rule.verify(X_np, y_np, w_full, b, scr_idx))
+            for rule in sample_rules if rule.needs_verification
+        ]
+        viol = np.concatenate(viols) if viols else np.zeros((0,), np.int64)
+        if len(viol) == 0:
+            return res, w_full, b, rounds
+        rounds += 1
+        if rounds >= max_rounds:
+            s_mask[:] = True  # give up screening this step: exact solve
+        else:
+            s_mask[np.unique(viol).astype(np.int64)] = True
+
+
+RuleSpec = Union[None, str, ScreeningRule, Sequence[Union[str, ScreeningRule]]]
+
+
+def make_rules(spec: RuleSpec) -> list[ScreeningRule]:
+    """Normalize a rule spec into a flat list of rule instances.
+
+    Accepts ``None`` / ``[]`` (no screening), a registry name, a rule
+    instance, or a sequence of either. Composite rules are flattened into
+    their constituents so drivers see one rule per axis pass.
+    """
+    if spec is None:
+        return []
+    if isinstance(spec, (str, ScreeningRule)):
+        spec = [spec]
+    rules: list[ScreeningRule] = []
+    for item in spec:
+        rule = get_rule(item) if isinstance(item, str) else item
+        sub = getattr(rule, "subrules", None)
+        if sub is not None:
+            rules.extend(sub())
+        else:
+            rules.append(rule)
+    return rules

@@ -1,0 +1,46 @@
+"""Simultaneous feature + sample reduction (Zhang et al.-style composition).
+
+The two axes compose multiplicatively: feature screening shrinks the m-axis
+of the solver GEMMs, sample screening the n-axis, so the reduced problem
+costs ``kept_m * kept_n`` instead of ``m * n``. Both rules read the same
+:class:`~repro.core.rules.base.ConvexRegion`, so the composite costs one
+region build plus one bound sweep per axis per path step; the driver applies
+them in sequence (feature mask, then sample mask) and runs the sample rule's
+verification loop on the combined reduction.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from .base import ScreeningRule, register_rule
+from .feature_vi import FeatureVIRule
+from .sample_vi import SampleVIRule
+
+__all__ = ["CompositeRule"]
+
+
+@register_rule("composite")
+class CompositeRule(ScreeningRule):
+    """Container rule: alternates every constituent rule at each path step.
+
+    ``make_rules`` flattens it, so ``rules="composite"`` is equivalent to
+    ``rules=["feature_vi", "sample_vi"]``; custom mixtures can be composed by
+    passing instances: ``CompositeRule([FeatureVIRule(tau=...), ...])``.
+    """
+
+    axis = "both"
+
+    def __init__(self, rules: Optional[Sequence[ScreeningRule]] = None):
+        self.rules: list[ScreeningRule] = (
+            list(rules) if rules is not None else [FeatureVIRule(), SampleVIRule()]
+        )
+
+    def subrules(self) -> list[ScreeningRule]:
+        return list(self.rules)
+
+    def bounds(self, X, y, region):  # pragma: no cover - container only
+        raise NotImplementedError(
+            "CompositeRule is a container; flatten with make_rules() and "
+            "apply each constituent per axis"
+        )

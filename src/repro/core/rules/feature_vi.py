@@ -1,0 +1,61 @@
+"""The paper's variational-inequality feature rule, as a pluggable rule.
+
+This is a port of the original hard-wired screen (``core/screening.py``,
+paper Sec. 6) into the :class:`~repro.core.rules.base.ScreeningRule`
+protocol. The math stays in ``core/screening.py`` — shared with the Pallas
+kernel and the sharded screen — this class owns the *policy*: per-feature
+bound, keep threshold, and the theta-independent reduction cache that makes
+the per-lambda cost one ``X @ (y * theta1)`` sweep (paper Sec. 6.4).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..screening import (
+    SAFE_TAU,
+    FeatureReductions,
+    feature_reductions,
+    screen_bounds_from_reductions,
+)
+from .base import AXIS_FEATURES, ConvexRegion, ScreeningRule, register_rule
+
+__all__ = ["FeatureVIRule"]
+
+
+@register_rule("feature_vi")
+class FeatureVIRule(ScreeningRule):
+    """Safe feature screening: discard feature ``j`` when
+    ``max_{theta in K} |fhat_j^T theta| < tau`` (paper Algorithm 1).
+
+    A-priori safe: a discarded feature provably has ``w_j*(lam2) = 0`` (given
+    ``||theta1 - theta*(lam1)|| <= region.delta``), so no verification pass is
+    needed.
+    """
+
+    axis = AXIS_FEATURES
+    needs_verification = False
+
+    def __init__(self, tau: float = SAFE_TAU):
+        self.tau = float(tau)
+        self._static: Optional[tuple[jax.Array, jax.Array, jax.Array]] = None
+
+    def prepare(self, X: jax.Array, y: jax.Array) -> None:
+        """Cache the three theta-independent reductions for a whole path."""
+        ones = jnp.ones((X.shape[1],), X.dtype)
+        self._static = (X @ y, X @ ones, jnp.sum(X * X, axis=1))
+
+    def bounds(self, X: jax.Array, y: jax.Array, region: ConvexRegion) -> jax.Array:
+        d_theta = X @ (y * region.theta1)
+        if self._static is not None:
+            d_one, d_y, d_sq = self._static
+            red = FeatureReductions(d_theta=d_theta, d_one=d_one, d_y=d_y, d_sq=d_sq)
+        else:
+            red = feature_reductions(X, y, region.theta1)._replace(d_theta=d_theta)
+        return screen_bounds_from_reductions(red, region.shared)
+
+    def keep(self, bounds: jax.Array) -> jax.Array:
+        return bounds >= self.tau

@@ -72,8 +72,10 @@ def lipschitz_estimate(X: jax.Array, n_iters: int = 30, key: Optional[jax.Array]
     return jnp.linalg.norm(v)  # ||A^T A v|| / ||v|| with ||v||=1 pre-normalized
 
 
-def _objective(X, y, w, b, lam):
+def _objective(X, y, w, b, lam, sample_mask=None):
     xi = jnp.maximum(0.0, 1.0 - y * (X.T @ w + b))
+    if sample_mask is not None:
+        xi = xi * sample_mask
     return 0.5 * jnp.sum(xi * xi) + lam * jnp.sum(jnp.abs(w))
 
 
@@ -87,10 +89,15 @@ def fista_solve(
     max_iters: int = 2000,
     tol: float = 1e-9,
     L: Optional[jax.Array] = None,
+    sample_mask: Optional[jax.Array] = None,
 ) -> FistaResult:
     """Solve the primal to relative-objective tolerance ``tol``.
 
     ``X``: (m, n) features x samples. Warm starts via ``w0``/``b0``.
+    ``sample_mask`` (0/1 over samples) drops columns from the loss without
+    changing shapes — with a binary mask, masking ``xi`` is exactly the
+    problem with those samples removed (screened samples and gather-mode
+    padding columns both use this; see core/path.py).
     """
     m = X.shape[0]
     lam = jnp.asarray(lam, X.dtype)
@@ -103,7 +110,8 @@ def fista_solve(
     L = jnp.maximum(L * 1.01, 1e-12)  # small safety factor
     inv_L = 1.0 / L
 
-    obj0 = _objective(X, y, w0, b0, lam)
+    sm = sample_mask
+    obj0 = _objective(X, y, w0, b0, lam, sm)
     init = FistaState(
         w=w0, b=jnp.asarray(b0, X.dtype), w_prev=w0, b_prev=jnp.asarray(b0, X.dtype),
         t=jnp.asarray(1.0, X.dtype), k=jnp.asarray(0, jnp.int32),
@@ -121,22 +129,26 @@ def fista_solve(
         zb = s.b + beta * (s.b - s.b_prev)
 
         xi = jnp.maximum(0.0, 1.0 - y * (X.T @ zw + zb))
+        if sm is not None:
+            xi = xi * sm
         gw = -(X @ (y * xi))
         gb = -jnp.sum(y * xi)
 
         w_new = soft_threshold(zw - inv_L * gw, lam * inv_L)
         b_new = zb - inv_L * gb
 
-        obj_new = _objective(X, y, w_new, b_new, lam)
+        obj_new = _objective(X, y, w_new, b_new, lam, sm)
         # monotone restart: if the extrapolated step increased the objective,
         # fall back to a plain proximal step from (w, b).
         def plain_step():
             xi_p = jnp.maximum(0.0, 1.0 - y * (X.T @ s.w + s.b))
+            if sm is not None:
+                xi_p = xi_p * sm
             gw_p = -(X @ (y * xi_p))
             gb_p = -jnp.sum(y * xi_p)
             w_p = soft_threshold(s.w - inv_L * gw_p, lam * inv_L)
             b_p = s.b - inv_L * gb_p
-            return w_p, b_p, _objective(X, y, w_p, b_p, lam), jnp.asarray(1.0, X.dtype)
+            return w_p, b_p, _objective(X, y, w_p, b_p, lam, sm), jnp.asarray(1.0, X.dtype)
 
         bad = obj_new > s.obj
         w_new, b_new, obj_new, t_next = jax.tree_util.tree_map(

@@ -59,6 +59,51 @@ def screen_bounds_op(
     return out[:m]
 
 
+def sample_surplus_op(
+    X: jax.Array,
+    w: jax.Array,
+    y: jax.Array,
+    b,
+    dw=float("inf"),
+    db=float("inf"),
+    u_prev: jax.Array | None = None,
+    shrink_factor: float = 2.0,
+    margin_floor: float = 1e-3,
+    block_m: int = 256,
+    block_n: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused sample-screening margin surpluses (kernel-backed).
+
+    One transposed sweep of X computes ``u = X^T w + b`` and ``||x_i||^2``
+    and finalizes ``y*u - 1 - slack`` in VMEM (see rules/sample_vi.py for
+    the slack models). ``u_prev=None`` disables the secant model.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = X.shape
+    wf = w.astype(jnp.float32)
+    lhs = jnp.stack(
+        [wf, jnp.zeros_like(wf), jnp.zeros_like(wf), jnp.zeros_like(wf)], axis=1
+    )
+    yf = y.astype(jnp.float32)
+    has_history = u_prev is not None
+    up = (u_prev.astype(jnp.float32) if has_history else jnp.zeros_like(yf))
+    aux = jnp.stack([yf, up], axis=1)
+    scalars = _screen.pack_sample_scalars(
+        b, dw, db, shrink_factor, margin_floor, has_history
+    )
+
+    Xp = _pad_to(_pad_to(X, block_m, 0), block_n, 1)
+    lhs_p = _pad_to(lhs, block_m, 0)   # zero rows: no u / ||x||^2 contribution
+    aux_p = _pad_to(aux, block_n, 0)   # y=0 columns are sliced off below
+    out = _screen.screen_bounds_pallas(
+        Xp, lhs_p, scalars, aux=aux_p, axis="samples",
+        block_m=block_m, block_n=block_n, interpret=interpret,
+    )
+    return out[:n]
+
+
 def hinge_margin_op(
     X: jax.Array, w: jax.Array, y: jax.Array, b,
     block_m: int = 256, block_n: int = 512, interpret: bool | None = None,

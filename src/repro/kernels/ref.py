@@ -28,6 +28,33 @@ def screen_bounds_ref(
     return screen_bounds_from_reductions(red, sh)
 
 
+def sample_surplus_ref(
+    X: jax.Array,
+    y: jax.Array,
+    w: jax.Array,
+    b,
+    dw=float("inf"),
+    db=float("inf"),
+    u_prev: jax.Array | None = None,
+    shrink_factor: float = 2.0,
+    margin_floor: float = 1e-3,
+) -> jax.Array:
+    """Oracle for the sample-axis screen kernel (fp32 accumulation).
+
+    Independent restatement of rules/sample_vi.sample_margin_surplus:
+    ``y*u - 1 - min(||x_i|| * dw + db, shrink * |u - u_prev| + floor)``.
+    """
+    big = jnp.float32(1e30)
+    Xf = X.astype(jnp.float32)
+    u = Xf.T @ w.astype(jnp.float32) + jnp.asarray(b, jnp.float32)
+    x_norm = jnp.sqrt(jnp.sum(Xf * Xf, axis=0))
+    slack = jnp.minimum(x_norm * jnp.minimum(dw, big) + jnp.minimum(db, big), big)
+    if u_prev is not None:
+        secant = shrink_factor * jnp.abs(u - u_prev.astype(jnp.float32)) + margin_floor
+        slack = jnp.minimum(slack, secant)
+    return y.astype(jnp.float32) * u - 1.0 - slack
+
+
 def hinge_stats_ref(
     X: jax.Array, y: jax.Array, w: jax.Array, b
 ) -> tuple[jax.Array, jax.Array, jax.Array]:

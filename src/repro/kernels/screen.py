@@ -1,26 +1,38 @@
-"""Fused Pallas TPU kernel for the safe-screening bound (paper Alg. 1).
+"""Fused Pallas TPU kernels for screening bounds, parameterized by axis.
 
-One pass over X computes, per feature row j, the four reductions
+One kernel family, two reduction axes, one shared pattern: sweep X once,
+accumulate a (units, 4) reduction block in VMEM across the grid's reduction
+axis, and on the final grid step apply a ~30-flop closed-form finalizer
+entirely in VMEM. X is read from HBM exactly once; nothing of size
+O(units x 4) round-trips to HBM between the reduction and the bound.
+
+``axis="features"`` (paper Alg. 1): per feature row j, reduce over samples
 
     d_theta = f_j . (y*theta1),  d_one = f_j . y,
     d_y     = f_j . 1,           d_sq  = f_j . f_j
 
-and — on the final sample-axis grid step — applies the ~30-flop closed-form
-bound (three KKT cases, see core/screening.py) entirely in VMEM. X is read
-from HBM exactly once; nothing of size O(m x 4) round-trips to HBM between
-the reduction and the bound evaluation.
+then the three-case VI bound on ``|fhat_j^T theta2|`` (core/screening.py).
 
-TPU adaptation notes (vs the paper's per-feature CPU loop):
-  * feature tiles of ``block_m`` rows ride the VPU sublanes (multiples of 8);
-    sample tiles of ``block_n`` columns ride the 128-wide lanes;
-  * the three dot-reductions are expressed as one (bm, bn) x (bn, 4) matmul
-    so the MXU does the heavy lifting at fp32 accumulation;
-  * the grid is (m/bm, n/bn) with the sample axis innermost ("arbitrary"
-    semantics), accumulating into a VMEM scratch block that lives across the
-    n-sweep — the canonical Pallas reduction pattern.
+``axis="samples"`` (core/rules/sample_vi.py): per sample column i, the
+transposed sweep reduces over features
+
+    u_i = x_i . w1,              s_sq_i = ||x_i||^2
+
+then the margin-surplus finalizer: ``y_i (u_i + b1) - 1 - slack_i`` with
+``slack_i = min(sqrt(s_sq_i) * dw + db,  shrink * |u_i + b1 - u0_i| +
+floor)`` (trust-region and secant slack models; see the rule's docstring).
+
+TPU adaptation notes (vs the paper's per-unit CPU loop):
+  * unit tiles ride the VPU sublanes; reduction tiles ride the 128-wide
+    lanes (feature axis) or MXU contraction (both axes);
+  * the dot-reductions are one (bu, br) x (br, 4) matmul so the MXU does the
+    heavy lifting at fp32 accumulation;
+  * the grid is (units/bu, reduction/br) with the reduction axis innermost
+    ("arbitrary" semantics), accumulating into a VMEM scratch block that
+    lives across the sweep — the canonical Pallas reduction pattern.
 
 VMEM budget per program instance (defaults bm=256, bn=512, fp32):
-  X tile 512 KiB + rhs tile 8 KiB + acc 4 KiB << 16 MiB VMEM.
+  X tile 512 KiB + side tiles <16 KiB + acc 8 KiB << 16 MiB VMEM.
 """
 
 from __future__ import annotations
@@ -32,11 +44,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NUM_SCALARS = 12  # packed ScreenShared scalars, padded
+NUM_SCALARS = 12  # packed per-axis scalars, padded to a common length
 
+_BIG = 1e30  # stands in for inf inside the kernel (avoids 0 * inf = nan)
+
+
+# --------------------------------------------------------------------------
+# scalar packing
+# --------------------------------------------------------------------------
 
 def pack_shared(sh) -> jax.Array:
-    """Pack ScreenShared scalars into a flat fp32 vector for the kernel."""
+    """Pack ScreenShared scalars into a flat fp32 vector (feature axis)."""
     vals = [
         sh.inv_lam1, sh.inv_lam2, sh.yc, sh.ysq, sh.r_h_sq, sh.g0,
         sh.qa_sq, sh.a_norm, sh.a_dot_y,
@@ -46,8 +64,45 @@ def pack_shared(sh) -> jax.Array:
     return jnp.pad(v, (0, NUM_SCALARS - v.shape[0]))
 
 
-def _bound_from_acc(acc, sc):
-    """Closed-form bound on |fhat^T theta2| from the 4 reductions (vector bm)."""
+def pack_sample_scalars(b1, dw, db, shrink_factor, margin_floor,
+                        has_history) -> jax.Array:
+    """Pack the sample-axis finalizer scalars (infs clamped to _BIG)."""
+    vals = jnp.stack([
+        jnp.asarray(b1, jnp.float32),
+        jnp.minimum(jnp.asarray(dw, jnp.float32), _BIG),
+        jnp.minimum(jnp.asarray(db, jnp.float32), _BIG),
+        jnp.asarray(shrink_factor, jnp.float32),
+        jnp.asarray(margin_floor, jnp.float32),
+        jnp.where(jnp.asarray(has_history, bool), 1.0, 0.0).astype(jnp.float32),
+    ])
+    return jnp.pad(vals, (0, NUM_SCALARS - vals.shape[0]))
+
+
+# --------------------------------------------------------------------------
+# closed-form finalizers (vector over the unit tile)
+# --------------------------------------------------------------------------
+
+def _t_cases(v_ch, qv_qa, qv_sq, r_h, g0, qa_sq, hv):
+    """One-sided ``max_{theta in K} v^T theta`` from hyperplane-projected
+    stats of v — the three KKT cases of core/screening._t_max."""
+    eps = jnp.float32(1e-30)
+    qv_norm = jnp.sqrt(jnp.maximum(qv_sq, 0.0))
+
+    ball = v_ch + r_h * qv_norm
+    at_ball = g0 + r_h * qv_qa / jnp.maximum(qv_norm, eps)
+
+    qa_sq_s = jnp.maximum(qa_sq, eps)
+    mu = qv_qa / qa_sq_s
+    vperp = jnp.sqrt(jnp.maximum(qv_sq - mu * mu * qa_sq_s, 0.0))
+    rho = jnp.sqrt(jnp.maximum(r_h * r_h - g0 * g0 / qa_sq_s, 0.0))
+    cut = v_ch - mu * g0 + rho * vperp
+
+    use_ball = (at_ball >= 0.0) | (hv < 0.5) | (qv_norm <= eps)
+    return jnp.where(use_ball, ball, cut)
+
+
+def _feature_bound_from_acc(acc, sc):
+    """VI bound on |fhat^T theta2| from the 4 reductions (vector bm)."""
     eps = jnp.float32(1e-30)
     d_theta, d_one, d_y, d_sq = acc[:, 0], acc[:, 1], acc[:, 2], acc[:, 3]
     inv1, inv2 = sc[0], sc[1]
@@ -61,28 +116,30 @@ def _bound_from_acc(acc, sc):
     qv_qa = v_a - d_y * a_dot_y / ysq
 
     r_h = jnp.sqrt(jnp.maximum(r_h_sq, 0.0))
-    qv_norm = jnp.sqrt(qv_sq)
-
-    ball_pos = v_ch + r_h * qv_norm
-    ball_neg = -v_ch + r_h * qv_norm
-    at_pos = g0 + r_h * qv_qa / jnp.maximum(qv_norm, eps)
-    at_neg = g0 - r_h * qv_qa / jnp.maximum(qv_norm, eps)
-
-    qa_sq_s = jnp.maximum(qa_sq, eps)
-    mu = qv_qa / qa_sq_s
-    vperp = jnp.sqrt(jnp.maximum(qv_sq - mu * mu * qa_sq_s, 0.0))
-    rho = jnp.sqrt(jnp.maximum(r_h_sq - g0 * g0 / qa_sq_s, 0.0))
-    cut_pos = v_ch - mu * g0 + rho * vperp
-    cut_neg = -v_ch + mu * g0 + rho * vperp
-
-    use_ball_pos = (at_pos >= 0.0) | (hv < 0.5) | (qv_norm <= eps)
-    use_ball_neg = (at_neg >= 0.0) | (hv < 0.5) | (qv_norm <= eps)
-    m_pos = jnp.where(use_ball_pos, ball_pos, cut_pos)
-    m_neg = jnp.where(use_ball_neg, ball_neg, cut_neg)
+    m_pos = _t_cases(v_ch, qv_qa, qv_sq, r_h, g0, qa_sq, hv)
+    m_neg = _t_cases(-v_ch, -qv_qa, qv_sq, r_h, g0, qa_sq, hv)
     return jnp.maximum(m_pos, m_neg)
 
 
-def _screen_kernel(x_ref, rhs_ref, sc_ref, out_ref, acc_ref, *, n_steps: int):
+def _sample_surplus_from_acc(acc, aux, sc):
+    """Margin surplus y*(u+b1) - 1 - slack from the 2 transposed reductions."""
+    u_part, x_sq = acc[:, 0], acc[:, 1]
+    y, u_prev = aux[:, 0], aux[:, 1]
+    b1, dw, db = sc[0], sc[1], sc[2]
+    shrink, floor, has_hist = sc[3], sc[4], sc[5]
+
+    u = u_part + b1
+    slack_tr = jnp.sqrt(jnp.maximum(x_sq, 0.0)) * dw + db
+    secant = shrink * jnp.abs(u - u_prev) + floor
+    slack = jnp.minimum(slack_tr, jnp.where(has_hist > 0.5, secant, _BIG))
+    return y * u - 1.0 - jnp.minimum(slack, _BIG)
+
+
+# --------------------------------------------------------------------------
+# kernels
+# --------------------------------------------------------------------------
+
+def _feature_kernel(x_ref, rhs_ref, sc_ref, out_ref, acc_ref, *, n_steps: int):
     """Grid = (m_blocks, n_blocks); sample axis (dim 1) is the reduction."""
     j = pl.program_id(1)
 
@@ -102,37 +159,100 @@ def _screen_kernel(x_ref, rhs_ref, sc_ref, out_ref, acc_ref, *, n_steps: int):
 
     @pl.when(j == n_steps - 1)
     def _finalize():
-        sc = sc_ref[...]
-        out_ref[...] = _bound_from_acc(acc_ref[...], sc)
+        out_ref[...] = _feature_bound_from_acc(acc_ref[...], sc_ref[...])
 
+
+def _sample_kernel(x_ref, lhs_ref, aux_ref, sc_ref, out_ref, acc_ref, *,
+                   n_steps: int):
+    """Grid = (n_blocks, m_blocks); feature axis (dim 1) is the reduction."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (bm, bn) — transposed sweep
+    lhs = lhs_ref[...].astype(jnp.float32)      # (bm, 4) cols: w1, 0, 0, 0
+    dots = jax.lax.dot_general(
+        x, lhs, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                            # (bn, 4); col 0 is u partial
+    sq = jnp.sum(x * x, axis=0)                  # (bn,) col sums: ||x_i||^2
+    upd = dots.at[:, 1].add(sq)
+    acc_ref[...] += upd
+
+    @pl.when(j == n_steps - 1)
+    def _finalize():
+        out_ref[...] = _sample_surplus_from_acc(
+            acc_ref[...], aux_ref[...], sc_ref[...]
+        )
+
+
+# --------------------------------------------------------------------------
+# entry point
+# --------------------------------------------------------------------------
 
 @functools.partial(
-    jax.jit, static_argnames=("block_m", "block_n", "interpret")
+    jax.jit, static_argnames=("axis", "block_m", "block_n", "interpret")
 )
 def screen_bounds_pallas(
     X: jax.Array,
-    rhs: jax.Array,       # (n, 4) stacked [y*theta1, y, ones, zeros]
-    scalars: jax.Array,   # (NUM_SCALARS,) packed ScreenShared
+    rhs: jax.Array,
+    scalars: jax.Array,
+    aux: jax.Array | None = None,
+    axis: str = "features",
     block_m: int = 256,
     block_n: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    """Bounds for all m features; X (m, n) padded to block multiples by ops.py."""
+    """Fused per-unit screening bounds; ``axis`` picks the reduction axis.
+
+    ``axis="features"``: ``rhs`` is the (n, 4) stacked
+    ``[y*theta1, y, ones, zeros]``, ``scalars`` packs ScreenShared
+    (``pack_shared``), ``aux`` unused; returns (m,) VI bounds.
+
+    ``axis="samples"``: ``rhs`` is the (m, 4) stacked ``[w1, 0, 0, 0]``,
+    ``aux`` is the (n, 2) stacked ``[y, u_prev]``, ``scalars`` packs the
+    slack model (``pack_sample_scalars``); returns (n,) margin surpluses.
+
+    X is (m, n), pre-padded to block multiples (see kernels/ops.py).
+    """
     m, n = X.shape
     assert m % block_m == 0 and n % block_n == 0, (m, n, block_m, block_n)
-    grid = (m // block_m, n // block_n)
 
-    kernel = functools.partial(_screen_kernel, n_steps=grid[1])
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
-            pl.BlockSpec((block_n, 4), lambda i, j: (j, 0)),
-            pl.BlockSpec((NUM_SCALARS,), lambda i, j: (0,)),
-        ],
-        out_specs=pl.BlockSpec((block_m,), lambda i, j: (i,)),
-        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((block_m, 4), jnp.float32)],
-        interpret=interpret,
-    )(X, rhs, scalars)
+    if axis == "features":
+        grid = (m // block_m, n // block_n)
+        kernel = functools.partial(_feature_kernel, n_steps=grid[1])
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+                pl.BlockSpec((block_n, 4), lambda i, j: (j, 0)),
+                pl.BlockSpec((NUM_SCALARS,), lambda i, j: (0,)),
+            ],
+            out_specs=pl.BlockSpec((block_m,), lambda i, j: (i,)),
+            out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((block_m, 4), jnp.float32)],
+            interpret=interpret,
+        )(X, rhs, scalars)
+
+    if axis == "samples":
+        assert aux is not None, "sample axis needs aux = stack([y, u_prev])"
+        grid = (n // block_n, m // block_m)
+        kernel = functools.partial(_sample_kernel, n_steps=grid[1])
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, block_n), lambda i, j: (j, i)),
+                pl.BlockSpec((block_m, 4), lambda i, j: (j, 0)),
+                pl.BlockSpec((block_n, 2), lambda i, j: (i, 0)),
+                pl.BlockSpec((NUM_SCALARS,), lambda i, j: (0,)),
+            ],
+            out_specs=pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((block_n, 4), jnp.float32)],
+            interpret=interpret,
+        )(X, rhs, aux, scalars)
+
+    raise ValueError(f"axis must be 'features' or 'samples', got {axis!r}")

@@ -5,6 +5,13 @@ Runs the sequential-screening regularization path with the 2-D sharded
 the path state ((lambda_k, w, b, theta) per step) so a preempted path job
 resumes at the last completed lambda.
 
+Screening is configured through the rule registry (core/rules):
+``--rules feature_vi|sample_vi|composite|none``. The feature rule dispatches
+to the sharded bound sweep (``screen_sharded`` — same math, psum-reduced);
+sample rules run their margin test on the replicated sample axis and mask
+the loss inside ``fista_sharded`` (static shapes, shard-friendly), with the
+rule's KKT verification loop re-admitting violators before a step commits.
+
 CPU smoke: PYTHONPATH=src python -m repro.launch.train_svm --m 2000 --n 400
 """
 
@@ -27,6 +34,14 @@ from repro.core import (
 )
 from repro.core.distributed import fista_sharded, screen_sharded, svm_mesh
 from repro.core.dual import safe_theta_and_delta
+from repro.core.rules import (
+    AXIS_FEATURES,
+    AXIS_SAMPLES,
+    ConvexRegion,
+    FeatureVIRule,
+    make_rules,
+)
+from repro.core.rules.base import solve_with_verification
 from repro.data import make_sparse_classification
 
 
@@ -36,10 +51,25 @@ def run_path(
     model: int = 1, data: int = 1,
     tol: float = 1e-9, max_iters: int = 4000,
     ckpt_dir: str = "artifacts/svm_ckpt", log=print,
+    rules: str = "feature_vi",
+    shrink_factor: float = 1.5,
+    max_verify_rounds: int = 3,
 ):
     mesh = svm_mesh(model=model, data=data)
     Xj, yj = jnp.asarray(X), jnp.asarray(y)
     m, n = Xj.shape
+    X_np, y_np = np.asarray(X), np.asarray(y)
+
+    rule_list = make_rules(None if rules in (None, "none") else rules)
+    feature_rules = [r for r in rule_list if r.axis == AXIS_FEATURES]
+    sample_rules = [r for r in rule_list if r.axis == AXIS_SAMPLES]
+    # the stock feature rule dispatches to the sharded psum sweep (same
+    # bounds, mesh-parallel); other feature rules go through their generic
+    # bounds/keep. Only the generic-path rules need their prepare() caches.
+    sharded_feature = [r for r in feature_rules if type(r) is FeatureVIRule]
+    generic_feature = [r for r in feature_rules if type(r) is not FeatureVIRule]
+    for rule in (*generic_feature, *sample_rules):
+        rule.prepare(Xj, yj)
 
     lmax = float(lambda_max(Xj, yj))
     lambdas = default_lambda_grid(lmax, n_lambdas, lam_min_ratio)
@@ -50,12 +80,16 @@ def run_path(
         "b": jnp.asarray(float(jnp.mean(yj)), jnp.float32),
         "theta": theta_at_lambda_max(yj, jnp.asarray(lmax)),
         "delta": jnp.asarray(0.0, jnp.float32),
+        "dw": jnp.asarray(jnp.inf, jnp.float32),
+        "db": jnp.asarray(jnp.inf, jnp.float32),
         "k": jnp.asarray(0, jnp.int32),
     }
     start_k = 1
     latest = mgr.latest()
     if latest is not None:
-        state, manifest = mgr.restore(latest, state)
+        # strict=False: checkpoints written before the dw/db trust-region
+        # fields existed restore with those fields at their defaults
+        state, manifest = mgr.restore(latest, state, strict=False)
         start_k = int(manifest["extra"]["next_k"])
         log(f"[svm] resumed path at lambda index {start_k}")
 
@@ -63,23 +97,60 @@ def run_path(
     for k in range(start_k, len(lambdas)):
         lam1, lam2 = float(lambdas[k - 1]), float(lambdas[k])
         t0 = time.perf_counter()
-        keep, bounds = screen_sharded(mesh, Xj, yj, lam1, lam2, state["theta"])
+
+        region = ConvexRegion.build(
+            yj, lam1, lam2, state["theta"], delta=state["delta"],
+            w1=state["w"], b1=float(state["b"]),
+            dw=float(state["dw"]), db=float(state["db"]),
+        )
+        keep = jnp.ones((m,), bool)
+        for rule in sharded_feature:
+            k_mask, _ = screen_sharded(mesh, Xj, yj, lam1, lam2,
+                                       state["theta"], tau=rule.tau)
+            keep = keep & k_mask
+        for rule in generic_feature:
+            keep = keep & jnp.asarray(rule.keep(rule.bounds(Xj, yj, region)))
+        s_mask = np.ones((n,), dtype=bool)
+        for rule in sample_rules:
+            s_mask &= np.asarray(rule.keep(rule.bounds(Xj, yj, region)))
+
         kept = int(jnp.sum(keep))
         # mask-mode reduction keeps static shapes across the sharded solve
         Xr = Xj * keep[:, None].astype(Xj.dtype)
-        res = fista_sharded(mesh, Xr, yj, lam2, max_iters=max_iters, tol=tol,
-                            w0=state["w"] * keep, b0=state["b"])
+        warm = {"w": state["w"] * keep, "b": state["b"]}
+
+        def solve(mask):
+            r = fista_sharded(
+                mesh, Xr, yj, lam2, max_iters=max_iters, tol=tol,
+                w0=warm["w"], b0=warm["b"],
+                sample_mask=jnp.asarray(mask, jnp.float32),
+            )
+            warm["w"], warm["b"] = r.w, r.b
+            return r, np.asarray(r.w, np.float64), float(r.b)
+
+        res, _, _, rounds = solve_with_verification(
+            solve, sample_rules, X_np, y_np, s_mask,
+            max_rounds=max_verify_rounds,
+        )
+
+        dw_obs = float(jnp.linalg.norm(res.w - state["w"]))
+        db_obs = abs(float(res.b) - float(state["b"]))
         theta, delta = safe_theta_and_delta(Xj, yj, res.w, res.b,
                                             jnp.asarray(lam2))
         state = {"w": res.w, "b": res.b, "theta": theta, "delta": delta,
+                 "dw": jnp.asarray(shrink_factor * dw_obs, jnp.float32),
+                 "db": jnp.asarray(shrink_factor * db_obs, jnp.float32),
                  "k": jnp.asarray(k, jnp.int32)}
         dt = time.perf_counter() - t0
         nnz = int(jnp.sum(jnp.abs(res.w) > 1e-8))
-        results.append({"lam": lam2, "kept": kept, "nnz": nnz,
-                        "obj": float(res.obj), "iters": int(res.n_iters),
+        kept_n = int(s_mask.sum())
+        results.append({"lam": lam2, "kept": kept, "kept_samples": kept_n,
+                        "nnz": nnz, "obj": float(res.obj),
+                        "iters": int(res.n_iters), "verify_rounds": rounds,
                         "wall_s": dt})
-        log(f"[svm] k={k} lam={lam2:.4f} kept={kept}/{m} nnz={nnz} "
-            f"obj={float(res.obj):.5f} ({dt:.2f}s)")
+        log(f"[svm] k={k} lam={lam2:.4f} kept={kept}/{m} "
+            f"samples={kept_n}/{n} nnz={nnz} obj={float(res.obj):.5f} "
+            f"({dt:.2f}s)")
         mgr.save(k, state, extra={"next_k": k + 1, "lambdas": list(map(float, lambdas))})
     return results
 
@@ -91,13 +162,17 @@ def main():
     ap.add_argument("--n-lambdas", type=int, default=8)
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--rules", default="feature_vi",
+                    help="screening rules: feature_vi|sample_vi|composite|none "
+                         "(comma-separated for a custom mix)")
     ap.add_argument("--ckpt-dir", default="artifacts/svm_ckpt")
     args = ap.parse_args()
 
+    rules = args.rules if "," not in args.rules else args.rules.split(",")
     ds = make_sparse_classification(m=args.m, n=args.n, seed=0)
     results = run_path(ds.X, ds.y, n_lambdas=args.n_lambdas,
                        model=args.model, data=args.data,
-                       ckpt_dir=args.ckpt_dir)
+                       ckpt_dir=args.ckpt_dir, rules=rules)
     Path("artifacts").mkdir(exist_ok=True)
     Path("artifacts/svm_path.json").write_text(json.dumps(results, indent=2))
 

@@ -6,8 +6,18 @@ import pytest
 
 from repro.core import lambda_max, theta_at_lambda_max
 from repro.data import make_sparse_classification
-from repro.kernels.ops import hinge_grad_op, hinge_margin_op, screen_bounds_op
-from repro.kernels.ref import hinge_grad_ref, hinge_stats_ref, screen_bounds_ref
+from repro.kernels.ops import (
+    hinge_grad_op,
+    hinge_margin_op,
+    sample_surplus_op,
+    screen_bounds_op,
+)
+from repro.kernels.ref import (
+    hinge_grad_ref,
+    hinge_stats_ref,
+    sample_surplus_ref,
+    screen_bounds_ref,
+)
 
 SHAPES = [(64, 64), (128, 256), (300, 200), (513, 130)]  # incl. non-multiples
 DTYPES = [jnp.float32, jnp.bfloat16]
@@ -49,6 +59,44 @@ def test_screen_kernel_block_shape_invariance(blocks):
                          block_m=bm, block_n=bn, interpret=True)
     )
     np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5 * max(1.0, np.abs(ref).max()))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("history", [False, True])
+def test_sample_kernel_matches_oracle(shape, dtype, history):
+    """Transposed (sample-axis) sweep == pure-XLA margin surplus, both slacks."""
+    m, n = shape
+    X, y = _data(m, n, dtype, seed=5)
+    rng = np.random.default_rng(9)
+    w = jnp.asarray(rng.standard_normal(m) * (rng.random(m) < 0.2), jnp.float32)
+    b = -0.23
+    u_prev = jnp.asarray(rng.standard_normal(n), jnp.float32) if history else None
+    kw = dict(dw=0.37, db=0.05, u_prev=u_prev, shrink_factor=2.0, margin_floor=1e-3)
+    ref = np.asarray(sample_surplus_ref(X, y, w, b, **kw))
+    out = np.asarray(sample_surplus_op(X, w, y, b, block_m=64, block_n=128,
+                                       interpret=True, **kw))
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(out, ref, rtol=tol, atol=tol * max(1.0, np.abs(ref).max()))
+
+
+def test_sample_kernel_no_trust_region_keeps_everything():
+    """dw=inf and no history => every surplus is hugely negative (keep all)."""
+    X, y = _data(128, 96, jnp.float32, seed=8)
+    w = jnp.zeros((128,), jnp.float32)
+    out = np.asarray(sample_surplus_op(X, w, y, 0.0, block_m=64, block_n=128,
+                                       interpret=True))
+    assert np.all(out < 0.0)
+    assert np.all(np.isfinite(out))
+
+
+def test_sample_kernel_padding_is_inert():
+    X, y = _data(100, 90, jnp.float32, seed=6)
+    w = jnp.asarray(np.random.default_rng(3).standard_normal(100), jnp.float32)
+    kw = dict(dw=0.1, db=0.01, interpret=True)
+    out1 = np.asarray(sample_surplus_op(X, w, y, 0.1, block_m=64, block_n=128, **kw))
+    out2 = np.asarray(sample_surplus_op(X, w, y, 0.1, block_m=128, block_n=256, **kw))
+    np.testing.assert_allclose(out1, out2, rtol=2e-5, atol=2e-5)
 
 
 @pytest.mark.parametrize("shape", SHAPES)

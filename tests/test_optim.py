@@ -2,6 +2,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# optional dev dependency (pip install -e .[dev]); the optimizer property
+# tests leans hardest on hypothesis' numeric edge cases, so skip the module
+# rather than run a weakened fallback (cf. tests/_hyp_compat.py used by the
+# core screening/solver suites)
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.optim import (

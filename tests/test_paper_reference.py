@@ -9,7 +9,11 @@ module docstrings)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep; see tests/_hyp_compat.py + pyproject
+    from _hyp_compat import given, settings, st
 
 from repro.core import (
     fista_solve,

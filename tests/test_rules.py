@@ -1,0 +1,151 @@
+"""Property tests for the pluggable screening-rule subsystem (core/rules).
+
+Invariants:
+  R1 (registry):       every built-in rule round-trips through the registry
+                       and composite flattens to one rule per axis.
+  R2 (sample safety):  zero false sample rejections — every sample screened
+                       by the path driver has xi_i = 0 at the accepted
+                       solution (exactly) and at an independently solved
+                       full optimum (to solver tolerance).
+  R3 (path equiv):     the composite path == the unscreened path within
+                       solver tolerance, for reduce="gather" and "mask".
+  R4 (composition):    composite keeps <= the units kept by either single
+                       rule, per axis, per step.
+  R5 (cap validity):   the certified a-priori slack caps upper-bound the
+                       true slacks (the sample-side analogue of S2 in
+                       tests/test_screening.py).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompositeRule,
+    ConvexRegion,
+    FeatureVIRule,
+    PathDriver,
+    SampleVIRule,
+    available_rules,
+    fista_solve,
+    get_rule,
+    lambda_max,
+    make_rules,
+    svm_path,
+)
+from repro.core.dual import safe_theta_and_delta, xi_from_primal
+from repro.core.rules import sample_slack_caps
+from repro.data import make_sparse_classification
+
+DEEP_GRID = dict(n_lambdas=8, lam_min_ratio=0.02)
+
+
+# -- R1: registry ----------------------------------------------------------
+
+def test_registry_roundtrip():
+    assert {"feature_vi", "sample_vi", "composite"} <= set(available_rules())
+    assert isinstance(get_rule("feature_vi"), FeatureVIRule)
+    assert isinstance(get_rule("sample_vi"), SampleVIRule)
+    with pytest.raises(KeyError):
+        get_rule("no_such_rule")
+
+
+def test_make_rules_flattens_composite():
+    rules = make_rules("composite")
+    assert {r.axis for r in rules} == {"features", "samples"}
+    assert make_rules(None) == []
+    assert [r.name for r in make_rules(["feature_vi"])] == ["feature_vi"]
+    custom = make_rules(CompositeRule([FeatureVIRule(tau=0.9)]))
+    assert len(custom) == 1 and custom[0].tau == 0.9
+
+
+# -- R2: zero false sample rejections --------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 3, 17])
+def test_sample_screening_zero_false_rejections(seed):
+    ds = make_sparse_classification(m=300, n=160, k_active=12, seed=seed)
+    X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+    res = PathDriver(rules="sample_vi", tol=1e-10, max_iters=20000).run(
+        ds.X, ds.y, **DEEP_GRID)
+    masks = res.extras["sample_masks"]
+    assert any((~m).any() for m in masks.values()), "no samples screened at all"
+    for k, mask in masks.items():
+        screened = ~mask
+        if not screened.any():
+            continue
+        # exact at the accepted solution: margins were KKT-verified >= 1
+        xi_acc = np.asarray(xi_from_primal(
+            X, y, jnp.asarray(res.weights[k], jnp.float32),
+            jnp.asarray(res.biases[k], jnp.float32)))
+        assert xi_acc[screened].max() <= 1e-6, (
+            f"step {k}: screened sample has xi={xi_acc[screened].max()} "
+            "at the accepted solution")
+        # and at an independently solved full optimum, to solver tolerance
+        full = fista_solve(X, y, jnp.asarray(float(res.lambdas[k])),
+                           max_iters=60000, tol=1e-13)
+        xi_true = np.asarray(xi_from_primal(X, y, full.w, full.b))
+        assert xi_true[screened].max() <= 1e-4, (
+            f"step {k}: screened sample has true xi={xi_true[screened].max()}")
+
+
+# -- R3: composite path equivalence ----------------------------------------
+
+@pytest.mark.parametrize("reduce", ["gather", "mask"])
+def test_composite_path_matches_unscreened(reduce):
+    ds = make_sparse_classification(m=250, n=120, k_active=10, seed=42)
+    kw = dict(tol=1e-10, max_iters=20000)
+    comp = PathDriver(rules="composite", reduce=reduce, **kw).run(
+        ds.X, ds.y, **DEEP_GRID)
+    off = PathDriver(rules=None, reduce=reduce, **kw).run(ds.X, ds.y, **DEEP_GRID)
+    np.testing.assert_allclose(comp.weights, off.weights, atol=3e-3)
+    np.testing.assert_allclose(comp.biases, off.biases, atol=3e-3)
+    np.testing.assert_allclose(comp.objectives, off.objectives,
+                               rtol=1e-3, atol=1e-3)
+
+
+# -- R4: composition keeps <= each single rule -----------------------------
+
+def test_composite_keeps_at_most_single_rules():
+    ds = make_sparse_classification(m=250, n=120, k_active=10, seed=5)
+    kw = dict(tol=1e-10, max_iters=20000)
+    comp = PathDriver(rules="composite", **kw).run(ds.X, ds.y, **DEEP_GRID)
+    feat = PathDriver(rules="feature_vi", **kw).run(ds.X, ds.y, **DEEP_GRID)
+    samp = PathDriver(rules="sample_vi", **kw).run(ds.X, ds.y, **DEEP_GRID)
+    assert np.all(comp.kept <= feat.kept)
+    assert np.all(comp.kept_samples <= samp.kept_samples)
+    # and the single-axis drivers never reduce the other axis
+    assert np.all(feat.kept_samples[1:] == 120)
+    assert np.all(samp.kept[1:] == 250)
+
+
+def test_svm_path_wrapper_backcompat_and_rules():
+    ds = make_sparse_classification(m=120, n=80, seed=2)
+    legacy = svm_path(ds.X, ds.y, n_lambdas=4, lam_min_ratio=0.3,
+                      screening=True, tol=1e-9, max_iters=4000)
+    assert legacy.rules == ("feature_vi",)
+    off = svm_path(ds.X, ds.y, n_lambdas=4, lam_min_ratio=0.3,
+                   screening=False, tol=1e-9, max_iters=4000)
+    assert off.rules == () and not off.screened
+    comp = svm_path(ds.X, ds.y, n_lambdas=4, lam_min_ratio=0.3,
+                    rules="composite", tol=1e-9, max_iters=4000)
+    assert set(comp.rules) == {"feature_vi", "sample_vi"}
+
+
+# -- R5: certified a-priori caps are valid upper bounds --------------------
+
+@pytest.mark.parametrize("seed,r1,r2", [(1, 0.5, 0.9), (9, 0.3, 0.7),
+                                        (23, 0.6, 0.5)])
+def test_sample_slack_caps_upper_bound_true_slack(seed, r1, r2):
+    ds = make_sparse_classification(m=200, n=120, k_active=8, seed=seed)
+    X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+    lmax = float(lambda_max(X, y))
+    lam1, lam2 = r1 * lmax, r2 * r1 * lmax
+    res1 = fista_solve(X, y, jnp.asarray(lam1), max_iters=50000, tol=1e-13)
+    theta1, delta = safe_theta_and_delta(X, y, res1.w, res1.b, jnp.asarray(lam1))
+    region = ConvexRegion.build(y, lam1, lam2, theta1, delta=delta)
+    caps = np.asarray(sample_slack_caps(region))
+
+    res2 = fista_solve(X, y, jnp.asarray(lam2), max_iters=50000, tol=1e-13)
+    xi2 = np.asarray(xi_from_primal(X, y, res2.w, res2.b))
+    assert np.all(caps >= xi2 - 5e-4), (
+        f"cap violated by {np.max(xi2 - caps)}")

@@ -11,7 +11,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep; see tests/_hyp_compat.py + pyproject
+    from _hyp_compat import given, settings, st
 
 from repro.core import (
     fista_solve,
@@ -124,12 +128,21 @@ def test_screening_becomes_aggressive_near_lambda_max():
     assert rates[0] > 0.5  # near lam_max almost everything screens out
 
 
+def _enable_x64():
+    """Compat: jax>=0.5 ``jax.enable_x64``; older jax has it in experimental."""
+    if hasattr(jax, "enable_x64"):
+        return jax.enable_x64(True)
+    from jax.experimental import enable_x64
+
+    return enable_x64()
+
+
 def test_bounds_dtype_stability():
     """fp32 vs fp64 bounds agree to fp32 tolerance (safety under rounding)."""
     X, y, lmax = _setup(200, 100, seed=13)
     theta1 = theta_at_lambda_max(y, jnp.asarray(lmax))
     b32 = np.asarray(screen_bounds(X, y, lmax, 0.3 * lmax, theta1))
-    with jax.enable_x64(True):
+    with _enable_x64():
         X64 = jnp.asarray(np.asarray(X), jnp.float64)
         y64 = jnp.asarray(np.asarray(y), jnp.float64)
         t64 = theta_at_lambda_max(y64, jnp.asarray(lmax, jnp.float64))

@@ -1,7 +1,11 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep; see tests/_hyp_compat.py + pyproject
+    from _hyp_compat import given, settings, st
 
 from repro.core import fista_solve, lambda_max, lipschitz_estimate, primal_objective
 from repro.data import make_sparse_classification
