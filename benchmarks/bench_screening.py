@@ -30,7 +30,7 @@ from repro.core.dual import safe_theta_and_delta
 from repro.data import make_sparse_classification
 
 RATIOS = (0.95, 0.9, 0.8, 0.7, 0.5, 0.3, 0.1)
-RULE_SPECS = ("feature_vi", "sample_vi", "composite", None)
+RULE_SPECS = ("feature_vi", "sample_vi", "composite", "dvi", None)
 TRAJECTORY_PATH = Path(__file__).resolve().parent.parent / "BENCH_screening.json"
 
 
@@ -109,8 +109,68 @@ def _rule_sweep(rows, log, m=2000, n=400, n_lambdas=10, lam_min_ratio=0.05):
             "verify_resolves": int(r.verify_rounds.sum()),
             "max_obj": float(np.max(np.abs(r.objectives))),
         })
+    _dynamic_sweep(rows, log, traj, m=m, n=n, n_lambdas=n_lambdas,
+                   lam_min_ratio=lam_min_ratio)
     TRAJECTORY_PATH.write_text(json.dumps(traj, indent=2))
     log(f"wrote trajectory file: {TRAJECTORY_PATH}")
+
+
+def _dynamic_sweep(rows, log, traj, m, n, n_lambdas, lam_min_ratio,
+                   screen_every=25):
+    """Dynamic vs sequential screening on the same instance/rule.
+
+    The comparison the in-solver screen must win: for each path step, the
+    per-segment kept-feature trajectory should drop *below* the step's
+    initial (between-lambda) screen while the final objectives match the
+    sequential path to 1e-6. Appends a ``dynamic`` section to the
+    BENCH_screening.json trajectory file.
+    """
+    ds = make_sparse_classification(m=m, n=n, k_active=20, seed=11)
+    log(f"\n# dynamic vs sequential (rules=feature_vi, screen_every={screen_every})")
+    kw = dict(rules="feature_vi", tol=1e-10, max_iters=8000)
+    seq_driver = PathDriver(**kw)
+    dyn_driver = PathDriver(dynamic=True, screen_every=screen_every, **kw)
+    grid = dict(n_lambdas=n_lambdas, lam_min_ratio=lam_min_ratio)
+    for d in (seq_driver, dyn_driver):  # warm jit caches
+        d.run(ds.X, ds.y, **grid)
+    t0 = time.perf_counter()
+    seq = seq_driver.run(ds.X, ds.y, **grid)
+    t_seq = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    dyn = dyn_driver.run(ds.X, ds.y, **grid)
+    t_dyn = time.perf_counter() - t0
+
+    obj_diff = float(np.max(np.abs(seq.objectives - dyn.objectives)
+                            / np.maximum(np.abs(seq.objectives), 1.0)))
+    tele = dyn.extras["dynamic"]
+    tightened = sum(
+        1 for k, d in tele.items()
+        if k > 0 and d["kept_per_segment"]
+        and d["kept_per_segment"][-1] < dyn.kept[k]
+    )
+    log("step,initial_kept,kept_per_segment")
+    for k in range(1, len(dyn.lambdas)):
+        segs = tele.get(k, {}).get("kept_per_segment", [])
+        log(f"{k},{int(dyn.kept[k])},{segs}")
+    log(f"sequential_path_s={t_seq:.3f} dynamic_path_s={t_dyn:.3f} "
+        f"max_rel_obj_diff={obj_diff:.2e} steps_tightened={tightened}")
+    rows.append(("path_dynamic_feature_vi", t_dyn * 1e6,
+                 f"tightened={tightened} obj_diff={obj_diff:.1e}"))
+    traj["dynamic"] = {
+        "rules": "feature_vi",
+        "screen_every": screen_every,
+        "sequential_path_seconds": t_seq,
+        "dynamic_path_seconds": t_dyn,
+        "max_rel_obj_diff": obj_diff,
+        "steps_tightened_in_solver": tightened,
+        "initial_kept": [int(v) for v in dyn.kept],
+        "kept_per_segment": {
+            str(k): d["kept_per_segment"] for k, d in sorted(tele.items())
+        },
+        "gap_per_segment": {
+            str(k): d["gap_per_segment"] for k, d in sorted(tele.items())
+        },
+    }
 
 
 def run(log=print):

@@ -77,7 +77,7 @@ def main():
 
     # 1) the screen itself (paper Alg. 1, batched + sharded)
     fn = jax.jit(
-        lambda X, y, t: screen_sharded(mesh, X, y, 100.0, 50.0, t),
+        lambda X, y, t: screen_sharded(mesh, X, y, 100.0, 50.0, t, delta=0.0),
         in_shardings=(ns("model", "data"), ns("data"), ns("data")),
     )
     compiled = fn.lower(X, y, th).compile()

@@ -56,8 +56,20 @@ print("path active nnz  :", path.active.tolist())
 #    All produce the same path (screening is exact); they differ in how much
 #    of the problem the solver never has to touch.
 print(f"\nregistered rules: {available_rules()}")
-for spec in ("feature_vi", "sample_vi", "composite"):
+for spec in ("feature_vi", "sample_vi", "composite", "dvi"):
     r = PathDriver(rules=spec).run(ds.X, ds.y, n_lambdas=8, lam_min_ratio=0.02)
     print(f"{spec:10s} kept features {r.kept.tolist()}")
     print(f"{'':10s} kept samples  {r.kept_samples.tolist()} "
           f"(verify re-solves: {int(r.verify_rounds.sum())})")
+
+# 7. dynamic screening: the region certifying theta*(lambda) keeps shrinking
+#    while FISTA converges, so the solver re-screens itself every
+#    screen_every iterations — the feature mask tightens MID-solve, beyond
+#    what the between-lambda sequential screen could certify
+dyn = PathDriver(rules="feature_vi", dynamic=True, screen_every=25).run(
+    ds.X, ds.y, n_lambdas=8, lam_min_ratio=0.02)
+print("\ndynamic in-solver tightening (per-step kept trajectory):")
+for k, tele in sorted(dyn.extras["dynamic"].items()):
+    if tele["kept_per_segment"] and tele["kept_per_segment"][-1] < dyn.kept[k]:
+        print(f"  step {k}: initial screen kept {int(dyn.kept[k])} "
+              f"-> segments {tele['kept_per_segment']}")

@@ -1,12 +1,51 @@
 #!/usr/bin/env bash
-# Minimal CI: run the tier-1 suite on CPU jax (see ROADMAP.md).
+# CI matrix (see ROADMAP.md). Lanes, each runnable by name:
 #
-#   ./scripts/ci.sh            # full tier-1
-#   ./scripts/ci.sh -m 'not slow'   # extra pytest args pass through
+#   ./scripts/ci.sh              # full:    the whole tier-1 suite
+#   ./scripts/ci.sh full
+#   ./scripts/ci.sh fast         # fast:    tier-1 minus slow (multi-process)
+#   ./scripts/ci.sh kernels      # kernels: Pallas suites, interpret mode
+#                                #          forced via REPRO_PALLAS_INTERPRET=1
+#   ./scripts/ci.sh all          # kernels lane, then full (which covers fast)
+#
+# Extra pytest args pass through after the lane name (a leading '-' arg is
+# treated as pytest args for the full lane, back-compat):
+#   ./scripts/ci.sh fast -k screening
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q "$@"
+lane="${1:-full}"
+case "$lane" in
+  full|fast|kernels|all) shift || true ;;
+  -*) lane="full" ;;  # bare pytest args => full lane (legacy invocation)
+  *) echo "unknown lane '$lane' (full|fast|kernels|all)" >&2; exit 2 ;;
+esac
+
+run_lane() {
+  local name="$1"; shift
+  echo "=== ci lane: $name ==="
+  case "$name" in
+    full)
+      python -m pytest -x -q "$@"
+      ;;
+    fast)
+      python -m pytest -x -q -m 'not slow' "$@"
+      ;;
+    kernels)
+      REPRO_PALLAS_INTERPRET=1 python -m pytest -x -q \
+        tests/test_kernels.py "$@"
+      ;;
+  esac
+}
+
+if [ "$lane" = "all" ]; then
+  # kernels (interpret-forced), then full — full already includes every
+  # non-slow test, so running fast here would only duplicate work
+  run_lane kernels "$@"
+  run_lane full "$@"
+else
+  run_lane "$lane" "$@"
+fi

@@ -19,12 +19,22 @@ from .screening import (  # noqa: F401
     screen_bounds,
     screen_bounds_from_reductions,
     shared_scalars,
+    shared_scalars_from_stats,
 )
-from .solver import FistaResult, fista_solve, lipschitz_estimate, soft_threshold  # noqa: F401
+from .solver import (  # noqa: F401
+    DynamicFistaResult,
+    FistaResult,
+    fista_solve,
+    fista_solve_dynamic,
+    gap_theta_delta,
+    lipschitz_estimate,
+    soft_threshold,
+)
 from .path import PathDriver, PathResult, default_lambda_grid, svm_path  # noqa: F401
 from .rules import (  # noqa: F401
     CompositeRule,
     ConvexRegion,
+    DVIRule,
     FeatureVIRule,
     SampleVIRule,
     ScreeningRule,

@@ -44,8 +44,9 @@ from .screening import (
     FeatureReductions,
     screen_bounds_from_reductions,
     shared_scalars,
+    shared_scalars_from_stats,
 )
-from .solver import FistaResult, soft_threshold
+from .solver import DynamicFistaResult, FistaResult, soft_threshold
 
 __all__ = ["screen_sharded", "fista_sharded", "svm_mesh"]
 
@@ -69,14 +70,23 @@ def screen_sharded(
     theta1: jax.Array,
     tau: float = SAFE_TAU,
     data_axes=("data",),
+    *,
+    delta,
 ):
     """Distributed safe screening. Returns (keep_mask, bounds), sharded on "model".
 
     ``X``: (m, n) sharded P("model", data_axes); ``y``/``theta1``: (n,)
-    sharded P(data_axes).
+    sharded P(data_axes). ``delta`` is the inexact-theta1 radius bound
+    (``||theta1 - theta*(lam1)|| <= delta``, see ``dual.safe_theta_and_delta``):
+    it inflates the ball and relaxes the halfspace exactly like
+    ``screening.shared_scalars``. It is deliberately a *required* keyword —
+    a sharded screen that silently assumed theta1 exact could unsafely
+    reject features for any iteratively solved anchor; callers with a
+    truly exact theta1 (closed form at lambda_max) state ``delta=0.0``.
     """
     lam1 = jnp.asarray(lam1, jnp.float32)
     lam2 = jnp.asarray(lam2, jnp.float32)
+    delta = jnp.asarray(delta, jnp.float32)
 
     def local(x_blk, y_blk, th_blk):
         # local partial reductions over this shard's sample columns
@@ -100,7 +110,8 @@ def screen_sharded(
         stats = jax.lax.psum(stats, data_axes)
         one_y, th_one, th_y, th_sq, n_tot = stats
 
-        sh = _shared_from_stats(lam1, lam2, one_y, th_one, th_y, th_sq, n_tot)
+        sh = _shared_from_stats(lam1, lam2, one_y, th_one, th_y, th_sq, n_tot,
+                                delta=delta)
         red = FeatureReductions(
             d_theta=packed[:, 0], d_one=packed[:, 1], d_y=packed[:, 2], d_sq=packed[:, 3]
         )
@@ -119,34 +130,19 @@ def screen_sharded(
     return fn(X, y, theta1)
 
 
-def _shared_from_stats(lam1, lam2, one_y, th_one, th_y, th_sq, n_tot):
-    """ScreenShared from global scalar statistics (mirrors shared_scalars)."""
-    from .screening import ScreenShared, _EPS
+def _shared_from_stats(lam1, lam2, one_y, th_one, th_y, th_sq, n_tot, delta=0.0):
+    """ScreenShared from global scalar statistics, delta-inflated.
 
-    inv1, inv2 = 1.0 / lam1, 1.0 / lam2
-    ysq = n_tot
-    yc = 0.5 * (inv2 * one_y + th_y)
-    r_sq = 0.25 * (inv2 * inv2 * n_tot - 2.0 * inv2 * th_one + th_sq)
-    r_h_sq = r_sq - yc * yc / ysq
-
-    diff_sq = th_sq - 2.0 * inv1 * th_one + inv1 * inv1 * n_tot
-    a_norm = jnp.sqrt(jnp.maximum(diff_sq, 0.0))
-    # relative validity threshold — see screening.shared_scalars
-    halfspace_valid = a_norm > 1e-6 * jnp.sqrt(th_sq + inv1 * inv1 * n_tot)
-    safe_norm = jnp.maximum(a_norm, _EPS)
-    a_dot_one = (th_one - inv1 * n_tot) / safe_norm
-    a_dot_y = (th_y - inv1 * one_y) / safe_norm
-    a_dot_theta = (th_sq - inv1 * th_one) / safe_norm
-
-    a_dot_c = 0.5 * (inv2 * a_dot_one + a_dot_theta)
-    g0 = a_dot_c - (yc / ysq) * a_dot_y - a_dot_theta
-    qa_sq = jnp.maximum(1.0 - a_dot_y * a_dot_y / ysq, 0.0)
-
-    return ScreenShared(
-        inv_lam1=inv1, inv_lam2=inv2, yc=yc, ysq=ysq, r_h_sq=r_h_sq, g0=g0,
-        qa_theta=a_dot_theta - a_dot_y * th_y / ysq, qa_sq=qa_sq, a_norm=a_norm,
-        a_dot_one=a_dot_one, a_dot_y=a_dot_y, theta_dot_one=th_one,
-        theta_dot_y=th_y, halfspace_valid=halfspace_valid,
+    Delegates to ``screening.shared_scalars_from_stats`` so the sharded
+    screen runs the *identical* scalar arithmetic as the local oracle —
+    including the inexact-theta ball inflation (``r_base + delta``) and the
+    ``g0`` halfspace relaxation. (The pre-delta version of this function
+    re-derived the scalars locally and dropped ``delta`` entirely, which
+    made the sharded screen unsafe for sequentially-solved theta1.)
+    """
+    return shared_scalars_from_stats(
+        lam1, lam2, one_y=one_y, theta_dot_one=th_one, theta_dot_y=th_y,
+        theta_sq=th_sq, n_tot=n_tot, delta=delta,
     )
 
 
@@ -161,19 +157,42 @@ def fista_sharded(
     b0: Optional[jax.Array] = None,
     data_axes=("data",),
     sample_mask: Optional[jax.Array] = None,
-) -> FistaResult:
+    feature_mask: Optional[jax.Array] = None,
+    screen_every: Optional[int] = None,
+    tau: float = SAFE_TAU,
+    n_feas_iters: int = 4,
+):
     """Distributed FISTA on 2-D sharded X. Same math as solver.fista_solve.
 
     ``sample_mask`` (0/1 over samples, sharded like ``y``) drops screened
     samples from the loss without reshaping the sharded operands — the
     mask-mode counterpart of the sample-screening rules (core/rules).
+
+    ``screen_every`` (optional) turns on in-solver *dynamic* screening —
+    the sharded mirror of ``solver.fista_solve_dynamic``: every
+    ``screen_every`` iterations the local function computes the duality gap
+    (margin psum over "model", correlation psum over the data axes),
+    rebuilds the at-lambda VI region from the gap-certified dual point, and
+    re-evaluates the feature bounds with the same psum sweep as
+    :func:`screen_sharded`, ANDing the result into a live feature mask
+    sharded over "model" (``feature_mask`` seeds it; without
+    ``screen_every`` the mask is honored statically — seeded zeros stay
+    zero — just never refreshed). Returns ``solver.DynamicFistaResult``
+    (with per-segment kept/gap telemetry) when ``screen_every`` is set,
+    plain ``FistaResult`` otherwise.
     """
     lam = jnp.asarray(lam, jnp.float32)
     m, n = X.shape
     if sample_mask is None:
         sample_mask = jnp.ones_like(y)
+    dynamic = screen_every is not None and int(screen_every) > 0
+    if dynamic:
+        screen_every = int(screen_every)
+        n_seg = -(-max_iters // screen_every)  # ceil; static
+    if feature_mask is None:
+        feature_mask = jnp.ones((m,), jnp.float32)
 
-    def local(x_blk, y_blk, sm_blk, w_blk, b_scalar):
+    def local(x_blk, y_blk, sm_blk, fm_blk, w_blk, b_scalar):
         def margins(w):
             part = x_blk.T @ w  # (n_loc,)
             return jax.lax.psum(part, "model")
@@ -215,41 +234,159 @@ def fista_sharded(
         L = jnp.maximum(L * 1.01, 1e-12)
         inv_L = 1.0 / L
 
-        obj0 = objective(w_blk, b_scalar)
+        def make_body(fm):
+            def body(st):
+                w, b, wp, bp, t, k, obj, rel = st
+                t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+                beta = (t - 1.0) / t_next
+                zw = w + beta * (w - wp)
+                zb = b + beta * (b - bp)
+                gw, gb, _ = grad(zw, zb)
+                w_new = soft_threshold(zw - inv_L * gw, lam * inv_L)
+                b_new = zb - inv_L * gb
+                if fm is not None:
+                    w_new = w_new * fm
+                obj_new = objective(w_new, b_new)
 
-        def cond(st):
-            w, b, wp, bp, t, k, obj, rel = st
-            return (k < max_iters) & (rel > tol)
+                gw_p, gb_p, _ = grad(w, b)
+                w_pl = soft_threshold(w - inv_L * gw_p, lam * inv_L)
+                b_pl = b - inv_L * gb_p
+                if fm is not None:
+                    w_pl = w_pl * fm
+                obj_pl = objective(w_pl, b_pl)
 
-        def body(st):
-            w, b, wp, bp, t, k, obj, rel = st
-            t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
-            beta = (t - 1.0) / t_next
-            zw = w + beta * (w - wp)
-            zb = b + beta * (b - bp)
-            gw, gb, _ = grad(zw, zb)
-            w_new = soft_threshold(zw - inv_L * gw, lam * inv_L)
-            b_new = zb - inv_L * gb
-            obj_new = objective(w_new, b_new)
+                bad = obj_new > obj
+                w_new = jnp.where(bad, w_pl, w_new)
+                b_new = jnp.where(bad, b_pl, b_new)
+                obj_new = jnp.where(bad, obj_pl, obj_new)
+                t_next = jnp.where(bad, 1.0, t_next)
 
-            gw_p, gb_p, _ = grad(w, b)
-            w_pl = soft_threshold(w - inv_L * gw_p, lam * inv_L)
-            b_pl = b - inv_L * gb_p
-            obj_pl = objective(w_pl, b_pl)
+                rel = jnp.abs(obj - obj_new) / jnp.maximum(jnp.abs(obj), 1e-30)
+                return (w_new, b_new, w, b, t_next, k + 1, obj_new, rel)
 
-            bad = obj_new > obj
-            w_new = jnp.where(bad, w_pl, w_new)
-            b_new = jnp.where(bad, b_pl, b_new)
-            obj_new = jnp.where(bad, obj_pl, obj_new)
-            t_next = jnp.where(bad, 1.0, t_next)
+            return body
 
-            rel = jnp.abs(obj - obj_new) / jnp.maximum(jnp.abs(obj), 1e-30)
-            return (w_new, b_new, w, b, t_next, k + 1, obj_new, rel)
+        if not dynamic:
+            # honor a static feature_mask here too (same contract as the
+            # dynamic path, just never refreshed): seeded zeros stay zero
+            w_init = w_blk * fm_blk
+            obj0 = objective(w_init, b_scalar)
 
-        st0 = (w_blk, b_scalar, w_blk, b_scalar, jnp.float32(1.0),
-               jnp.int32(0), obj0, jnp.float32(jnp.inf))
-        w, b, _, _, _, k, obj, rel = jax.lax.while_loop(cond, body, st0)
-        return w, b, obj, k, rel <= tol
+            def cond(st):
+                w, b, wp, bp, t, k, obj, rel = st
+                return (k < max_iters) & (rel > tol)
+
+            st0 = (w_init, b_scalar, w_init, b_scalar, jnp.float32(1.0),
+                   jnp.int32(0), obj0, jnp.float32(jnp.inf))
+            w, b, _, _, _, k, obj, rel = jax.lax.while_loop(
+                cond, make_body(fm_blk), st0)
+            return w, b, obj, k, rel <= tol
+
+        # ---- dynamic: segmented solve with in-loop gap screening ---------
+        # theta-independent bound reductions over live samples (one sweep +
+        # one 3-scalar psum, shared by every refresh — cf. screen_sharded)
+        stat = jnp.stack([y_blk * sm_blk, sm_blk], axis=1)       # (n_loc, 2)
+        dd = x_blk @ stat                                         # (m_loc, 2)
+        d_sq = (x_blk * x_blk) @ sm_blk
+        dd = jax.lax.psum(jnp.concatenate([dd, d_sq[:, None]], axis=1), data_axes)
+        d_one_blk, d_y_blk, d_sq_blk = dd[:, 0], dd[:, 1], dd[:, 2]
+        sums = jax.lax.psum(
+            jnp.stack([jnp.sum(y_blk * sm_blk), jnp.sum(sm_blk)]), data_axes
+        )
+        one_y, n_tot = sums[0], sums[1]
+
+        def gap_certificate(w, b):
+            """(theta_blk, delta, gap) — sharded gap_theta_delta."""
+            u = margins(w) + b
+            xi = sm_blk * jnp.maximum(0.0, 1.0 - y_blk * u)
+            p_obj = jax.lax.psum(0.5 * jnp.sum(xi * xi), data_axes) + (
+                lam * jax.lax.psum(jnp.sum(jnp.abs(w)), "model")
+            )
+
+            def feas_body(alpha, _):
+                corr = jax.lax.psum(x_blk @ (y_blk * alpha), data_axes)
+                mx = jax.lax.pmax(jnp.max(jnp.abs(corr)), "model")
+                alpha = alpha * jnp.minimum(1.0, lam / jnp.maximum(mx, 1e-30))
+                ay = jax.lax.psum(alpha @ y_blk, data_axes)
+                return sm_blk * jnp.maximum(0.0, alpha - ay / n_tot * y_blk), None
+
+            alpha, _ = jax.lax.scan(feas_body, xi, None, length=n_feas_iters)
+            corr = jax.lax.psum(x_blk @ (y_blk * alpha), data_axes)
+            mx = jax.lax.pmax(jnp.max(jnp.abs(corr)), "model")
+            alpha = alpha * jnp.minimum(1.0, lam / jnp.maximum(mx, 1e-30))
+            stats = jax.lax.psum(
+                jnp.stack([jnp.sum(alpha), jnp.sum(alpha * alpha), alpha @ y_blk]),
+                data_axes,
+            )
+            gap = jnp.maximum(p_obj - (stats[0] - 0.5 * stats[1]), 0.0)
+            # few-ulp floor against cancellation noise (see gap_theta_delta)
+            gap = jnp.maximum(gap, 4.0 * jnp.finfo(jnp.float32).eps * jnp.abs(p_obj))
+            eq_resid = jnp.abs(stats[2]) / jnp.sqrt(n_tot)
+            delta = (jnp.sqrt(2.0 * gap) + 2.0 * eq_resid) / lam
+            return alpha / lam, delta, gap
+
+        def outer_cond(carry):
+            st, *_ = carry
+            return (st[5] < max_iters) & (st[7] > tol)
+
+        def outer_body(carry):
+            st, fm, kept, gaps, seg = carry
+            k_stop = jnp.minimum(st[5] + screen_every, max_iters)
+
+            def inner_cond(s_):
+                return (s_[5] < k_stop) & (s_[7] > tol)
+
+            st = jax.lax.while_loop(inner_cond, make_body(fm), st)
+            w, b = st[0], st[1]
+
+            # refresh: certify the region at the current iterate, re-screen
+            theta, delta, gap = gap_certificate(w, b)
+            th_stats = jax.lax.psum(
+                jnp.stack([jnp.sum(theta), theta @ y_blk, theta @ theta]),
+                data_axes,
+            )
+            sh = _shared_from_stats(lam, lam, one_y, th_stats[0], th_stats[1],
+                                    th_stats[2], n_tot, delta=delta)
+            d_theta_blk = jax.lax.psum(x_blk @ (y_blk * theta), data_axes)
+            red = FeatureReductions(d_theta=d_theta_blk, d_one=d_one_blk,
+                                    d_y=d_y_blk, d_sq=d_sq_blk)
+            # min of the VI cap and the GAP-sphere bound — see
+            # solver.fista_solve_dynamic for the derivation
+            bounds = jnp.minimum(
+                screen_bounds_from_reductions(red, sh),
+                jnp.abs(d_theta_blk)
+                + jnp.sqrt(jnp.maximum(d_sq_blk, 0.0)) * delta,
+            )
+            new_fm = fm * (bounds >= tau).astype(jnp.float32)
+            n_live = jax.lax.psum(jnp.sum(new_fm), "model")
+
+            # zero dropped coords + momentum restart only when zeroing moved
+            # the iterate (cf. fista_solve_dynamic)
+            w_m = w * new_fm
+            changed = jax.lax.psum(jnp.sum((w - w_m) * (w - w_m)), "model") > 0.0
+            obj_m = objective(w_m, b)
+            st_masked = (w_m, b, w_m, b, jnp.float32(1.0), st[5], obj_m,
+                         jnp.float32(jnp.inf))
+            st = jax.tree_util.tree_map(
+                lambda a_, b_: jnp.where(changed, a_, b_), st_masked, st
+            )
+
+            # clamp into the last slot: > n_seg refreshes are possible when
+            # segments end early (see fista_solve_dynamic)
+            slot = jnp.minimum(seg, n_seg - 1)
+            kept = kept.at[slot].set(n_live.astype(jnp.int32))
+            gaps = gaps.at[slot].set(gap)
+            return (st, new_fm, kept, gaps, jnp.minimum(seg + 1, n_seg))
+
+        obj0 = objective(w_blk * fm_blk, b_scalar)
+        st0 = (w_blk * fm_blk, b_scalar, w_blk * fm_blk, b_scalar,
+               jnp.float32(1.0), jnp.int32(0), obj0, jnp.float32(jnp.inf))
+        carry0 = (st0, fm_blk, jnp.full((n_seg,), -1, jnp.int32),
+                  jnp.full((n_seg,), jnp.inf, jnp.float32),
+                  jnp.int32(0))
+        st, fm, kept, gaps, seg = jax.lax.while_loop(outer_cond, outer_body, carry0)
+        w, b, _, _, _, k, obj, rel = st
+        return w, b, obj, k, rel <= tol, fm > 0.5, kept, gaps, seg
 
     if w0 is None:
         w0 = jnp.zeros((m,), jnp.float32)
@@ -257,13 +394,24 @@ def fista_sharded(
         b0 = jnp.mean(y)
     b0 = jnp.asarray(b0, jnp.float32)
 
+    scalar_out = (P(), P(), P(), P())
     fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(P("model", *data_axes), P(*data_axes), P(*data_axes),
-                  P("model"), P()),
-        out_specs=(P("model"), P(), P(), P(), P()),
+                  P("model"), P("model"), P()),
+        out_specs=(P("model"), *scalar_out)
+        if not dynamic
+        else (P("model"), *scalar_out, P("model"), P(), P(), P()),
         check_rep=False,
     )
-    w, b, obj, k, conv = fn(X, y, jnp.asarray(sample_mask, jnp.float32), w0, b0)
-    return FistaResult(w=w, b=b, obj=obj, n_iters=k, converged=conv)
+    out = fn(X, y, jnp.asarray(sample_mask, jnp.float32),
+             jnp.asarray(feature_mask, jnp.float32), w0, b0)
+    if not dynamic:
+        w, b, obj, k, conv = out
+        return FistaResult(w=w, b=b, obj=obj, n_iters=k, converged=conv)
+    w, b, obj, k, conv, fm, kept, gaps, seg = out
+    return DynamicFistaResult(
+        w=w, b=b, obj=obj, n_iters=k, converged=conv, feature_mask=fm,
+        kept_per_segment=kept, gap_per_segment=gaps, n_segments=seg,
+    )

@@ -58,9 +58,9 @@ from .rules import (
     FeatureVIRule,
     make_rules,
 )
-from .rules.base import solve_with_verification
+from .rules.base import dynamic_tau, solve_with_verification
 from .screening import SAFE_TAU
-from .solver import fista_solve
+from .solver import DynamicFistaResult, fista_solve, fista_solve_dynamic
 
 __all__ = ["PathResult", "PathDriver", "svm_path", "default_lambda_grid"]
 
@@ -95,6 +95,16 @@ def _bucket(n: int) -> int:
     return b
 
 
+def _dynamic_telemetry(res: DynamicFistaResult) -> dict:
+    """Host-side view of one dynamic solve's per-segment screening trace."""
+    s = int(res.n_segments)
+    return {
+        "segments": s,
+        "kept_per_segment": [int(v) for v in np.asarray(res.kept_per_segment)[:s]],
+        "gap_per_segment": [float(v) for v in np.asarray(res.gap_per_segment)[:s]],
+    }
+
+
 class PathDriver:
     """Applies an arbitrary list of screening rules along the lambda path.
 
@@ -112,7 +122,16 @@ class PathDriver:
         max_iters: int = 4000,
         shrink_factor: float = 1.5,
         max_verify_rounds: int = 3,
+        dynamic: bool = False,
+        screen_every: int = 50,
     ):
+        """``dynamic=True`` swaps every solve for the segmented
+        ``solver.fista_solve_dynamic``: the step's sequential screen seeds a
+        live feature mask that the solver keeps tightening every
+        ``screen_every`` iterations from the gap-certified at-lambda region.
+        Per-step, per-segment kept-counts/gaps land in
+        ``PathResult.extras["dynamic"]``. Safe with any rule mix (the
+        in-solver screen is a-priori safe on its own certificate)."""
         if reduce not in ("gather", "mask"):
             raise ValueError(f"reduce must be 'gather' or 'mask', got {reduce!r}")
         self.rules = make_rules(rules)
@@ -121,6 +140,8 @@ class PathDriver:
         self.max_iters = int(max_iters)
         self.shrink_factor = float(shrink_factor)
         self.max_verify_rounds = int(max_verify_rounds)
+        self.dynamic = bool(dynamic)
+        self.screen_every = int(screen_every)
 
     # -- reduction helpers -------------------------------------------------
 
@@ -132,7 +153,15 @@ class PathDriver:
         valid = np.arange(pad) < len(f_idx)
         return sel, valid
 
-    def _solve(self, Xr, yr, lam, w0, b0, sample_mask):
+    def _solve(self, Xr, yr, lam, w0, b0, sample_mask, feature_mask=None):
+        if self.dynamic:
+            return fista_solve_dynamic(
+                Xr, yr, jnp.asarray(lam), w0=w0, b0=b0,
+                max_iters=self.max_iters, tol=self.tol,
+                sample_mask=sample_mask,
+                feature_mask=feature_mask,
+                screen_every=self.screen_every, tau=dynamic_tau(self.rules),
+            )
         return fista_solve(
             Xr, yr, jnp.asarray(lam), w0=w0, b0=b0,
             max_iters=self.max_iters, tol=self.tol,
@@ -164,6 +193,15 @@ class PathDriver:
         if lambdas is None:
             lambdas = default_lambda_grid(lam_max_val, n_lambdas, lam_min_ratio)
         lambdas = np.asarray(lambdas, dtype=np.float64)
+        if lambdas.size == 0:
+            raise ValueError("empty lambda grid")
+        if not np.all(np.isfinite(lambdas)) or np.any(lambdas <= 0):
+            raise ValueError(f"lambda grid must be finite and positive: {lambdas}")
+        if np.any(np.diff(lambdas) >= 0):
+            raise ValueError(
+                "lambda grid must be strictly decreasing (screening regions "
+                f"certify theta*(lam2) only for lam2 < lam1): {lambdas}"
+            )
         T = len(lambdas)
 
         weights = np.zeros((T, m), dtype=np.float64)
@@ -178,17 +216,44 @@ class PathDriver:
         s_times = np.zeros((T,), dtype=np.float64)
         sample_masks: dict[int, np.ndarray] = {}  # accepted per-step masks
 
-        # step 0: closed form at lam_max (w = 0); delta = 0 (theta exact here)
-        b0 = float(bias_at_lambda_max(y))
-        theta_prev = theta_at_lambda_max(y, jnp.asarray(lambdas[0]))
-        delta_prev = jnp.asarray(0.0, X.dtype)
+        dyn_log: dict[int, dict] = {}  # per-step in-solver screening telemetry
         lam_prev = float(lambdas[0])
-        biases[0] = b0
-        xi0 = np.maximum(0.0, 1.0 - y_np * b0)
-        objectives[0] = 0.5 * float(np.sum(xi0 * xi0))
-
         w_host = np.zeros((m,), dtype=np.float64)
-        b_host = b0
+        if lambdas[0] >= lam_max_val * (1.0 - 1e-9):
+            # step 0 at (or above) lam_max: closed form (w = 0, b = mean y)
+            # is *exact*, so delta = 0 and theta is the true dual optimum
+            b0 = float(bias_at_lambda_max(y))
+            theta_prev = theta_at_lambda_max(y, jnp.asarray(lambdas[0]))
+            delta_prev = jnp.asarray(0.0, X.dtype)
+            biases[0] = b0
+            xi0 = np.maximum(0.0, 1.0 - y_np * b0)
+            objectives[0] = 0.5 * float(np.sum(xi0 * xi0))
+            b_host = b0
+        else:
+            # custom grid starting below lambda_max: the closed form does NOT
+            # hold (w*(lambdas[0]) != 0). Solve step 0 with FISTA — no anchor
+            # exists yet, so it is unscreened — and certify theta via the gap
+            # bound instead of assuming exactness.
+            t0 = time.perf_counter()
+            res0 = self._solve(
+                X, y, float(lambdas[0]),
+                jnp.zeros((m,), X.dtype), jnp.mean(y), None,
+            )
+            wall[0] = time.perf_counter() - t0
+            w_host = np.asarray(res0.w, dtype=np.float64)
+            b_host = float(res0.b)
+            weights[0] = w_host
+            biases[0] = b_host
+            objectives[0] = float(res0.obj)
+            kept[0] = m
+            active[0] = int(np.sum(np.abs(w_host) > 1e-10))
+            iters[0] = int(res0.n_iters)
+            if isinstance(res0, DynamicFistaResult):
+                dyn_log[0] = _dynamic_telemetry(res0)
+            theta_prev, delta_prev = safe_theta_and_delta(
+                X, y, jnp.asarray(w_host, X.dtype), jnp.asarray(b_host, X.dtype),
+                jnp.asarray(float(lambdas[0])),
+            )
         # trust-region movement state (inf until one step of history exists)
         dw_pred = float("inf")
         db_pred = float("inf")
@@ -237,6 +302,8 @@ class PathDriver:
             vrounds[k] = rounds
             if sample_rules:
                 sample_masks[k] = s_mask.copy()
+            if isinstance(res, DynamicFistaResult):
+                dyn_log[k] = _dynamic_telemetry(res)
 
             # -- movement estimates for the next step's trust region --------
             # (weights[k-1]/biases[k-1] hold the previous accepted solution;
@@ -267,7 +334,8 @@ class PathDriver:
             screen_times=s_times, screened=bool(self.rules),
             kept_samples=kept_s, verify_rounds=vrounds,
             rules=tuple(r.name for r in self.rules),
-            extras={"lam_max": lam_max_val, "sample_masks": sample_masks},
+            extras={"lam_max": lam_max_val, "sample_masks": sample_masks,
+                    "dynamic": dyn_log},
         )
 
     # -- one reduced solve -------------------------------------------------
@@ -296,14 +364,16 @@ class PathDriver:
             w0 = jnp.asarray((w_host[sel_f] * valid_f).astype(dtype))
             smask = jnp.asarray(valid_s.astype(dtype)) if screening_s else None
             res = self._solve(jnp.asarray(Xr), yr, lam, w0,
-                              jnp.asarray(b_host, X.dtype), smask)
+                              jnp.asarray(b_host, X.dtype), smask,
+                              feature_mask=jnp.asarray(valid_f.astype(dtype)))
             w_full = np.zeros((m,), dtype=np.float64)
             w_full[sel_f[: len(f_idx)]] = np.asarray(res.w, np.float64)[: len(f_idx)]
         else:
             Xr = X * jnp.asarray(f_mask[:, None], X.dtype)
             w0 = jnp.asarray((w_host * f_mask).astype(dtype))
             smask = jnp.asarray(s_mask.astype(dtype)) if screening_s else None
-            res = self._solve(Xr, y, lam, w0, jnp.asarray(b_host, X.dtype), smask)
+            res = self._solve(Xr, y, lam, w0, jnp.asarray(b_host, X.dtype), smask,
+                              feature_mask=jnp.asarray(f_mask.astype(dtype)))
             w_full = np.asarray(res.w, dtype=np.float64) * f_mask
 
         return res, w_full
@@ -321,6 +391,8 @@ def svm_path(
     max_iters: int = 4000,
     tau: float = SAFE_TAU,
     rules=None,
+    dynamic: bool = False,
+    screen_every: int = 50,
 ) -> PathResult:
     """Solve the L1-L2-SVM path with configurable screening rules.
 
@@ -328,9 +400,12 @@ def svm_path(
     defaults to the paper's feature rule (with ``tau``); pass ``rules=``
     (``"sample_vi"``, ``"composite"``, a list, or instances) to choose
     other reductions. ``screening=False`` (or ``rules=[]``) disables all.
+    ``dynamic=True`` additionally re-screens inside each FISTA solve every
+    ``screen_every`` iterations (see :class:`PathDriver`).
     """
     if rules is None:
         rules = [FeatureVIRule(tau=tau)] if screening else []
-    driver = PathDriver(rules=rules, reduce=reduce, tol=tol, max_iters=max_iters)
+    driver = PathDriver(rules=rules, reduce=reduce, tol=tol, max_iters=max_iters,
+                        dynamic=dynamic, screen_every=screen_every)
     return driver.run(X, y, lambdas=lambdas, n_lambdas=n_lambdas,
                       lam_min_ratio=lam_min_ratio)

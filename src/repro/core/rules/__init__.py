@@ -20,8 +20,16 @@ Architecture
   a-priori sample screening cannot work for this loss.
 * :mod:`.composite` — simultaneous feature + sample reduction; the two axes
   multiply (``kept_m * kept_n`` solver cost).
+* :mod:`.dvi` — feature screening from the elementwise-min of the latest and
+  step-before-last anchors' VI bounds (Liu et al.-style DVI composition).
 
-Registered rules: ``"feature_vi"``, ``"sample_vi"``, ``"composite"``.
+Registered rules: ``"feature_vi"``, ``"sample_vi"``, ``"composite"``,
+``"dvi"``.
+
+Dynamic screening: every rule additionally exposes ``refresh(X, y, w, b,
+lam)`` — rebuild its region from the current solver iterate (gap-certified);
+``PathDriver(dynamic=True)`` fuses the equivalent refresh into the FISTA
+loop itself. See the :mod:`.base` module docstring.
 
 Usage
 -----
@@ -51,6 +59,7 @@ from .base import (  # noqa: F401
 from .feature_vi import FeatureVIRule  # noqa: F401
 from .sample_vi import SampleVIRule, sample_margin_surplus, sample_slack_caps  # noqa: F401
 from .composite import CompositeRule  # noqa: F401
+from .dvi import DVIRule  # noqa: F401
 
 __all__ = [
     "AXIS_FEATURES",
@@ -60,6 +69,7 @@ __all__ = [
     "FeatureVIRule",
     "SampleVIRule",
     "CompositeRule",
+    "DVIRule",
     "available_rules",
     "get_rule",
     "make_rules",

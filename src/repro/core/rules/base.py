@@ -30,6 +30,26 @@ Registry: implementations self-register under a short name
 (``@register_rule("feature_vi")``) so drivers, launchers, and benchmarks can
 be configured with strings — ``make_rules("composite")`` — without importing
 concrete classes.
+
+Dynamic (in-solver) screening
+-----------------------------
+A :class:`ConvexRegion` built *between* lambda steps is frozen for the whole
+solve, but the region certifying ``theta*(lam2)`` keeps shrinking while
+FISTA converges: the duality gap at the current iterate certifies a
+dual-feasible point within ``delta = O(sqrt(gap))`` of ``theta*(lam2)``, and
+the at-lambda VI set (``lam1 = lam2``) built from it is the ball through
+that point cut by its own tangent halfspace — it collapses onto
+``theta*(lam2)`` as the gap goes to zero. The protocol seam is
+:meth:`ScreeningRule.refresh`: rebuild the region from the current primal
+iterate via ``dual.safe_theta_and_delta``. The hot path does not call the
+Python hook per segment — ``solver.fista_solve_dynamic`` and
+``distributed.fista_sharded(screen_every=...)`` fuse the identical refresh
+(gap certificate → ``shared_scalars_from_stats`` → bound sweep) into their
+jitted outer loop, ANDing each re-screen into a live feature mask;
+``refresh`` is the reference implementation those solvers are property-tested
+against and the entry point for driver-level (unfused) dynamic passes.
+Enabled end to end via ``PathDriver(dynamic=True, screen_every=...)`` and
+``launch/train_svm.py --dynamic``.
 """
 
 from __future__ import annotations
@@ -41,7 +61,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..screening import ScreenShared, shared_scalars
+from ..screening import SAFE_TAU, ScreenShared, shared_scalars
 
 __all__ = [
     "ConvexRegion",
@@ -50,6 +70,7 @@ __all__ = [
     "get_rule",
     "available_rules",
     "make_rules",
+    "dynamic_tau",
     "solve_with_verification",
     "AXIS_FEATURES",
     "AXIS_SAMPLES",
@@ -131,6 +152,25 @@ class ScreeningRule:
     def region(y, lam1, lam2, theta1, delta=0.0, **primal) -> ConvexRegion:
         """Build the shared region (drivers usually call ConvexRegion.build)."""
         return ConvexRegion.build(y, lam1, lam2, theta1, delta=delta, **primal)
+
+    def refresh(self, X, y, w, b, lam, sample_mask=None) -> ConvexRegion:
+        """Rebuild the region from the *current iterate* mid-solve.
+
+        Dynamic screening: ``(w, b)`` is any primal point during the solve at
+        ``lam``; the duality gap there certifies a dual-feasible ``theta``
+        with ``||theta - theta*(lam)|| <= delta``, and the at-lambda region
+        (``lam1 = lam2 = lam``) built from it tightens monotonically (in
+        delta) as the solver converges. Safe for any rule that is safe on a
+        sequential region — it is the same geometry with a coincident grid
+        point. ``sample_mask`` restricts the certificate to the live
+        (unscreened) samples of a reduced problem.
+        """
+        from ..solver import gap_theta_delta  # local import: no cycle at load
+
+        theta, delta, _gap = gap_theta_delta(X, y, w, b, jnp.asarray(lam),
+                                             sample_mask=sample_mask)
+        return ConvexRegion.build(y, lam, lam, theta, delta=delta,
+                                  w1=w, b1=float(b))
 
     # -- per-unit scores --------------------------------------------------
     def prepare(self, X: jax.Array, y: jax.Array) -> None:
@@ -225,6 +265,19 @@ def solve_with_verification(
             s_mask[:] = True  # give up screening this step: exact solve
         else:
             s_mask[np.unique(viol).astype(np.int64)] = True
+
+
+def dynamic_tau(rules: Sequence[ScreeningRule]) -> float:
+    """The in-solver (dynamic) screen's keep threshold for a rule mix.
+
+    The most conservative configured feature-rule tau — ``min`` because
+    ``keep = bounds >= tau``, so a smaller tau keeps more — falling back to
+    ``SAFE_TAU`` when no feature rule carries one. The single source of this
+    policy for both the local ``PathDriver`` and the sharded launcher.
+    """
+    taus = [float(r.tau) for r in rules
+            if r.axis == AXIS_FEATURES and hasattr(r, "tau")]
+    return min(taus) if taus else SAFE_TAU
 
 
 RuleSpec = Union[None, str, ScreeningRule, Sequence[Union[str, ScreeningRule]]]

@@ -114,7 +114,9 @@ def sample_margin_surplus(
     ``sum(X*X, axis=0)`` (cached once per path by the rule's ``prepare``).
     """
     if region.w1 is None:
-        u1 = jnp.full(y.shape, region.b1, jnp.float32)
+        # match the data dtype (not a hardcoded float32) so x64 paths stay
+        # in double precision end to end
+        u1 = jnp.full(y.shape, region.b1, jnp.result_type(X.dtype, y.dtype))
     else:
         u1 = X.T @ region.w1 + region.b1
     if x_sq is None:

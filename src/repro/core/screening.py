@@ -67,6 +67,7 @@ __all__ = [
     "ScreenShared",
     "feature_reductions",
     "shared_scalars",
+    "shared_scalars_from_stats",
     "screen_bounds_from_reductions",
     "screen_bounds",
     "screen",
@@ -162,35 +163,61 @@ def shared_scalars(
     a beyond-paper addition (in the spirit of later GAP-sphere rules).
     """
     dtype = theta1.dtype
-    delta = jnp.asarray(delta, dtype)
-    lam1 = jnp.asarray(lam1, dtype)
-    lam2 = jnp.asarray(lam2, dtype)
     n = y.shape[0]
-    inv1, inv2 = 1.0 / lam1, 1.0 / lam2
+    return shared_scalars_from_stats(
+        jnp.asarray(lam1, dtype),
+        jnp.asarray(lam2, dtype),
+        one_y=jnp.sum(y),
+        theta_dot_one=jnp.sum(theta1),
+        theta_dot_y=theta1 @ y,
+        theta_sq=theta1 @ theta1,
+        n_tot=jnp.asarray(float(n), dtype),  # ||y||^2 = n for +-1 labels
+        delta=jnp.asarray(delta, dtype),
+    )
 
-    ysq = jnp.asarray(float(n), dtype)  # ||y||^2 = n for +-1 labels
-    one_y = jnp.sum(y)
-    theta_dot_one = jnp.sum(theta1)
-    theta_dot_y = theta1 @ y
-    theta_sq = theta1 @ theta1
+
+def shared_scalars_from_stats(
+    lam1: jax.Array,
+    lam2: jax.Array,
+    one_y: jax.Array,
+    theta_dot_one: jax.Array,
+    theta_dot_y: jax.Array,
+    theta_sq: jax.Array,
+    n_tot: jax.Array,
+    delta: jax.Array | float = 0.0,
+) -> ScreenShared:
+    """:class:`ScreenShared` from global scalar statistics of ``(y, theta1)``.
+
+    The stats-based entry point exists so every execution path — local
+    (:func:`shared_scalars`), sharded (``distributed.screen_sharded`` psums
+    per-shard partial sums into the same five scalars), and the in-solver
+    dynamic refresh on a sample-masked problem (``solver.fista_solve_dynamic``
+    computes masked stats) — runs the *identical* scalar arithmetic,
+    including the inexact-theta ``delta`` inflation. Inputs:
+
+        one_y = y^T 1,  theta_dot_one = theta1^T 1,  theta_dot_y = theta1^T y,
+        theta_sq = ||theta1||^2,  n_tot = ||y||^2 (= #live samples).
+    """
+    inv1, inv2 = 1.0 / lam1, 1.0 / lam2
+    ysq = n_tot
 
     # ball: c = (inv2*1 + theta1)/2 ; R^2 = ||inv2*1 - theta1||^2 / 4
     yc = 0.5 * (inv2 * one_y + theta_dot_y)
-    r_sq = 0.25 * (inv2 * inv2 * n - 2.0 * inv2 * theta_dot_one + theta_sq)
+    r_sq = 0.25 * (inv2 * inv2 * n_tot - 2.0 * inv2 * theta_dot_one + theta_sq)
     r_base = jnp.sqrt(jnp.maximum(r_sq, 0.0))
     r_infl = r_base + delta          # inexact-theta1 inflation (no-op at 0)
     r_h_sq = r_infl * r_infl - yc * yc / ysq
 
     # halfspace normal a = (theta1 - inv1*1)/||.||
-    diff_sq = theta_sq - 2.0 * inv1 * theta_dot_one + inv1 * inv1 * n
+    diff_sq = theta_sq - 2.0 * inv1 * theta_dot_one + inv1 * inv1 * n_tot
     a_norm = jnp.sqrt(jnp.maximum(diff_sq, 0.0))
     # RELATIVE validity: when theta1 == 1/lam1 analytically (balanced classes
     # at lam_max), a is pure rounding noise — a random halfspace direction
     # would cut the ball unsafely. Compare against theta1's own scale.
-    scale = jnp.sqrt(theta_sq + inv1 * inv1 * n)
+    scale = jnp.sqrt(theta_sq + inv1 * inv1 * n_tot)
     halfspace_valid = a_norm > 1e-6 * scale
     safe_norm = jnp.maximum(a_norm, _EPS)
-    a_dot_one = (theta_dot_one - inv1 * n) / safe_norm
+    a_dot_one = (theta_dot_one - inv1 * n_tot) / safe_norm
     a_dot_y = (theta_dot_y - inv1 * one_y) / safe_norm
     a_dot_theta = (theta_sq - inv1 * theta_dot_one) / safe_norm
 

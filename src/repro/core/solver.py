@@ -18,6 +18,26 @@ Lipschitz constant: L <= sigma_max([X; 1^T])^2, estimated by power iteration.
 Everything is pure ``jax.lax`` control flow: the whole solve jit-compiles to
 one XLA program (and runs unchanged under shard_map — see
 ``core/distributed.py``).
+
+Dynamic (in-solver) screening — ``fista_solve_dynamic``
+-------------------------------------------------------
+The VI region certifying ``theta*(lam)`` shrinks as the iterate converges:
+with ``theta`` the gap-certified dual-feasible point at the *current*
+``(w, b)`` and ``delta = O(sqrt(gap))`` its distance bound to ``theta*``,
+the at-lambda region (``lam1 = lam2 = lam``) is the ball through ``theta``
+cut by its own tangent halfspace — a set of diameter ``O(sqrt(R*delta))``
+that collapses onto ``theta*`` as the gap goes to zero. Features whose
+bound over that set stays below 1 are provably inactive at ``lam`` and can
+be zeroed *mid-solve* (Liu et al.-style dynamic screening), which compounds
+multiplicatively with the between-lambda sequential screen.
+
+``fista_solve_dynamic`` therefore runs a segmented solve: an outer
+``lax.while_loop`` whose body (a) runs up to ``screen_every`` plain FISTA
+iterations, (b) computes the duality gap of the (possibly sample-masked)
+problem, (c) rebuilds the region from the current iterate and re-evaluates
+the feature bounds, and (d) ANDs the result into a live feature mask that
+zeroes screened coordinates for all remaining iterations. Per-segment
+kept-counts and gaps are returned as telemetry (`DynamicFistaResult`).
 """
 
 from __future__ import annotations
@@ -28,7 +48,23 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["FistaState", "FistaResult", "lipschitz_estimate", "soft_threshold", "fista_solve"]
+from .screening import (
+    SAFE_TAU,
+    FeatureReductions,
+    screen_bounds_from_reductions,
+    shared_scalars_from_stats,
+)
+
+__all__ = [
+    "FistaState",
+    "FistaResult",
+    "DynamicFistaResult",
+    "lipschitz_estimate",
+    "soft_threshold",
+    "fista_solve",
+    "fista_solve_dynamic",
+    "gap_theta_delta",
+]
 
 
 class FistaState(NamedTuple):
@@ -48,6 +84,26 @@ class FistaResult(NamedTuple):
     obj: jax.Array
     n_iters: jax.Array
     converged: jax.Array
+
+
+class DynamicFistaResult(NamedTuple):
+    """`FistaResult` plus in-solver screening telemetry.
+
+    ``kept_per_segment[s]`` is the live-feature count after segment ``s``'s
+    re-screen; ``gap_per_segment[s]`` the duality-gap estimate it certified
+    the region from. Segments never run (early convergence) hold the
+    sentinel ``-1`` / ``inf``.
+    """
+
+    w: jax.Array
+    b: jax.Array
+    obj: jax.Array
+    n_iters: jax.Array
+    converged: jax.Array
+    feature_mask: jax.Array      # (m,) bool — final live mask
+    kept_per_segment: jax.Array  # (S,) int32
+    gap_per_segment: jax.Array   # (S,) float
+    n_segments: jax.Array        # int32 — segments actually run
 
 
 def soft_threshold(x: jax.Array, tau: jax.Array) -> jax.Array:
@@ -77,6 +133,63 @@ def _objective(X, y, w, b, lam, sample_mask=None):
     if sample_mask is not None:
         xi = xi * sample_mask
     return 0.5 * jnp.sum(xi * xi) + lam * jnp.sum(jnp.abs(w))
+
+
+def _make_fista_body(X, y, lam, inv_L, sm, fmask=None):
+    """One FISTA iteration ``FistaState -> FistaState`` as a closure.
+
+    ``fmask`` (0/1 over features, optional) freezes screened coordinates at
+    zero: the gradient and the prox output are both masked, so a coordinate
+    once zeroed stays zero — this is exactly the problem with those feature
+    rows removed (the rows contribute nothing to the margins either, since
+    ``w_j = 0``). Shared by :func:`fista_solve` (``fmask=None``: bit-for-bit
+    the original body) and the dynamic solver's inner segments.
+    """
+
+    def mask_w(w):
+        return w if fmask is None else w * fmask
+
+    def body(s: FistaState) -> FistaState:
+        # momentum extrapolation
+        t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * s.t * s.t))
+        beta = (s.t - 1.0) / t_next
+        zw = s.w + beta * (s.w - s.w_prev)
+        zb = s.b + beta * (s.b - s.b_prev)
+
+        xi = jnp.maximum(0.0, 1.0 - y * (X.T @ zw + zb))
+        if sm is not None:
+            xi = xi * sm
+        gw = -(X @ (y * xi))
+        gb = -jnp.sum(y * xi)
+
+        w_new = mask_w(soft_threshold(zw - inv_L * gw, lam * inv_L))
+        b_new = zb - inv_L * gb
+
+        obj_new = _objective(X, y, w_new, b_new, lam, sm)
+        # monotone restart: if the extrapolated step increased the objective,
+        # fall back to a plain proximal step from (w, b).
+        def plain_step():
+            xi_p = jnp.maximum(0.0, 1.0 - y * (X.T @ s.w + s.b))
+            if sm is not None:
+                xi_p = xi_p * sm
+            gw_p = -(X @ (y * xi_p))
+            gb_p = -jnp.sum(y * xi_p)
+            w_p = mask_w(soft_threshold(s.w - inv_L * gw_p, lam * inv_L))
+            b_p = s.b - inv_L * gb_p
+            return w_p, b_p, _objective(X, y, w_p, b_p, lam, sm), jnp.asarray(1.0, X.dtype)
+
+        bad = obj_new > s.obj
+        w_new, b_new, obj_new, t_next = jax.tree_util.tree_map(
+            lambda a, b_: jnp.where(bad, a, b_), plain_step(), (w_new, b_new, obj_new, t_next)
+        )
+
+        rel = jnp.abs(s.obj - obj_new) / jnp.maximum(jnp.abs(s.obj), 1e-30)
+        return FistaState(
+            w=w_new, b=b_new, w_prev=s.w, b_prev=s.b,
+            t=t_next, k=s.k + 1, obj=obj_new, rel_change=rel,
+        )
+
+    return body
 
 
 @partial(jax.jit, static_argnames=("max_iters",))
@@ -121,47 +234,204 @@ def fista_solve(
     def cond(s: FistaState):
         return (s.k < max_iters) & (s.rel_change > tol)
 
-    def body(s: FistaState) -> FistaState:
-        # momentum extrapolation
-        t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * s.t * s.t))
-        beta = (s.t - 1.0) / t_next
-        zw = s.w + beta * (s.w - s.w_prev)
-        zb = s.b + beta * (s.b - s.b_prev)
-
-        xi = jnp.maximum(0.0, 1.0 - y * (X.T @ zw + zb))
-        if sm is not None:
-            xi = xi * sm
-        gw = -(X @ (y * xi))
-        gb = -jnp.sum(y * xi)
-
-        w_new = soft_threshold(zw - inv_L * gw, lam * inv_L)
-        b_new = zb - inv_L * gb
-
-        obj_new = _objective(X, y, w_new, b_new, lam, sm)
-        # monotone restart: if the extrapolated step increased the objective,
-        # fall back to a plain proximal step from (w, b).
-        def plain_step():
-            xi_p = jnp.maximum(0.0, 1.0 - y * (X.T @ s.w + s.b))
-            if sm is not None:
-                xi_p = xi_p * sm
-            gw_p = -(X @ (y * xi_p))
-            gb_p = -jnp.sum(y * xi_p)
-            w_p = soft_threshold(s.w - inv_L * gw_p, lam * inv_L)
-            b_p = s.b - inv_L * gb_p
-            return w_p, b_p, _objective(X, y, w_p, b_p, lam, sm), jnp.asarray(1.0, X.dtype)
-
-        bad = obj_new > s.obj
-        w_new, b_new, obj_new, t_next = jax.tree_util.tree_map(
-            lambda a, b_: jnp.where(bad, a, b_), plain_step(), (w_new, b_new, obj_new, t_next)
-        )
-
-        rel = jnp.abs(s.obj - obj_new) / jnp.maximum(jnp.abs(s.obj), 1e-30)
-        return FistaState(
-            w=w_new, b=b_new, w_prev=s.w, b_prev=s.b,
-            t=t_next, k=s.k + 1, obj=obj_new, rel_change=rel,
-        )
-
+    body = _make_fista_body(X, y, lam, inv_L, sm)
     out = jax.lax.while_loop(cond, body, init)
     return FistaResult(
         w=out.w, b=out.b, obj=out.obj, n_iters=out.k, converged=out.rel_change <= tol
+    )
+
+
+def gap_theta_delta(
+    X: jax.Array,
+    y: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    lam: jax.Array,
+    sample_mask: Optional[jax.Array] = None,
+    n_feas_iters: int = 4,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Gap-certified ``(theta1, delta, gap)`` at the current iterate.
+
+    The sample-masked generalization of ``dual.safe_theta_and_delta`` (same
+    alternating feasibility projection, same 1-strong-concavity radius):
+    with a 0/1 ``sample_mask`` the problem being certified is the one with
+    masked-out columns removed, so the projection keeps their dual
+    coordinates pinned at zero and the equality projection uses the live
+    sample count. Pure ``jnp`` — callable from inside a jitted solve loop.
+    """
+    sm = sample_mask
+    xi = jnp.maximum(0.0, 1.0 - y * (X.T @ w + b))
+    if sm is not None:
+        xi = xi * sm
+    alpha = xi
+    p_obj = 0.5 * jnp.sum(alpha * alpha) + lam * jnp.sum(jnp.abs(w))
+    n_eff = jnp.sum(sm) if sm is not None else jnp.asarray(float(y.shape[0]), X.dtype)
+
+    def body(alpha, _):
+        corr = X @ (y * alpha)  # fhat_j^T alpha for all j
+        scale = jnp.minimum(1.0, lam / jnp.maximum(jnp.max(jnp.abs(corr)), 1e-30))
+        alpha = alpha * scale
+        alpha = jnp.maximum(0.0, alpha - (alpha @ y) / n_eff * y)
+        if sm is not None:
+            alpha = alpha * sm
+        return alpha, None
+
+    alpha, _ = jax.lax.scan(body, alpha, None, length=n_feas_iters)
+    # final rescale so the inequality constraints hold for sure
+    corr = X @ (y * alpha)
+    scale = jnp.minimum(1.0, lam / jnp.maximum(jnp.max(jnp.abs(corr)), 1e-30))
+    alpha = alpha * scale
+    d_obj = jnp.sum(alpha) - 0.5 * jnp.sum(alpha * alpha)
+    gap = jnp.maximum(p_obj - d_obj, 0.0)
+    # the gap is a difference of two O(p_obj) reductions: floor it at a few
+    # ulps of p_obj so cancellation noise can never *under*-inflate delta
+    # (an underestimated delta is the unsafe direction)
+    gap = jnp.maximum(gap, 4.0 * jnp.finfo(X.dtype).eps * jnp.abs(p_obj))
+    eq_resid = jnp.abs(alpha @ y) / jnp.sqrt(n_eff)
+    delta = (jnp.sqrt(2.0 * gap) + 2.0 * eq_resid) / lam
+    return alpha / lam, delta, gap
+
+
+@partial(jax.jit, static_argnames=("max_iters", "screen_every", "n_feas_iters"))
+def fista_solve_dynamic(
+    X: jax.Array,
+    y: jax.Array,
+    lam: jax.Array,
+    w0: Optional[jax.Array] = None,
+    b0: Optional[jax.Array] = None,
+    max_iters: int = 2000,
+    tol: float = 1e-9,
+    L: Optional[jax.Array] = None,
+    sample_mask: Optional[jax.Array] = None,
+    feature_mask: Optional[jax.Array] = None,
+    screen_every: int = 50,
+    tau: float = SAFE_TAU,
+    n_feas_iters: int = 4,
+) -> DynamicFistaResult:
+    """Segmented FISTA with gap-driven dynamic feature screening.
+
+    Solves the same problem as :func:`fista_solve`, but every
+    ``screen_every`` iterations it (a) computes the duality gap at the
+    current iterate, (b) rebuilds the at-lambda VI region from the
+    gap-certified dual point (``lam1 = lam2 = lam``; the region collapses
+    onto ``theta*`` as the gap shrinks), (c) re-evaluates the feature
+    bounds, and (d) ANDs the keep mask into a live ``feature_mask`` that
+    zeroes screened coordinates for the rest of the solve. Screened
+    features are *provably* inactive at the optimum of the (sample-masked)
+    problem, so the accepted solution is unchanged beyond solver tolerance.
+
+    ``feature_mask`` (0/1 over rows, optional) seeds the live mask — e.g.
+    the path driver's between-lambda sequential screen; refreshes only ever
+    shrink it. Returns :class:`DynamicFistaResult` with per-segment
+    kept-counts and gaps (sentinels ``-1`` / ``inf`` for segments not run).
+    """
+    m = X.shape[0]
+    lam = jnp.asarray(lam, X.dtype)
+    if w0 is None:
+        w0 = jnp.zeros((m,), X.dtype)
+    if b0 is None:
+        b0 = jnp.mean(y)
+    if L is None:
+        L = lipschitz_estimate(X)
+    L = jnp.maximum(L * 1.01, 1e-12)
+    inv_L = 1.0 / L
+    sm = sample_mask
+
+    fmask0 = (
+        jnp.ones((m,), X.dtype) if feature_mask is None
+        else jnp.asarray(feature_mask, X.dtype)
+    )
+    w0 = w0 * fmask0
+    screen_every = max(int(screen_every), 1)
+    n_seg = -(-max_iters // screen_every)  # ceil; static
+
+    # theta-independent bound reductions of the (masked) problem, one sweep
+    sm_vec = jnp.ones_like(y) if sm is None else sm
+    d_one = X @ (y * sm_vec)      # fhat_j^T 1 over live samples
+    d_y = X @ sm_vec              # fhat_j^T y over live samples
+    d_sq = (X * X) @ sm_vec       # ||fhat_j||^2 over live samples
+    one_y = jnp.sum(y * sm_vec)
+    n_tot = jnp.sum(sm_vec)
+
+    obj0 = _objective(X, y, w0, b0, lam, sm)
+    b0 = jnp.asarray(b0, X.dtype)
+    s0 = FistaState(
+        w=w0, b=b0, w_prev=w0, b_prev=b0,
+        t=jnp.asarray(1.0, X.dtype), k=jnp.asarray(0, jnp.int32),
+        obj=obj0, rel_change=jnp.asarray(jnp.inf, X.dtype),
+    )
+    kept0 = jnp.full((n_seg,), -1, jnp.int32)
+    gaps0 = jnp.full((n_seg,), jnp.inf, X.dtype)
+
+    def outer_cond(carry):
+        s, *_ = carry
+        return (s.k < max_iters) & (s.rel_change > tol)
+
+    def outer_body(carry):
+        s, fmask, kept, gaps, seg = carry
+
+        # -- segment: up to screen_every FISTA steps on the live mask ------
+        body = _make_fista_body(X, y, lam, inv_L, sm, fmask)
+        k_stop = jnp.minimum(s.k + screen_every, max_iters)
+
+        def inner_cond(st):
+            return (st.k < k_stop) & (st.rel_change > tol)
+
+        s = jax.lax.while_loop(inner_cond, body, s)
+
+        # -- refresh: gap-certified region at the current iterate ----------
+        theta, delta, gap = gap_theta_delta(
+            X, y, s.w, s.b, lam, sm, n_feas_iters=n_feas_iters
+        )
+        sh = shared_scalars_from_stats(
+            lam, lam, one_y=one_y,
+            theta_dot_one=jnp.sum(theta), theta_dot_y=theta @ y,
+            theta_sq=theta @ theta, n_tot=n_tot, delta=delta,
+        )
+        red = FeatureReductions(
+            d_theta=X @ (y * theta), d_one=d_one, d_y=d_y, d_sq=d_sq
+        )
+        # two independent certificates, elementwise min (each is a valid
+        # upper bound on |fhat_j^T theta*|): the at-lambda VI cap, and the
+        # GAP-sphere bound |fhat^T theta| + ||fhat|| * delta — linear in
+        # delta, so it is the one that bites as the solve converges.
+        bounds = jnp.minimum(
+            screen_bounds_from_reductions(red, sh),
+            jnp.abs(red.d_theta) + jnp.sqrt(jnp.maximum(d_sq, 0.0)) * delta,
+        )
+        new_mask = fmask * (bounds >= tau).astype(X.dtype)
+
+        # zero the dropped coordinates; restart momentum only when zeroing
+        # actually moved the iterate (a moved iterate is a fresh point —
+        # stale momentum and a stale rel_change would otherwise terminate
+        # the solve early; dropping already-zero coordinates is free).
+        w_m = s.w * new_mask
+        changed = jnp.sum((s.w - w_m) * (s.w - w_m)) > 0.0
+        s_masked = FistaState(
+            w=w_m, b=s.b, w_prev=w_m, b_prev=s.b,
+            t=jnp.asarray(1.0, X.dtype), k=s.k,
+            obj=_objective(X, y, w_m, s.b, lam, sm),
+            rel_change=jnp.asarray(jnp.inf, X.dtype),
+        )
+        s = jax.tree_util.tree_map(
+            lambda a, b_: jnp.where(changed, a, b_), s_masked, s
+        )
+
+        # a segment may consume fewer than screen_every iterations (inner
+        # convergence followed by a mask change restarts iteration), so more
+        # than n_seg refreshes are possible — clamp into the last telemetry
+        # slot instead of silently dropping the scatter out of bounds
+        slot = jnp.minimum(seg, n_seg - 1)
+        kept = kept.at[slot].set(jnp.sum(new_mask).astype(jnp.int32))
+        gaps = gaps.at[slot].set(gap)
+        return (s, new_mask, kept, gaps, jnp.minimum(seg + 1, n_seg))
+
+    out, fmask, kept, gaps, seg = jax.lax.while_loop(
+        outer_cond, outer_body, (s0, fmask0, kept0, gaps0, jnp.asarray(0, jnp.int32))
+    )
+    return DynamicFistaResult(
+        w=out.w, b=out.b, obj=out.obj, n_iters=out.k,
+        converged=out.rel_change <= tol,
+        feature_mask=fmask > 0.5, kept_per_segment=kept,
+        gap_per_segment=gaps, n_segments=seg,
     )

@@ -7,6 +7,7 @@ packing of the feature-independent scalars.
 
 from __future__ import annotations
 
+import os
 from functools import partial
 
 import jax
@@ -19,6 +20,15 @@ from . import screen as _screen
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _default_interpret() -> bool:
+    """Interpret-mode policy: forced on by ``REPRO_PALLAS_INTERPRET=1`` (the
+    CI kernel lane, scripts/ci.sh), otherwise Mosaic on TPU, interpret
+    elsewhere."""
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "") not in ("", "0"):
+        return True
+    return not _on_tpu()
 
 
 def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
@@ -40,15 +50,22 @@ def screen_bounds_op(
     block_m: int = 256,
     block_n: int = 512,
     interpret: bool | None = None,
+    delta=0.0,
 ) -> jax.Array:
-    """Fused screening bounds for all m features (kernel-backed)."""
+    """Fused screening bounds for all m features (kernel-backed).
+
+    ``delta`` is the inexact-theta1 radius bound; it enters the kernel only
+    through the packed shared scalars (ball inflation + g0 relaxation happen
+    in ``shared_scalars``), so the sweep itself is unchanged — the in-solver
+    dynamic refresh and the sequential screen share one kernel.
+    """
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = _default_interpret()
     m, n = X.shape
     yf = y.astype(jnp.float32)
     tf = theta1.astype(jnp.float32)
     rhs = jnp.stack([yf * tf, yf, jnp.ones_like(yf), jnp.zeros_like(yf)], axis=1)
-    sh = shared_scalars(yf, lam1, lam2, tf)
+    sh = shared_scalars(yf, lam1, lam2, tf, delta=delta)
     scalars = _screen.pack_shared(sh)
 
     Xp = _pad_to(_pad_to(X, block_m, 0), block_n, 1)
@@ -80,7 +97,7 @@ def sample_surplus_op(
     the slack models). ``u_prev=None`` disables the secant model.
     """
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = _default_interpret()
     m, n = X.shape
     wf = w.astype(jnp.float32)
     lhs = jnp.stack(
@@ -110,7 +127,7 @@ def hinge_margin_op(
 ):
     """(xi, loss) = fused margin/residual sweep (kernel-backed)."""
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = _default_interpret()
     m, n = X.shape
     Xp = _pad_to(_pad_to(X, block_m, 0), block_n, 1)
     wp = _pad_to(w, block_m, 0)
@@ -136,7 +153,7 @@ def hinge_grad_op(
 ) -> jax.Array:
     """g = -X (y*xi) (kernel-backed)."""
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = _default_interpret()
     m, n = X.shape
     Xp = _pad_to(_pad_to(X, block_m, 0), block_n, 1)
     v = _pad_to(y.astype(jnp.float32) * xi.astype(jnp.float32), block_n, 0)

@@ -6,11 +6,16 @@ the path state ((lambda_k, w, b, theta) per step) so a preempted path job
 resumes at the last completed lambda.
 
 Screening is configured through the rule registry (core/rules):
-``--rules feature_vi|sample_vi|composite|none``. The feature rule dispatches
-to the sharded bound sweep (``screen_sharded`` — same math, psum-reduced);
-sample rules run their margin test on the replicated sample axis and mask
-the loss inside ``fista_sharded`` (static shapes, shard-friendly), with the
-rule's KKT verification loop re-admitting violators before a step commits.
+``--rules feature_vi|sample_vi|composite|dvi|none``. The feature rule
+dispatches to the sharded bound sweep (``screen_sharded`` — same math,
+psum-reduced, delta-inflated for the sequentially-solved anchor); sample
+rules run their margin test on the replicated sample axis and mask the loss
+inside ``fista_sharded`` (static shapes, shard-friendly), with the rule's
+KKT verification loop re-admitting violators before a step commits.
+``--dynamic`` additionally re-screens *inside* the sharded FISTA loop every
+``--screen-every`` iterations from the gap-certified region at the current
+iterate, ANDing into a live "model"-sharded feature mask (per-segment kept
+counts land in the results JSON).
 
 CPU smoke: PYTHONPATH=src python -m repro.launch.train_svm --m 2000 --n 400
 """
@@ -41,7 +46,7 @@ from repro.core.rules import (
     FeatureVIRule,
     make_rules,
 )
-from repro.core.rules.base import solve_with_verification
+from repro.core.rules.base import dynamic_tau, solve_with_verification
 from repro.data import make_sparse_classification
 
 
@@ -54,6 +59,8 @@ def run_path(
     rules: str = "feature_vi",
     shrink_factor: float = 1.5,
     max_verify_rounds: int = 3,
+    dynamic: bool = False,
+    screen_every: int = 50,
 ):
     mesh = svm_mesh(model=model, data=data)
     Xj, yj = jnp.asarray(X), jnp.asarray(y)
@@ -105,8 +112,12 @@ def run_path(
         )
         keep = jnp.ones((m,), bool)
         for rule in sharded_feature:
+            # state["delta"] bounds ||theta - theta*(lam1)|| for the
+            # sequentially-solved anchor; without it the sharded screen
+            # would assume theta exact and could unsafely reject features
             k_mask, _ = screen_sharded(mesh, Xj, yj, lam1, lam2,
-                                       state["theta"], tau=rule.tau)
+                                       state["theta"], tau=rule.tau,
+                                       delta=state["delta"])
             keep = keep & k_mask
         for rule in generic_feature:
             keep = keep & jnp.asarray(rule.keep(rule.bounds(Xj, yj, region)))
@@ -120,10 +131,15 @@ def run_path(
         warm = {"w": state["w"] * keep, "b": state["b"]}
 
         def solve(mask):
+            # the dynamic segmented solve keeps tightening the feature mask
+            # in-loop, seeded from the between-lambda sequential screen
             r = fista_sharded(
                 mesh, Xr, yj, lam2, max_iters=max_iters, tol=tol,
                 w0=warm["w"], b0=warm["b"],
                 sample_mask=jnp.asarray(mask, jnp.float32),
+                feature_mask=keep.astype(jnp.float32),
+                screen_every=screen_every if dynamic else None,
+                tau=dynamic_tau(feature_rules),
             )
             warm["w"], warm["b"] = r.w, r.b
             return r, np.asarray(r.w, np.float64), float(r.b)
@@ -144,13 +160,21 @@ def run_path(
         dt = time.perf_counter() - t0
         nnz = int(jnp.sum(jnp.abs(res.w) > 1e-8))
         kept_n = int(s_mask.sum())
-        results.append({"lam": lam2, "kept": kept, "kept_samples": kept_n,
-                        "nnz": nnz, "obj": float(res.obj),
-                        "iters": int(res.n_iters), "verify_rounds": rounds,
-                        "wall_s": dt})
+        row = {"lam": lam2, "kept": kept, "kept_samples": kept_n,
+               "nnz": nnz, "obj": float(res.obj),
+               "iters": int(res.n_iters), "verify_rounds": rounds,
+               "wall_s": dt}
+        dyn_note = ""
+        if hasattr(res, "kept_per_segment"):
+            n_seg = int(res.n_segments)
+            segs = [int(v) for v in np.asarray(res.kept_per_segment)[:n_seg]]
+            row["dynamic_kept_per_segment"] = segs
+            row["kept_final"] = int(np.asarray(res.feature_mask).sum())
+            dyn_note = f" dyn={segs}"
+        results.append(row)
         log(f"[svm] k={k} lam={lam2:.4f} kept={kept}/{m} "
             f"samples={kept_n}/{n} nnz={nnz} obj={float(res.obj):.5f} "
-            f"({dt:.2f}s)")
+            f"({dt:.2f}s){dyn_note}")
         mgr.save(k, state, extra={"next_k": k + 1, "lambdas": list(map(float, lambdas))})
     return results
 
@@ -163,8 +187,12 @@ def main():
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--rules", default="feature_vi",
-                    help="screening rules: feature_vi|sample_vi|composite|none "
-                         "(comma-separated for a custom mix)")
+                    help="screening rules: feature_vi|sample_vi|composite|dvi|"
+                         "none (comma-separated for a custom mix)")
+    ap.add_argument("--dynamic", action="store_true",
+                    help="re-screen inside the sharded FISTA loop every "
+                         "--screen-every iterations (gap-certified)")
+    ap.add_argument("--screen-every", type=int, default=50)
     ap.add_argument("--ckpt-dir", default="artifacts/svm_ckpt")
     args = ap.parse_args()
 
@@ -172,7 +200,8 @@ def main():
     ds = make_sparse_classification(m=args.m, n=args.n, seed=0)
     results = run_path(ds.X, ds.y, n_lambdas=args.n_lambdas,
                        model=args.model, data=args.data,
-                       ckpt_dir=args.ckpt_dir, rules=rules)
+                       ckpt_dir=args.ckpt_dir, rules=rules,
+                       dynamic=args.dynamic, screen_every=args.screen_every)
     Path("artifacts").mkdir(exist_ok=True)
     Path("artifacts/svm_path.json").write_text(json.dumps(results, indent=2))
 

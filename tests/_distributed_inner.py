@@ -13,8 +13,15 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import fista_solve, lambda_max, screen, theta_at_lambda_max  # noqa: E402
+from repro.core import (  # noqa: E402
+    fista_solve,
+    fista_solve_dynamic,
+    lambda_max,
+    screen,
+    theta_at_lambda_max,
+)
 from repro.core.distributed import fista_sharded, screen_sharded, svm_mesh  # noqa: E402
+from repro.core.dual import safe_theta_and_delta  # noqa: E402
 from repro.data import make_sparse_classification  # noqa: E402
 
 
@@ -29,7 +36,8 @@ def main():
     lam2 = 0.4 * lmax
 
     keep_ref, bounds_ref = screen(X, y, lmax, lam2, theta1)
-    keep_d, bounds_d = screen_sharded(mesh, X, y, lmax, lam2, theta1)
+    keep_d, bounds_d = screen_sharded(mesh, X, y, lmax, lam2, theta1,
+                                      delta=0.0)  # theta1 exact at lam_max
     np.testing.assert_allclose(
         np.asarray(bounds_d), np.asarray(bounds_ref), rtol=2e-4, atol=2e-4
     )
@@ -40,6 +48,53 @@ def main():
     dist = fista_sharded(mesh, X, y, lam2, max_iters=20000, tol=1e-12)
     np.testing.assert_allclose(float(dist.obj), float(ref.obj), rtol=1e-4)
     np.testing.assert_allclose(np.asarray(dist.w), np.asarray(ref.w), atol=5e-3)
+
+    # -- delta > 0: sequentially solved (inexact) anchor ------------------
+    lam1 = 0.5 * lmax
+    res1 = fista_solve(X, y, lam1, max_iters=40000, tol=1e-13)
+    theta_s, delta_s = safe_theta_and_delta(X, y, res1.w, res1.b, lam1)
+    assert float(delta_s) > 0.0
+    lam2b = 0.9 * lam1  # ratio where the delta inflation reaches the mask
+    keep_ref2, bounds_ref2 = screen(X, y, lam1, lam2b, theta_s, delta=delta_s)
+    # feature-sharded-only mesh: no cross-shard reduction touches the sample
+    # axis, and _shared_from_stats delegates to the oracle's own scalar code,
+    # so the keep mask must match BITWISE
+    mesh_col = svm_mesh(model=8, data=1)
+    keep_d2, bounds_d2 = screen_sharded(mesh_col, X, y, lam1, lam2b, theta_s,
+                                        delta=delta_s)
+    assert np.array_equal(np.asarray(keep_d2), np.asarray(keep_ref2)), (
+        "delta>0 sharded keep mask != local oracle "
+        f"({int(np.sum(np.asarray(keep_d2) != np.asarray(keep_ref2)))} mismatches)"
+    )
+    # 2-D mesh: psum reassociation => tolerance equivalence
+    keep_d3, bounds_d3 = screen_sharded(mesh, X, y, lam1, lam2b, theta_s,
+                                        delta=delta_s)
+    np.testing.assert_allclose(np.asarray(bounds_d3), np.asarray(bounds_ref2),
+                               rtol=2e-4, atol=2e-4)
+    # the delta-blind screen (the pre-fix behavior) must be STRICTLY more
+    # aggressive on this instance — i.e. delta genuinely reaches the keep
+    # mask, so reintroducing the delta-dropping bug would fail this check
+    keep_blind, _ = screen_sharded(mesh_col, X, y, lam1, lam2b, theta_s,
+                                   delta=0.0)
+    assert int(np.sum(keep_blind)) < int(np.sum(keep_d2)), (
+        int(np.sum(keep_blind)), int(np.sum(keep_d2)))
+
+    # -- dynamic (in-solver) screening, sharded vs single-device ----------
+    dyn = fista_sharded(mesh, X, y, lam2, max_iters=20000, tol=1e-12,
+                        screen_every=25)
+    np.testing.assert_allclose(float(dyn.obj), float(ref.obj), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(dyn.w), np.asarray(ref.w), atol=5e-3)
+    n_seg = int(dyn.n_segments)
+    kept = np.asarray(dyn.kept_per_segment)[:n_seg]
+    assert n_seg >= 1 and np.all(np.diff(kept) <= 0), kept
+    # every screened feature is inactive at the single-device optimum
+    screened = ~np.asarray(dyn.feature_mask)
+    assert np.abs(np.asarray(ref.w))[screened].max(initial=0.0) <= 1e-6
+    loc = fista_solve_dynamic(X, y, lam2, max_iters=20000, tol=1e-12,
+                              screen_every=25)
+    kept_loc = np.asarray(loc.kept_per_segment)[: int(loc.n_segments)]
+    assert kept.shape == kept_loc.shape and np.max(np.abs(kept - kept_loc)) <= 2, (
+        kept, kept_loc)
     print("DISTRIBUTED_OK")
 
 

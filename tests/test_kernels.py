@@ -47,6 +47,30 @@ def test_screen_kernel_matches_oracle(shape, dtype):
     np.testing.assert_allclose(out, ref, rtol=tol, atol=tol * max(1.0, np.abs(ref).max()))
 
 
+def test_screen_kernel_delta_matches_oracle():
+    """delta-inflated bounds flow through the packed scalars unchanged."""
+    X, y = _data(256, 128, jnp.float32, seed=2)
+    lmax = lambda_max(X, y)
+    theta1 = theta_at_lambda_max(y, lmax)
+    from repro.core import screen_bounds
+
+    for delta in (0.0, 0.05, 0.3):
+        ref = np.asarray(screen_bounds(X, y, lmax, 0.5 * lmax, theta1,
+                                       delta=delta))
+        out = np.asarray(screen_bounds_op(X, y, lmax, 0.5 * lmax, theta1,
+                                          block_m=64, block_n=128,
+                                          interpret=True, delta=delta))
+        np.testing.assert_allclose(out, ref, rtol=1e-5,
+                                   atol=1e-5 * max(1.0, np.abs(ref).max()))
+    # inflation is monotone: a larger delta never shrinks a bound
+    b0 = np.asarray(screen_bounds_op(X, y, lmax, 0.5 * lmax, theta1,
+                                     block_m=64, block_n=128, interpret=True))
+    b1 = np.asarray(screen_bounds_op(X, y, lmax, 0.5 * lmax, theta1,
+                                     block_m=64, block_n=128, interpret=True,
+                                     delta=0.1))
+    assert np.all(b1 >= b0 - 1e-6)
+
+
 @pytest.mark.parametrize("blocks", BLOCKS)
 def test_screen_kernel_block_shape_invariance(blocks):
     bm, bn = blocks
