@@ -73,3 +73,16 @@ for k, tele in sorted(dyn.extras["dynamic"].items()):
     if tele["kept_per_segment"] and tele["kept_per_segment"][-1] < dyn.kept[k]:
         print(f"  step {k}: initial screen kept {int(dyn.kept[k])} "
               f"-> segments {tele['kept_per_segment']}")
+
+# 8. the on-device path engine: the SAME screened path as one jitted
+#    lax.scan program — zero host round trips between lambda steps. Use it
+#    when solves are fast and orchestration dominates (engine="host" keeps
+#    the gather-mode FLOP reduction and verified sample rules). A batch of
+#    grids/problems vmaps onto one program via core.svm_path_batched.
+import time
+
+t0 = time.perf_counter()
+scan = svm_path(ds.X, ds.y, n_lambdas=8, lam_min_ratio=0.1, engine="scan")
+print(f"\nscan engine: {time.perf_counter() - t0:.3f}s "
+      f"(obj match host: "
+      f"{float(abs(scan.objectives - path.objectives).max()):.2e})")

@@ -1,12 +1,20 @@
 #!/usr/bin/env bash
-# CI matrix (see ROADMAP.md). Lanes, each runnable by name:
+# CI matrix (see ROADMAP.md and .github/workflows/ci.yml). Lanes, each
+# runnable by name:
 #
 #   ./scripts/ci.sh              # full:    the whole tier-1 suite
 #   ./scripts/ci.sh full
 #   ./scripts/ci.sh fast         # fast:    tier-1 minus slow (multi-process)
 #   ./scripts/ci.sh kernels      # kernels: Pallas suites, interpret mode
 #                                #          forced via REPRO_PALLAS_INTERPRET=1
-#   ./scripts/ci.sh all          # kernels lane, then full (which covers fast)
+#   ./scripts/ci.sh x64          # x64:     numerical core under
+#                                #          JAX_ENABLE_X64=1 (screening bound
+#                                #          math, solver, paths)
+#   ./scripts/ci.sh bench        # bench:   engine-equivalence smoke
+#                                #          (bench_screening --smoke): catches
+#                                #          host/scan/pallas regressions in
+#                                #          seconds, asserts objective match
+#   ./scripts/ci.sh all          # kernels + x64 + bench, then full
 #
 # Extra pytest args pass through after the lane name (a leading '-' arg is
 # treated as pytest args for the full lane, back-compat):
@@ -19,10 +27,15 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 lane="${1:-full}"
 case "$lane" in
-  full|fast|kernels|all) shift || true ;;
+  full|fast|kernels|x64|bench|all) shift || true ;;
   -*) lane="full" ;;  # bare pytest args => full lane (legacy invocation)
-  *) echo "unknown lane '$lane' (full|fast|kernels|all)" >&2; exit 2 ;;
+  *) echo "unknown lane '$lane' (full|fast|kernels|x64|bench|all)" >&2; exit 2 ;;
 esac
+
+# suites whose numerics are dtype-parametric: the safe-screening bound
+# geometry, the solver, and both path engines must hold in fp64 too
+X64_SUITES="tests/test_screening.py tests/test_dual.py tests/test_solver.py \
+tests/test_path.py tests/test_path_scan.py"
 
 run_lane() {
   local name="$1"; shift
@@ -38,13 +51,21 @@ run_lane() {
       REPRO_PALLAS_INTERPRET=1 python -m pytest -x -q \
         tests/test_kernels.py "$@"
       ;;
+    x64)
+      JAX_ENABLE_X64=1 python -m pytest -x -q $X64_SUITES "$@"
+      ;;
+    bench)
+      python -m benchmarks.bench_screening --smoke
+      ;;
   esac
 }
 
 if [ "$lane" = "all" ]; then
-  # kernels (interpret-forced), then full — full already includes every
-  # non-slow test, so running fast here would only duplicate work
+  # kernels (interpret-forced), x64, bench smoke, then full — full already
+  # includes every non-slow test, so running fast here would duplicate work
   run_lane kernels "$@"
+  run_lane x64 "$@"
+  run_lane bench
   run_lane full "$@"
 else
   run_lane "$lane" "$@"

@@ -24,6 +24,7 @@ from .screening import (  # noqa: F401
 from .solver import (  # noqa: F401
     DynamicFistaResult,
     FistaResult,
+    fista_run,
     fista_solve,
     fista_solve_dynamic,
     gap_theta_delta,
@@ -31,6 +32,11 @@ from .solver import (  # noqa: F401
     soft_threshold,
 )
 from .path import PathDriver, PathResult, default_lambda_grid, svm_path  # noqa: F401
+from .path_scan import (  # noqa: F401
+    ScanPathOutputs,
+    svm_path_batched,
+    svm_path_scan,
+)
 from .rules import (  # noqa: F401
     CompositeRule,
     ConvexRegion,

@@ -161,8 +161,14 @@ def fista_sharded(
     screen_every: Optional[int] = None,
     tau: float = SAFE_TAU,
     n_feas_iters: int = 4,
+    L: Optional[jax.Array] = None,
 ):
     """Distributed FISTA on 2-D sharded X. Same math as solver.fista_solve.
+
+    ``L`` (optional): a known Lipschitz upper bound — the path launcher
+    passes the full-X estimate once per path so every sharded solve skips
+    the 30-iteration distributed power sweep (masked subproblems never
+    have a larger ``sigma_max``; see ``solver.lipschitz_estimate``).
 
     ``sample_mask`` (0/1 over samples, sharded like ``y``) drops screened
     samples from the loss without reshaping the sharded operands — the
@@ -192,7 +198,9 @@ def fista_sharded(
     if feature_mask is None:
         feature_mask = jnp.ones((m,), jnp.float32)
 
-    def local(x_blk, y_blk, sm_blk, fm_blk, w_blk, b_scalar):
+    have_L = L is not None
+
+    def local(x_blk, y_blk, sm_blk, fm_blk, w_blk, b_scalar, L_in):
         def margins(w):
             part = x_blk.T @ w  # (n_loc,)
             return jax.lax.psum(part, "model")
@@ -218,48 +226,59 @@ def fista_sharded(
             l1 = jax.lax.psum(jnp.sum(jnp.abs(w)), "model")
             return loss + lam * l1
 
-        # power iteration for L (sharded)
-        def pow_body(v, _):
-            nrm = jnp.sqrt(jax.lax.psum(v @ v, data_axes))
-            v = v / jnp.maximum(nrm, 1e-30)
-            u_w = jax.lax.psum(x_blk @ v, data_axes)  # wait: X@v reduces over data
-            u_b = jax.lax.psum(jnp.sum(v), data_axes)
-            vn = x_blk.T @ u_w
-            vn = jax.lax.psum(vn, "model") + u_b
-            return vn, None
+        if have_L:
+            # path-shared upper bound: skip the distributed power sweep
+            Lc = L_in
+        else:
+            # power iteration for L (sharded)
+            def pow_body(v, _):
+                nrm = jnp.sqrt(jax.lax.psum(v @ v, data_axes))
+                v = v / jnp.maximum(nrm, 1e-30)
+                u_w = jax.lax.psum(x_blk @ v, data_axes)  # X@v reduces over data
+                u_b = jax.lax.psum(jnp.sum(v), data_axes)
+                vn = x_blk.T @ u_w
+                vn = jax.lax.psum(vn, "model") + u_b
+                return vn, None
 
-        v0 = jnp.cos(jnp.arange(y_blk.shape[0], dtype=jnp.float32) + 1.0)
-        v, _ = jax.lax.scan(pow_body, v0, None, length=30)
-        L = jnp.sqrt(jax.lax.psum(v @ v, data_axes))
-        L = jnp.maximum(L * 1.01, 1e-12)
-        inv_L = 1.0 / L
+            v0 = jnp.cos(jnp.arange(y_blk.shape[0], dtype=jnp.float32) + 1.0)
+            v, _ = jax.lax.scan(pow_body, v0, None, length=30)
+            Lc = jnp.sqrt(jax.lax.psum(v @ v, data_axes))
+        Lc = jnp.maximum(Lc * 1.01, 1e-12)
+        inv_L = 1.0 / Lc
 
         def make_body(fm):
+            def prox_step(w_a, b_a):
+                """Proximal-gradient step anchored at (w_a, b_a)."""
+                gw, gb, _ = grad(w_a, b_a)
+                w_s = soft_threshold(w_a - inv_L * gw, lam * inv_L)
+                b_s = b_a - inv_L * gb
+                if fm is not None:
+                    w_s = w_s * fm
+                return w_s, b_s, objective(w_s, b_s)
+
             def body(st):
                 w, b, wp, bp, t, k, obj, rel = st
                 t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
                 beta = (t - 1.0) / t_next
                 zw = w + beta * (w - wp)
                 zb = b + beta * (b - bp)
-                gw, gb, _ = grad(zw, zb)
-                w_new = soft_threshold(zw - inv_L * gw, lam * inv_L)
-                b_new = zb - inv_L * gb
-                if fm is not None:
-                    w_new = w_new * fm
-                obj_new = objective(w_new, b_new)
+                w_new, b_new, obj_new = prox_step(zw, zb)
 
-                gw_p, gb_p, _ = grad(w, b)
-                w_pl = soft_threshold(w - inv_L * gw_p, lam * inv_L)
-                b_pl = b - inv_L * gb_p
-                if fm is not None:
-                    w_pl = w_pl * fm
-                obj_pl = objective(w_pl, b_pl)
+                # monotone restart under lax.cond: the plain step's three
+                # psum sweeps are paid only when the extrapolated step
+                # actually increased the (replicated) objective — the
+                # predicate is identical on every device, so all shards
+                # take the same branch and the collectives stay matched.
+                def restart(_):
+                    w_pl, b_pl, obj_pl = prox_step(w, b)
+                    return w_pl, b_pl, obj_pl, jnp.float32(1.0)
 
-                bad = obj_new > obj
-                w_new = jnp.where(bad, w_pl, w_new)
-                b_new = jnp.where(bad, b_pl, b_new)
-                obj_new = jnp.where(bad, obj_pl, obj_new)
-                t_next = jnp.where(bad, 1.0, t_next)
+                def accept(_):
+                    return w_new, b_new, obj_new, t_next
+
+                w_new, b_new, obj_new, t_next = jax.lax.cond(
+                    obj_new > obj, restart, accept, None
+                )
 
                 rel = jnp.abs(obj - obj_new) / jnp.maximum(jnp.abs(obj), 1e-30)
                 return (w_new, b_new, w, b, t_next, k + 1, obj_new, rel)
@@ -399,14 +418,15 @@ def fista_sharded(
         local,
         mesh=mesh,
         in_specs=(P("model", *data_axes), P(*data_axes), P(*data_axes),
-                  P("model"), P("model"), P()),
+                  P("model"), P("model"), P(), P()),
         out_specs=(P("model"), *scalar_out)
         if not dynamic
         else (P("model"), *scalar_out, P("model"), P(), P(), P()),
         check_rep=False,
     )
     out = fn(X, y, jnp.asarray(sample_mask, jnp.float32),
-             jnp.asarray(feature_mask, jnp.float32), w0, b0)
+             jnp.asarray(feature_mask, jnp.float32), w0, b0,
+             jnp.asarray(L if have_L else 0.0, jnp.float32))
     if not dynamic:
         w, b, obj, k, conv = out
         return FistaResult(w=w, b=b, obj=obj, n_iters=k, converged=conv)

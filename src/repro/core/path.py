@@ -33,6 +33,19 @@ Exactness: feature rules are safe given ``||theta1 - theta*|| <= delta``
 (gap-certified, see dual.safe_theta_and_delta); sample rules are exact at
 termination via the verification loop. Property tests cover both
 (tests/test_screening.py, tests/test_rules.py).
+
+Engines: this host-orchestrated driver (``engine="host"``) is one of two
+path engines — ``core/path_scan.py`` runs the same feature-screened path as
+a single jitted ``lax.scan`` program (``engine="scan"``), trading the
+gather-mode FLOP reduction and the sample-verification loop for zero
+per-step host round trips. Rule of thumb: gather mode shrinks FLOPs, scan
+mode kills orchestration overhead. ``svm_path(engine=...)`` selects.
+
+The Lipschitz constant is estimated once per path on the full ``X`` and
+reused by every reduced solve — masking/gathering rows or columns never
+increases ``sigma_max``, so the full-matrix estimate stays a valid step
+bound (and saves the 30-iteration power sweep per solve, per verification
+round). ``exact_lipschitz=True`` restores the per-solve estimate.
 """
 
 from __future__ import annotations
@@ -60,7 +73,12 @@ from .rules import (
 )
 from .rules.base import dynamic_tau, solve_with_verification
 from .screening import SAFE_TAU
-from .solver import DynamicFistaResult, fista_solve, fista_solve_dynamic
+from .solver import (
+    DynamicFistaResult,
+    fista_solve,
+    fista_solve_dynamic,
+    lipschitz_estimate,
+)
 
 __all__ = ["PathResult", "PathDriver", "svm_path", "default_lambda_grid"]
 
@@ -124,6 +142,8 @@ class PathDriver:
         max_verify_rounds: int = 3,
         dynamic: bool = False,
         screen_every: int = 50,
+        exact_lipschitz: bool = False,
+        use_pallas: Optional[bool] = None,
     ):
         """``dynamic=True`` swaps every solve for the segmented
         ``solver.fista_solve_dynamic``: the step's sequential screen seeds a
@@ -131,7 +151,12 @@ class PathDriver:
         ``screen_every`` iterations from the gap-certified at-lambda region.
         Per-step, per-segment kept-counts/gaps land in
         ``PathResult.extras["dynamic"]``. Safe with any rule mix (the
-        in-solver screen is a-priori safe on its own certificate)."""
+        in-solver screen is a-priori safe on its own certificate).
+
+        ``exact_lipschitz=True`` re-estimates L per reduced solve instead of
+        reusing the full-X upper bound computed once per path (see module
+        docstring); ``use_pallas`` routes the FISTA hot-loop sweeps through
+        the fused Pallas kernels (None = env/backend policy)."""
         if reduce not in ("gather", "mask"):
             raise ValueError(f"reduce must be 'gather' or 'mask', got {reduce!r}")
         self.rules = make_rules(rules)
@@ -142,6 +167,8 @@ class PathDriver:
         self.max_verify_rounds = int(max_verify_rounds)
         self.dynamic = bool(dynamic)
         self.screen_every = int(screen_every)
+        self.exact_lipschitz = bool(exact_lipschitz)
+        self.use_pallas = use_pallas
 
     # -- reduction helpers -------------------------------------------------
 
@@ -153,19 +180,21 @@ class PathDriver:
         valid = np.arange(pad) < len(f_idx)
         return sel, valid
 
-    def _solve(self, Xr, yr, lam, w0, b0, sample_mask, feature_mask=None):
+    def _solve(self, Xr, yr, lam, w0, b0, sample_mask, feature_mask=None,
+               L=None):
         if self.dynamic:
             return fista_solve_dynamic(
                 Xr, yr, jnp.asarray(lam), w0=w0, b0=b0,
-                max_iters=self.max_iters, tol=self.tol,
+                max_iters=self.max_iters, tol=self.tol, L=L,
                 sample_mask=sample_mask,
                 feature_mask=feature_mask,
                 screen_every=self.screen_every, tau=dynamic_tau(self.rules),
+                use_pallas=self.use_pallas,
             )
         return fista_solve(
             Xr, yr, jnp.asarray(lam), w0=w0, b0=b0,
-            max_iters=self.max_iters, tol=self.tol,
-            sample_mask=sample_mask,
+            max_iters=self.max_iters, tol=self.tol, L=L,
+            sample_mask=sample_mask, use_pallas=self.use_pallas,
         )
 
     # -- main loop ---------------------------------------------------------
@@ -188,6 +217,11 @@ class PathDriver:
         sample_rules = [r for r in self.rules if r.axis == AXIS_SAMPLES]
         for rule in self.rules:
             rule.prepare(X, y)
+
+        # one Lipschitz estimate serves every solve of the path (including
+        # verification re-solves): sigma_max of a masked/gathered subproblem
+        # never exceeds the full X's. Opt out via exact_lipschitz=True.
+        L_path = None if self.exact_lipschitz else lipschitz_estimate(X)
 
         lam_max_val = float(lambda_max(X, y))
         if lambdas is None:
@@ -237,8 +271,9 @@ class PathDriver:
             t0 = time.perf_counter()
             res0 = self._solve(
                 X, y, float(lambdas[0]),
-                jnp.zeros((m,), X.dtype), jnp.mean(y), None,
+                jnp.zeros((m,), X.dtype), jnp.mean(y), None, L=L_path,
             )
+            jax.block_until_ready(res0)  # stamp *finished* device work
             wall[0] = time.perf_counter() - t0
             w_host = np.asarray(res0.w, dtype=np.float64)
             b_host = float(res0.b)
@@ -288,7 +323,7 @@ class PathDriver:
                 s_idx = np.nonzero(mask)[0]
                 res, w_full = self._solve_reduced(
                     X, y, X_np, lam, f_mask, f_idx, mask, s_idx,
-                    warm["w"], warm["b"],
+                    warm["w"], warm["b"], L_path,
                 )
                 warm["w"], warm["b"] = w_full, float(res.b)
                 return res, w_full, float(res.b)
@@ -325,6 +360,10 @@ class PathDriver:
             objectives[k] = float(res.obj)
             active[k] = int(np.sum(np.abs(w_full) > 1e-10))
             iters[k] = int(res.n_iters)
+            # the certificate dispatch above is async — block so the step's
+            # wall time covers all device work it caused, not just what the
+            # host happened to wait for
+            jax.block_until_ready((theta_prev, delta_prev))
             wall[k] = time.perf_counter() - t0
 
         kept_s[0] = 0
@@ -341,8 +380,11 @@ class PathDriver:
     # -- one reduced solve -------------------------------------------------
 
     def _solve_reduced(self, X, y, X_np, lam, f_mask, f_idx, s_mask, s_idx,
-                       w_host, b_host):
-        """Reduce X on both axes per self.reduce, solve, scatter w back."""
+                       w_host, b_host, L=None):
+        """Reduce X on both axes per self.reduce, solve, scatter w back.
+
+        ``L``: the path-shared Lipschitz upper bound (valid for any
+        reduction of X; None re-estimates on the reduced matrix)."""
         m, n = X.shape
         screening_f = len(f_idx) < m
         screening_s = len(s_idx) < n
@@ -365,7 +407,8 @@ class PathDriver:
             smask = jnp.asarray(valid_s.astype(dtype)) if screening_s else None
             res = self._solve(jnp.asarray(Xr), yr, lam, w0,
                               jnp.asarray(b_host, X.dtype), smask,
-                              feature_mask=jnp.asarray(valid_f.astype(dtype)))
+                              feature_mask=jnp.asarray(valid_f.astype(dtype)),
+                              L=L)
             w_full = np.zeros((m,), dtype=np.float64)
             w_full[sel_f[: len(f_idx)]] = np.asarray(res.w, np.float64)[: len(f_idx)]
         else:
@@ -373,7 +416,8 @@ class PathDriver:
             w0 = jnp.asarray((w_host * f_mask).astype(dtype))
             smask = jnp.asarray(s_mask.astype(dtype)) if screening_s else None
             res = self._solve(Xr, y, lam, w0, jnp.asarray(b_host, X.dtype), smask,
-                              feature_mask=jnp.asarray(f_mask.astype(dtype)))
+                              feature_mask=jnp.asarray(f_mask.astype(dtype)),
+                              L=L)
             w_full = np.asarray(res.w, dtype=np.float64) * f_mask
 
         return res, w_full
@@ -393,6 +437,9 @@ def svm_path(
     rules=None,
     dynamic: bool = False,
     screen_every: int = 50,
+    engine: str = "host",
+    exact_lipschitz: bool = False,
+    use_pallas: Optional[bool] = None,
 ) -> PathResult:
     """Solve the L1-L2-SVM path with configurable screening rules.
 
@@ -402,10 +449,37 @@ def svm_path(
     other reductions. ``screening=False`` (or ``rules=[]``) disables all.
     ``dynamic=True`` additionally re-screens inside each FISTA solve every
     ``screen_every`` iterations (see :class:`PathDriver`).
+
+    ``engine`` selects the execution strategy:
+
+    * ``"host"`` — this driver: per-step host orchestration, gather/mask
+      reduction on both axes, any rule mix, sample-rule verification;
+    * ``"scan"`` — ``core/path_scan.py``: the whole path as one jitted
+      ``lax.scan`` program (feature rule only, mask reduction, zero host
+      round trips). See that module for the trade-off discussion.
     """
+    if engine == "scan":
+        from .path_scan import svm_path_scan  # deferred: path_scan imports us
+
+        if rules is not None:
+            raise ValueError(
+                "engine='scan' supports the built-in feature rule only "
+                "(screening=True/False, tau=...); use engine='host' for "
+                f"custom rule mixes, got rules={rules!r}"
+            )
+        return svm_path_scan(
+            X, y, lambdas=lambdas, n_lambdas=n_lambdas,
+            lam_min_ratio=lam_min_ratio, screening=screening, tau=tau,
+            tol=tol, max_iters=max_iters, dynamic=dynamic,
+            screen_every=screen_every, use_pallas=use_pallas,
+            exact_lipschitz=exact_lipschitz,
+        )
+    if engine != "host":
+        raise ValueError(f"engine must be 'host' or 'scan', got {engine!r}")
     if rules is None:
         rules = [FeatureVIRule(tau=tau)] if screening else []
     driver = PathDriver(rules=rules, reduce=reduce, tol=tol, max_iters=max_iters,
-                        dynamic=dynamic, screen_every=screen_every)
+                        dynamic=dynamic, screen_every=screen_every,
+                        exact_lipschitz=exact_lipschitz, use_pallas=use_pallas)
     return driver.run(X, y, lambdas=lambdas, n_lambdas=n_lambdas,
                       lam_min_ratio=lam_min_ratio)

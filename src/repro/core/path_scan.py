@@ -1,0 +1,457 @@
+"""On-device regularization-path engine: the whole path as one XLA program.
+
+Why a second engine
+-------------------
+``core/path.py::PathDriver`` (``engine="host"``) orchestrates the path from
+Python: per step it screens, gathers the kept rows/columns into a bucketed
+submatrix, solves, verifies sample rules at the solution, and certifies the
+next region — paying a device↔host round trip, a dispatch, and (in gather
+mode) a possible re-trace at every step. That is the right engine when the
+*FLOPs* dominate (gather mode physically shrinks the solve to
+``kept_features x kept_samples``) or when verified sample rules are in play
+(the KKT re-admission loop is inherently host-side control flow).
+
+On the bench-scale instances the opposite regime holds: solves converge in
+tens of iterations and the path is *orchestration*-bound — profiles show the
+host engine spending most of its wall clock blocked on transfers, eager
+re-compiles of the per-step certificate, and per-solve Lipschitz power
+iterations. This module is the engine for that regime (``engine="scan"``):
+
+* the lambda grid is walked by a single jitted ``lax.scan`` whose carry is
+  ``(w, b, theta, delta, lam_prev)`` — XLA aliases the carry buffers in
+  place (donated, no copies), and nothing syncs to the host until the final
+  stacked ``PathResult`` is pulled once at the end;
+* each scan step rebuilds the paper's VI region from the carried anchor
+  (``screening.shared_scalars_from_stats``), evaluates the feature bounds
+  with the theta-independent reductions hoisted out of the loop (one sweep
+  per step, paper Sec. 6.4), mask-mode solves with the fused two-sweep FISTA
+  body (``solver.fista_run``, optionally Pallas-backed and/or dynamic), and
+  gap-certifies the solution (``solver.gap_theta_delta``) to anchor the next
+  step;
+* the Lipschitz constant is estimated once for the full ``X`` and reused by
+  every step — valid because masking rows/columns never increases
+  ``sigma_max`` (see ``solver.lipschitz_estimate``); per-step re-estimation
+  is available via ``exact_lipschitz=True``;
+* :func:`svm_path_batched` is ``vmap`` of the same step over a batch of
+  problems or lambda grids — one program solving B paths at once
+  (hyperparameter sweeps, multi-tenant serving). Under ``vmap`` the
+  solver's restart ``lax.cond`` lowers to a select (both branches run) and
+  the while loops run until the *slowest* batch element converges; the
+  throughput win is that every launch, sweep, and reduction is batched.
+
+Trade-off in one line: gather mode shrinks FLOPs, scan mode kills
+orchestration overhead — measure with ``benchmarks/bench_screening.py``
+(the ``engines`` section of ``BENCH_screening.json``).
+
+The scan engine deliberately supports the *feature*-axis reduction only
+(the paper's a-priori-safe rule, plus the in-solver dynamic refresh).
+Sample rules need the a-posteriori verification loop, which is host
+control flow — use ``engine="host"`` for those.
+"""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dual import bias_at_lambda_max, lambda_max, theta_at_lambda_max
+from .path import PathResult, default_lambda_grid
+from .screening import (
+    SAFE_TAU,
+    FeatureReductions,
+    screen_bounds_from_reductions,
+    shared_scalars_from_stats,
+)
+from .solver import (
+    _dynamic_run,
+    _resolve_pallas,
+    fista_run,
+    gap_theta_delta,
+    lipschitz_estimate,
+)
+
+__all__ = ["svm_path_scan", "svm_path_batched", "ScanPathOutputs"]
+
+
+class ScanPathOutputs(NamedTuple):
+    """Stacked device-side per-step outputs of the scan engine (leading T)."""
+
+    w: jax.Array          # (T, m)
+    b: jax.Array          # (T,)
+    obj: jax.Array        # (T,)
+    kept: jax.Array       # (T,) int32 — live features fed to the solver
+    active: jax.Array     # (T,) int32 — nnz(w) at the solution
+    n_iters: jax.Array    # (T,) int32
+    converged: jax.Array  # (T,) bool
+    gap: jax.Array        # (T,) duality gap certified at the accepted point
+    delta: jax.Array      # (T,) theta-radius anchoring the next step
+
+
+def _path_scan_program(
+    X: jax.Array,
+    y: jax.Array,
+    lambdas: jax.Array,
+    w0: jax.Array,
+    b0: jax.Array,
+    theta0: jax.Array,
+    delta0: jax.Array,
+    lam0: jax.Array,
+    L: Optional[jax.Array],
+    tau,
+    tol,
+    *,
+    max_iters: int,
+    screening: bool,
+    dynamic: bool,
+    screen_every: int,
+    use_pallas: bool,
+    exact_lipschitz: bool,
+    n_feas_iters: int = 8,
+) -> ScanPathOutputs:
+    """The traced whole-path program (one ``lax.scan`` over the grid).
+
+    Pure function of device values — jitted (and optionally vmapped) by the
+    public wrappers. ``(w0, b0, theta0, delta0)`` seed the carry: an anchor
+    primal/dual pair at ``lam0`` with ``||theta0 - theta*(lam0)|| <= delta0``
+    (the closed form at ``lambda_max`` in the standard entry points).
+    """
+    m, n = X.shape
+    dt = X.dtype
+    tau = jnp.asarray(tau, dt)
+    lambdas = jnp.asarray(lambdas, dt)
+
+    if L is None:
+        L = lipschitz_estimate(X)
+    L = jnp.maximum(L * 1.01, 1e-12)
+    inv_L = 1.0 / L
+
+    # theta-independent screen reductions, hoisted out of the scan: per step
+    # only the O(mn) ``X @ (y * theta)`` sweep remains (paper Sec. 6.4).
+    ones = jnp.ones((n,), dt)
+    d_one = X @ y          # fhat_j^T 1
+    d_y = X @ ones         # fhat_j^T y
+    d_sq = jnp.sum(X * X, axis=1)
+    one_y = jnp.sum(y)
+    n_tot = jnp.asarray(float(n), dt)
+
+    def step(carry, lam):
+        w, b, theta, delta, lam_prev = carry
+
+        # -- sequential screen from the carried anchor ---------------------
+        if screening:
+            sh = shared_scalars_from_stats(
+                lam_prev, lam, one_y=one_y,
+                theta_dot_one=jnp.sum(theta), theta_dot_y=theta @ y,
+                theta_sq=theta @ theta, n_tot=n_tot, delta=delta,
+            )
+            red = FeatureReductions(
+                d_theta=X @ (y * theta), d_one=d_one, d_y=d_y, d_sq=d_sq
+            )
+            bounds = screen_bounds_from_reductions(red, sh)
+            fmask = (bounds >= tau).astype(dt)
+        else:
+            fmask = jnp.ones((m,), dt)
+
+        # -- mask-mode solve on the live features --------------------------
+        w_init = w * fmask
+        if exact_lipschitz:
+            L_k = jnp.maximum(
+                lipschitz_estimate(X * fmask[:, None]) * 1.01, 1e-12
+            )
+            inv_Lk = 1.0 / L_k
+        else:
+            inv_Lk = inv_L
+        if dynamic:
+            res = _dynamic_run(
+                X, y, lam, w_init, b, inv_Lk, None, fmask,
+                max_iters, tol, screen_every, tau, 4, use_pallas,
+            )
+        else:
+            res = fista_run(
+                X, y, lam, w_init, b, inv_Lk, None, fmask,
+                max_iters, tol, use_pallas,
+            )
+
+        # -- gap-certify the accepted point: anchor for the next step ------
+        theta2, delta2, gap = gap_theta_delta(
+            X, y, res.w, res.b, lam, None, n_feas_iters=n_feas_iters
+        )
+
+        out = ScanPathOutputs(
+            w=res.w, b=res.b, obj=res.obj,
+            kept=jnp.sum(fmask).astype(jnp.int32),
+            active=jnp.sum(jnp.abs(res.w) > 1e-10).astype(jnp.int32),
+            n_iters=jnp.asarray(res.n_iters, jnp.int32),
+            converged=res.converged,
+            gap=gap, delta=delta2,
+        )
+        return (res.w, res.b, theta2, delta2, lam), out
+
+    carry0 = (w0, jnp.asarray(b0, dt), theta0, jnp.asarray(delta0, dt),
+              jnp.asarray(lam0, dt))
+    _, outs = jax.lax.scan(step, carry0, lambdas)
+    return outs
+
+
+def _engine_jit(static_kw: tuple, batched: Optional[str] = None):
+    """Build (and cache) the jitted single/vmapped engine for static opts.
+
+    ``batched``: None (single path), ``"grids"`` (shared problem, batched
+    lambda grids — X/y/anchors broadcast by vmap, not materialized), or
+    ``"problems"`` (independent problems, everything batched). The anchor
+    carry (``w0/b0/theta0/delta0``) is donated in the single-path engine so
+    XLA may alias it straight into the scan carry — skipped on backends
+    without donation support (CPU) to avoid spurious warnings.
+    """
+    key = (static_kw, batched)
+    fn = _ENGINE_CACHE.get(key)
+    if fn is not None:
+        return fn
+    raw = partial(_path_scan_program, **dict(static_kw))
+    # arg order: (X, y, lambdas, w0, b0, theta0, delta0, lam0, L, tau, tol)
+    if batched == "grids":
+        raw = jax.vmap(raw, in_axes=(None, None, 0, None, None, None, None,
+                                     None, None, None, None))
+    elif batched == "problems":
+        raw = jax.vmap(raw, in_axes=(0, 0, 0, 0, 0, 0, None, 0, None, None,
+                                     None))
+    donate = ()
+    if batched is None and jax.default_backend() != "cpu":
+        donate = (3, 4, 5, 6)
+    fn = jax.jit(raw, donate_argnums=donate)
+    _ENGINE_CACHE[key] = fn
+    return fn
+
+
+_ENGINE_CACHE: dict = {}
+
+
+def _validate_grid(lambdas) -> np.ndarray:
+    lambdas = np.asarray(lambdas, dtype=np.float64)
+    if lambdas.size == 0:
+        raise ValueError("empty lambda grid")
+    if not np.all(np.isfinite(lambdas)) or np.any(lambdas <= 0):
+        raise ValueError(f"lambda grid must be finite and positive: {lambdas}")
+    if np.any(np.diff(lambdas) >= 0):
+        raise ValueError(
+            "lambda grid must be strictly decreasing (screening regions "
+            f"certify theta*(lam2) only along a decreasing path): {lambdas}"
+        )
+    return lambdas
+
+
+def _static_opts(max_iters, screening, dynamic, screen_every, use_pallas,
+                 exact_lipschitz) -> tuple:
+    return (
+        ("max_iters", int(max_iters)),
+        ("screening", bool(screening)),
+        ("dynamic", bool(dynamic)),
+        ("screen_every", max(int(screen_every), 1)),
+        ("use_pallas", _resolve_pallas(use_pallas)),
+        ("exact_lipschitz", bool(exact_lipschitz)),
+    )
+
+
+def _to_path_result(lambdas, outs: ScanPathOutputs, lam_max_val, wall_s,
+                    screening, static_kw) -> PathResult:
+    T = len(lambdas)
+    per_step = np.full((T,), wall_s / max(T, 1), dtype=np.float64)
+    return PathResult(
+        lambdas=np.asarray(lambdas, np.float64),
+        weights=np.asarray(outs.w, np.float64),
+        biases=np.asarray(outs.b, np.float64),
+        objectives=np.asarray(outs.obj, np.float64),
+        kept=np.asarray(outs.kept, np.int64),
+        active=np.asarray(outs.active, np.int64),
+        solver_iters=np.asarray(outs.n_iters, np.int64),
+        # the engine never syncs mid-path, so per-step walls are not
+        # observable — report the uniform share of the (blocked) total and
+        # keep the exact total in extras.
+        wall_times=per_step,
+        screen_times=np.zeros((T,), np.float64),
+        screened=bool(screening),
+        kept_samples=np.zeros((T,), np.int64),
+        verify_rounds=np.zeros((T,), np.int64),
+        rules=("feature_vi",) if screening else (),
+        extras={
+            "engine": "scan",
+            "lam_max": float(lam_max_val),
+            "total_seconds": float(wall_s),
+            "gaps": np.asarray(outs.gap, np.float64),
+            "deltas": np.asarray(outs.delta, np.float64),
+            "converged": np.asarray(outs.converged, bool),
+            "options": dict(static_kw),
+        },
+    )
+
+
+def svm_path_scan(
+    X: jax.Array,
+    y: jax.Array,
+    lambdas: Optional[Sequence[float]] = None,
+    n_lambdas: int = 10,
+    lam_min_ratio: float = 0.1,
+    *,
+    screening: bool = True,
+    tau: float = SAFE_TAU,
+    tol: float = 1e-9,
+    max_iters: int = 4000,
+    dynamic: bool = False,
+    screen_every: int = 50,
+    use_pallas: Optional[bool] = None,
+    exact_lipschitz: bool = False,
+) -> PathResult:
+    """Solve the feature-screened path as ONE jitted XLA program.
+
+    Semantics match ``svm_path(..., reduce="mask", rules="feature_vi")``:
+    every step screens against the previous step's gap-certified anchor,
+    solves under the live mask to ``tol``, and certifies its own anchor —
+    but with zero host involvement between the first dispatch and the final
+    transfer. See the module docstring for when to prefer which engine.
+
+    ``use_pallas`` routes the FISTA hot-loop sweeps through the fused Pallas
+    kernels (None = env/backend policy, ``kernels/ops.fista_use_pallas``);
+    ``dynamic=True`` swaps each step's solve for the segmented
+    ``screen_every``-interval in-solver re-screen; ``exact_lipschitz=True``
+    re-runs the power iteration per step on the masked matrix instead of
+    reusing the full-X upper bound.
+    """
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    m, n = X.shape
+
+    lam_max_val = float(lambda_max(X, y))
+    if lambdas is None:
+        lambdas = default_lambda_grid(lam_max_val, n_lambdas, lam_min_ratio)
+    lambdas = _validate_grid(lambdas)
+
+    # anchor at lambda_max: closed form is exact => delta = 0 (core/dual.py)
+    w0 = jnp.zeros((m,), X.dtype)
+    b0 = bias_at_lambda_max(y)
+    theta0 = theta_at_lambda_max(y, jnp.asarray(lam_max_val, X.dtype))
+    delta0 = jnp.asarray(0.0, X.dtype)
+
+    static_kw = _static_opts(max_iters, screening, dynamic, screen_every,
+                             use_pallas, exact_lipschitz)
+    engine = _engine_jit(static_kw, batched=None)
+    t0 = time.perf_counter()
+    outs = engine(X, y, jnp.asarray(lambdas, X.dtype), w0, b0, theta0,
+                  delta0, jnp.asarray(lam_max_val, X.dtype), None,
+                  float(tau), float(tol))
+    outs = jax.block_until_ready(outs)
+    wall_s = time.perf_counter() - t0
+    return _to_path_result(lambdas, outs, lam_max_val, wall_s, screening,
+                           static_kw)
+
+
+def svm_path_batched(
+    X: jax.Array,
+    y: jax.Array,
+    lambdas: Optional[np.ndarray] = None,
+    n_lambdas: int = 10,
+    lam_min_ratio: float = 0.1,
+    *,
+    screening: bool = True,
+    tau: float = SAFE_TAU,
+    tol: float = 1e-9,
+    max_iters: int = 4000,
+    dynamic: bool = False,
+    screen_every: int = 50,
+    use_pallas: Optional[bool] = None,
+    exact_lipschitz: bool = False,
+) -> list[PathResult]:
+    """``vmap`` of the scan engine over a batch of problems or grids.
+
+    Two batching modes, selected by the rank of ``X``:
+
+    * ``X (m, n)``, ``lambdas (B, T)`` — one dataset, B lambda grids
+      (hyperparameter sweep / cross-validation over grids);
+    * ``X (B, m, n)``, ``y (B, n)`` — B independent problems
+      (multi-tenant serving), each on its own grid (``lambdas (B, T)``) or
+      on its own default geometric grid anchored at its own
+      ``lambda_max`` when ``lambdas`` is None.
+
+    Executes as ONE jitted program: every sweep, reduction, and solver
+    launch is batched, so B paths cost roughly one path's worth of
+    launches. The usual vmap caveats apply — the while loops run until the
+    slowest batch element converges and the restart ``lax.cond`` becomes a
+    select — so wall clock per path is bounded by the hardest problem in
+    the batch. The program is shard-transparent: inputs placed on a mesh
+    (e.g. batch-sharded ``X``) keep their sharding through jit, which is
+    how the sharded-solver mesh serves batched paths.
+
+    Returns one :class:`~repro.core.path.PathResult` per batch element
+    (shared total wall clock in ``extras["total_seconds"]``, batch size in
+    ``extras["batch"]``).
+    """
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    static_kw = _static_opts(max_iters, screening, dynamic, screen_every,
+                             use_pallas, exact_lipschitz)
+    if X.ndim == 2:
+        # one problem, B grids — X/y/anchors stay unbatched (vmap broadcasts)
+        if lambdas is None:
+            raise ValueError(
+                "grid-batched mode (2-D X) needs an explicit (B, T) lambdas"
+            )
+        grids = np.asarray(lambdas, np.float64)
+        if grids.ndim != 2:
+            raise ValueError(f"lambdas must be (B, T), got {grids.shape}")
+        B = grids.shape[0]
+        for g in grids:
+            _validate_grid(g)
+        m = X.shape[0]
+        lam_max_val = float(lambda_max(X, y))
+        lam_maxs = np.full((B,), lam_max_val)
+        engine = _engine_jit(static_kw, batched="grids")
+        args = (
+            X, y, jnp.asarray(grids, X.dtype), jnp.zeros((m,), X.dtype),
+            bias_at_lambda_max(y),
+            theta_at_lambda_max(y, jnp.asarray(lam_max_val, X.dtype)),
+            jnp.asarray(0.0, X.dtype), jnp.asarray(lam_max_val, X.dtype),
+        )
+    elif X.ndim == 3:
+        B, m, _ = X.shape
+        if y.ndim != 2 or y.shape[0] != B:
+            raise ValueError(f"y must be (B, n) for 3-D X, got {y.shape}")
+        lam_maxs = np.asarray(jax.vmap(lambda_max)(X, y), np.float64)
+        if lambdas is None:
+            ratios = np.geomspace(1.0, lam_min_ratio, n_lambdas)
+            grids = lam_maxs[:, None] * ratios[None, :]
+        else:
+            grids = np.asarray(lambdas, np.float64)
+            if grids.ndim == 1:
+                grids = np.broadcast_to(grids, (B, grids.shape[0])).copy()
+        for g in grids:
+            _validate_grid(g)
+        lam_maxs_j = jnp.asarray(lam_maxs, X.dtype)
+        engine = _engine_jit(static_kw, batched="problems")
+        args = (
+            X, y, jnp.asarray(grids, X.dtype), jnp.zeros((B, m), X.dtype),
+            jax.vmap(bias_at_lambda_max)(y),
+            jax.vmap(theta_at_lambda_max)(y, lam_maxs_j),
+            jnp.asarray(0.0, X.dtype), lam_maxs_j,
+        )
+    else:
+        raise ValueError(f"X must be (m, n) or (B, m, n), got {X.shape}")
+
+    t0 = time.perf_counter()
+    outs = engine(*args, None, float(tau), float(tol))
+    outs = jax.block_until_ready(outs)
+    wall_s = time.perf_counter() - t0
+
+    results = []
+    for i in range(B):
+        sub = ScanPathOutputs(*(np.asarray(v)[i] for v in outs))
+        r = _to_path_result(grids[i], sub, float(lam_maxs[i]), wall_s / B,
+                            screening, static_kw)
+        r.extras["total_seconds"] = float(wall_s)
+        r.extras["batch"] = B
+        r.extras["batch_index"] = i
+        results.append(r)
+    return results

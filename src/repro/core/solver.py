@@ -14,10 +14,43 @@ Gradients (paper Eqs. 24-25), with xi = max(0, 1 - y*(X^T w + b)):
     grad_w = -X (y * xi),     grad_b = -y^T xi
 
 Lipschitz constant: L <= sigma_max([X; 1^T])^2, estimated by power iteration.
+Along a path the estimate for the *full* X upper-bounds the constant of any
+row/column-masked (or gathered) subproblem — removing rows/columns of a
+matrix never increases its largest singular value — so drivers estimate L
+once per path and thread it through every reduced solve (see
+``core/path.py`` / ``core/path_scan.py``; per-solve re-estimation stays
+available via their ``exact_lipschitz`` opt-in).
 
 Everything is pure ``jax.lax`` control flow: the whole solve jit-compiles to
 one XLA program (and runs unchanged under shard_map — see
 ``core/distributed.py``).
+
+Performance architecture — the fused hot loop
+---------------------------------------------
+A FISTA iteration needs margins at the momentum point z (for the gradient)
+and the objective at the new iterate (for the monotone-restart test). The
+naive body pays three full sweeps of X per iteration — ``X^T z`` (margins),
+``X (y xi)`` (gradient), ``X^T w_new`` (objective) — plus two more when the
+restart fires. This body pays **two**:
+
+* the state carries ``u = X^T w`` and ``u_prev = X^T w_prev``; since the
+  momentum point is the linear extrapolation ``z = w + beta (w - w_prev)``,
+  its margins are ``u + beta (u - u_prev)`` — an O(n) axpy, no sweep;
+* the sweep at the new iterate is *fused*: one pass over X produces
+  ``u_new``, the slacks ``xi_new``, and the squared-hinge loss (and hence
+  the objective), so the old separate ``_objective`` sweep is gone. On TPU
+  this is the Pallas kernel ``kernels/hinge.py::hinge_margin`` (fp32 VMEM
+  accumulation, loss partials reduced per block); elsewhere it is the same
+  computation in XLA. Dispatch is per-call/env via
+  ``kernels/ops.py::fista_use_pallas`` (``use_pallas=``,
+  ``REPRO_FISTA_PALLAS``; interpret-mode fallback off-TPU honors
+  ``REPRO_PALLAS_INTERPRET``);
+* the monotone-restart fallback (a plain proximal step from ``(w, b)``) sits
+  under ``lax.cond``, so its two extra sweeps are paid only on iterations
+  whose extrapolated step actually increased the objective — not eagerly on
+  every iteration as the pre-fusion ``tree_map(where, ...)`` body did.
+  (Under ``vmap`` — the batched path engine — XLA lowers the cond to a
+  select and both branches run; correctness is unaffected.)
 
 Dynamic (in-solver) screening — ``fista_solve_dynamic``
 -------------------------------------------------------
@@ -63,6 +96,7 @@ __all__ = [
     "soft_threshold",
     "fista_solve",
     "fista_solve_dynamic",
+    "fista_run",
     "gap_theta_delta",
 ]
 
@@ -72,6 +106,8 @@ class FistaState(NamedTuple):
     b: jax.Array
     w_prev: jax.Array
     b_prev: jax.Array
+    u: jax.Array       # X^T w      (margins of the current point, no bias)
+    u_prev: jax.Array  # X^T w_prev
     t: jax.Array
     k: jax.Array
     obj: jax.Array
@@ -111,7 +147,14 @@ def soft_threshold(x: jax.Array, tau: jax.Array) -> jax.Array:
 
 
 def lipschitz_estimate(X: jax.Array, n_iters: int = 30, key: Optional[jax.Array] = None) -> jax.Array:
-    """Power iteration for ``sigma_max([X; 1^T])^2`` (augmented bias row)."""
+    """Power iteration for ``sigma_max([X; 1^T])^2`` (augmented bias row).
+
+    Monotonicity along a path: any row/column submatrix of ``[X; 1^T]`` that
+    keeps the bias row (which every masked/gathered subproblem does) has
+    ``sigma_max`` no larger than the full matrix's, so this estimate is a
+    valid step-size bound for every screened solve of the same path
+    (property-tested in tests/test_path_scan.py).
+    """
     n = X.shape[1]
     if key is None:
         key = jax.random.PRNGKey(0)
@@ -135,64 +178,172 @@ def _objective(X, y, w, b, lam, sample_mask=None):
     return 0.5 * jnp.sum(xi * xi) + lam * jnp.sum(jnp.abs(w))
 
 
-def _make_fista_body(X, y, lam, inv_L, sm, fmask=None):
+def _margin_obj_sweep(X, y, lam, w, b, sm, use_pallas):
+    """One fused pass over X: ``(u = X^T w, objective(w, b))``.
+
+    The Pallas route also folds the loss partials into the sweep; with a
+    sample mask the (cheap, O(n)) masked loss is recomputed from the
+    returned slacks, so no second pass over X is ever needed.
+    """
+    if use_pallas:
+        from repro.kernels.ops import margin_obj_op  # lazy: no import cycle
+
+        u, xi, loss = margin_obj_op(X, w, y, b)
+        u = u.astype(X.dtype)
+        if sm is not None:
+            xi = xi.astype(X.dtype) * sm
+            loss = 0.5 * jnp.sum(xi * xi)
+        loss = jnp.asarray(loss, X.dtype)
+    else:
+        u = X.T @ w
+        xi = jnp.maximum(0.0, 1.0 - y * (u + b))
+        if sm is not None:
+            xi = xi * sm
+        loss = 0.5 * jnp.sum(xi * xi)
+    return u, loss + lam * jnp.sum(jnp.abs(w))
+
+
+def _grad_sweep(X, y, xi, use_pallas):
+    """``grad_w = -X (y * xi)`` — the transposed pass over X."""
+    if use_pallas:
+        from repro.kernels.ops import hinge_grad_op  # lazy: no import cycle
+
+        return hinge_grad_op(X, y, xi).astype(X.dtype)
+    return -(X @ (y * xi))
+
+
+def _init_state(X, y, lam, w0, b0, sm, use_pallas) -> FistaState:
+    u0, obj0 = _margin_obj_sweep(X, y, lam, w0, b0, sm, use_pallas)
+    return FistaState(
+        w=w0, b=b0, w_prev=w0, b_prev=b0, u=u0, u_prev=u0,
+        t=jnp.asarray(1.0, X.dtype), k=jnp.asarray(0, jnp.int32),
+        obj=obj0, rel_change=jnp.asarray(jnp.inf, X.dtype),
+    )
+
+
+def _make_fista_body(X, y, lam, inv_L, sm, fmask=None, use_pallas=False):
     """One FISTA iteration ``FistaState -> FistaState`` as a closure.
 
     ``fmask`` (0/1 over features, optional) freezes screened coordinates at
-    zero: the gradient and the prox output are both masked, so a coordinate
-    once zeroed stays zero — this is exactly the problem with those feature
-    rows removed (the rows contribute nothing to the margins either, since
-    ``w_j = 0``). Shared by :func:`fista_solve` (``fmask=None``: bit-for-bit
-    the original body) and the dynamic solver's inner segments.
+    zero: the prox output is masked, so a coordinate once zeroed stays zero
+    — this is exactly the problem with those feature rows removed (the rows
+    contribute nothing to the margins either, since ``w_j = 0``). Shared by
+    :func:`fista_solve` and the dynamic solver's inner segments.
+
+    Cost: 2 fused sweeps of X per iteration (gradient at the momentum point,
+    margins+objective at the new point); +2 under ``lax.cond`` when the
+    monotone restart fires. See the module docstring for the architecture.
     """
 
     def mask_w(w):
         return w if fmask is None else w * fmask
 
+    def prox_from(w_a, b_a, u_a):
+        """One proximal-gradient step anchored at ``(w_a, b_a)`` whose
+        margins ``u_a = X^T w_a`` are already known. 2 sweeps of X."""
+        xi = jnp.maximum(0.0, 1.0 - y * (u_a + b_a))
+        if sm is not None:
+            xi = xi * sm
+        gw = _grad_sweep(X, y, xi, use_pallas)
+        gb = -jnp.sum(y * xi)
+        w_new = mask_w(soft_threshold(w_a - inv_L * gw, lam * inv_L))
+        b_new = b_a - inv_L * gb
+        u_new, obj_new = _margin_obj_sweep(X, y, lam, w_new, b_new, sm, use_pallas)
+        return w_new, b_new, u_new, obj_new
+
     def body(s: FistaState) -> FistaState:
-        # momentum extrapolation
+        # momentum extrapolation — margins included (u is linear in w, so
+        # the momentum point's margins need no sweep)
         t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * s.t * s.t))
         beta = (s.t - 1.0) / t_next
         zw = s.w + beta * (s.w - s.w_prev)
         zb = s.b + beta * (s.b - s.b_prev)
+        uz = s.u + beta * (s.u - s.u_prev)
 
-        xi = jnp.maximum(0.0, 1.0 - y * (X.T @ zw + zb))
-        if sm is not None:
-            xi = xi * sm
-        gw = -(X @ (y * xi))
-        gb = -jnp.sum(y * xi)
+        w_new, b_new, u_new, obj_new = prox_from(zw, zb, uz)
 
-        w_new = mask_w(soft_threshold(zw - inv_L * gw, lam * inv_L))
-        b_new = zb - inv_L * gb
-
-        obj_new = _objective(X, y, w_new, b_new, lam, sm)
         # monotone restart: if the extrapolated step increased the objective,
-        # fall back to a plain proximal step from (w, b).
-        def plain_step():
-            xi_p = jnp.maximum(0.0, 1.0 - y * (X.T @ s.w + s.b))
-            if sm is not None:
-                xi_p = xi_p * sm
-            gw_p = -(X @ (y * xi_p))
-            gb_p = -jnp.sum(y * xi_p)
-            w_p = mask_w(soft_threshold(s.w - inv_L * gw_p, lam * inv_L))
-            b_p = s.b - inv_L * gb_p
-            return w_p, b_p, _objective(X, y, w_p, b_p, lam, sm), jnp.asarray(1.0, X.dtype)
+        # fall back to a plain proximal step from (w, b) — under lax.cond so
+        # its two sweeps are paid only when the restart actually fires.
+        def restart(_):
+            w_p, b_p, u_p, obj_p = prox_from(s.w, s.b, s.u)
+            return w_p, b_p, u_p, obj_p, jnp.asarray(1.0, X.dtype)
 
-        bad = obj_new > s.obj
-        w_new, b_new, obj_new, t_next = jax.tree_util.tree_map(
-            lambda a, b_: jnp.where(bad, a, b_), plain_step(), (w_new, b_new, obj_new, t_next)
+        def accept(_):
+            return w_new, b_new, u_new, obj_new, t_next
+
+        w_new, b_new, u_new, obj_new, t_next = jax.lax.cond(
+            obj_new > s.obj, restart, accept, None
         )
 
         rel = jnp.abs(s.obj - obj_new) / jnp.maximum(jnp.abs(s.obj), 1e-30)
         return FistaState(
-            w=w_new, b=b_new, w_prev=s.w, b_prev=s.b,
+            w=w_new, b=b_new, w_prev=s.w, b_prev=s.b, u=u_new, u_prev=s.u,
             t=t_next, k=s.k + 1, obj=obj_new, rel_change=rel,
         )
 
     return body
 
 
-@partial(jax.jit, static_argnames=("max_iters",))
+def fista_run(
+    X: jax.Array,
+    y: jax.Array,
+    lam: jax.Array,
+    w0: jax.Array,
+    b0: jax.Array,
+    inv_L: jax.Array,
+    sample_mask: Optional[jax.Array],
+    feature_mask: Optional[jax.Array],
+    max_iters: int,
+    tol: float,
+    use_pallas: bool = False,
+) -> FistaResult:
+    """The raw (unjitted) FISTA loop — trace-safe building block.
+
+    Callers own the defaults, the Lipschitz constant, and the jit boundary:
+    :func:`fista_solve` wraps this for standalone solves, and the on-device
+    path engine (``core/path_scan.py``) inlines it into each ``lax.scan``
+    step so the whole regularization path stays one XLA program.
+    ``feature_mask`` (0/1, optional) freezes screened rows at zero — the
+    mask-mode reduction. ``w0`` must already respect it.
+    """
+    init = _init_state(X, y, lam, w0, jnp.asarray(b0, X.dtype), sample_mask,
+                       use_pallas)
+
+    def cond(s: FistaState):
+        return (s.k < max_iters) & (s.rel_change > tol)
+
+    body = _make_fista_body(X, y, lam, inv_L, sample_mask, feature_mask,
+                            use_pallas)
+    out = jax.lax.while_loop(cond, body, init)
+    return FistaResult(
+        w=out.w, b=out.b, obj=out.obj, n_iters=out.k,
+        converged=out.rel_change <= tol,
+    )
+
+
+def _resolve_pallas(flag: Optional[bool]) -> bool:
+    from repro.kernels.ops import fista_use_pallas  # lazy: no import cycle
+
+    return fista_use_pallas(flag)
+
+
+@partial(jax.jit, static_argnames=("max_iters", "use_pallas"))
+def _fista_solve_jit(X, y, lam, w0, b0, max_iters, tol, L, sample_mask,
+                     use_pallas):
+    m = X.shape[0]
+    lam = jnp.asarray(lam, X.dtype)
+    if w0 is None:
+        w0 = jnp.zeros((m,), X.dtype)
+    if b0 is None:
+        b0 = jnp.mean(y)
+    if L is None:
+        L = lipschitz_estimate(X)
+    L = jnp.maximum(L * 1.01, 1e-12)  # small safety factor
+    return fista_run(X, y, lam, w0, b0, 1.0 / L, sample_mask, None,
+                     max_iters, tol, use_pallas)
+
+
 def fista_solve(
     X: jax.Array,
     y: jax.Array,
@@ -203,6 +354,7 @@ def fista_solve(
     tol: float = 1e-9,
     L: Optional[jax.Array] = None,
     sample_mask: Optional[jax.Array] = None,
+    use_pallas: Optional[bool] = None,
 ) -> FistaResult:
     """Solve the primal to relative-objective tolerance ``tol``.
 
@@ -211,34 +363,15 @@ def fista_solve(
     changing shapes — with a binary mask, masking ``xi`` is exactly the
     problem with those samples removed (screened samples and gather-mode
     padding columns both use this; see core/path.py).
+
+    ``L`` (optional): a known upper bound on the Lipschitz constant — path
+    drivers pass the full-X estimate so reduced solves skip the 30-iteration
+    power sweep. ``use_pallas`` routes the two O(mn) sweeps per iteration
+    through the fused Pallas kernels (None = the
+    ``kernels/ops.py::fista_use_pallas`` policy: env override, else TPU).
     """
-    m = X.shape[0]
-    lam = jnp.asarray(lam, X.dtype)
-    if w0 is None:
-        w0 = jnp.zeros((m,), X.dtype)
-    if b0 is None:
-        b0 = jnp.mean(y)
-    if L is None:
-        L = lipschitz_estimate(X)
-    L = jnp.maximum(L * 1.01, 1e-12)  # small safety factor
-    inv_L = 1.0 / L
-
-    sm = sample_mask
-    obj0 = _objective(X, y, w0, b0, lam, sm)
-    init = FistaState(
-        w=w0, b=jnp.asarray(b0, X.dtype), w_prev=w0, b_prev=jnp.asarray(b0, X.dtype),
-        t=jnp.asarray(1.0, X.dtype), k=jnp.asarray(0, jnp.int32),
-        obj=obj0, rel_change=jnp.asarray(jnp.inf, X.dtype),
-    )
-
-    def cond(s: FistaState):
-        return (s.k < max_iters) & (s.rel_change > tol)
-
-    body = _make_fista_body(X, y, lam, inv_L, sm)
-    out = jax.lax.while_loop(cond, body, init)
-    return FistaResult(
-        w=out.w, b=out.b, obj=out.obj, n_iters=out.k, converged=out.rel_change <= tol
-    )
+    return _fista_solve_jit(X, y, lam, w0, b0, max_iters, float(tol), L,
+                            sample_mask, _resolve_pallas(use_pallas))
 
 
 def gap_theta_delta(
@@ -292,56 +425,29 @@ def gap_theta_delta(
     return alpha / lam, delta, gap
 
 
-@partial(jax.jit, static_argnames=("max_iters", "screen_every", "n_feas_iters"))
-def fista_solve_dynamic(
+def _dynamic_run(
     X: jax.Array,
     y: jax.Array,
     lam: jax.Array,
-    w0: Optional[jax.Array] = None,
-    b0: Optional[jax.Array] = None,
-    max_iters: int = 2000,
-    tol: float = 1e-9,
-    L: Optional[jax.Array] = None,
-    sample_mask: Optional[jax.Array] = None,
-    feature_mask: Optional[jax.Array] = None,
-    screen_every: int = 50,
-    tau: float = SAFE_TAU,
-    n_feas_iters: int = 4,
+    w0: jax.Array,
+    b0: jax.Array,
+    inv_L: jax.Array,
+    sample_mask: Optional[jax.Array],
+    fmask0: jax.Array,
+    max_iters: int,
+    tol: float,
+    screen_every: int,
+    tau: float,
+    n_feas_iters: int,
+    use_pallas: bool,
 ) -> DynamicFistaResult:
-    """Segmented FISTA with gap-driven dynamic feature screening.
+    """Raw segmented dynamic solve (see :func:`fista_solve_dynamic`).
 
-    Solves the same problem as :func:`fista_solve`, but every
-    ``screen_every`` iterations it (a) computes the duality gap at the
-    current iterate, (b) rebuilds the at-lambda VI region from the
-    gap-certified dual point (``lam1 = lam2 = lam``; the region collapses
-    onto ``theta*`` as the gap shrinks), (c) re-evaluates the feature
-    bounds, and (d) ANDs the keep mask into a live ``feature_mask`` that
-    zeroes screened coordinates for the rest of the solve. Screened
-    features are *provably* inactive at the optimum of the (sample-masked)
-    problem, so the accepted solution is unchanged beyond solver tolerance.
-
-    ``feature_mask`` (0/1 over rows, optional) seeds the live mask — e.g.
-    the path driver's between-lambda sequential screen; refreshes only ever
-    shrink it. Returns :class:`DynamicFistaResult` with per-segment
-    kept-counts and gaps (sentinels ``-1`` / ``inf`` for segments not run).
+    Trace-safe like :func:`fista_run`; the scan path engine calls this
+    directly with the path-shared ``inv_L`` and the step's sequential screen
+    as ``fmask0``.
     """
-    m = X.shape[0]
-    lam = jnp.asarray(lam, X.dtype)
-    if w0 is None:
-        w0 = jnp.zeros((m,), X.dtype)
-    if b0 is None:
-        b0 = jnp.mean(y)
-    if L is None:
-        L = lipschitz_estimate(X)
-    L = jnp.maximum(L * 1.01, 1e-12)
-    inv_L = 1.0 / L
     sm = sample_mask
-
-    fmask0 = (
-        jnp.ones((m,), X.dtype) if feature_mask is None
-        else jnp.asarray(feature_mask, X.dtype)
-    )
-    w0 = w0 * fmask0
     screen_every = max(int(screen_every), 1)
     n_seg = -(-max_iters // screen_every)  # ceil; static
 
@@ -353,13 +459,7 @@ def fista_solve_dynamic(
     one_y = jnp.sum(y * sm_vec)
     n_tot = jnp.sum(sm_vec)
 
-    obj0 = _objective(X, y, w0, b0, lam, sm)
-    b0 = jnp.asarray(b0, X.dtype)
-    s0 = FistaState(
-        w=w0, b=b0, w_prev=w0, b_prev=b0,
-        t=jnp.asarray(1.0, X.dtype), k=jnp.asarray(0, jnp.int32),
-        obj=obj0, rel_change=jnp.asarray(jnp.inf, X.dtype),
-    )
+    s0 = _init_state(X, y, lam, w0, jnp.asarray(b0, X.dtype), sm, use_pallas)
     kept0 = jnp.full((n_seg,), -1, jnp.int32)
     gaps0 = jnp.full((n_seg,), jnp.inf, X.dtype)
 
@@ -371,7 +471,7 @@ def fista_solve_dynamic(
         s, fmask, kept, gaps, seg = carry
 
         # -- segment: up to screen_every FISTA steps on the live mask ------
-        body = _make_fista_body(X, y, lam, inv_L, sm, fmask)
+        body = _make_fista_body(X, y, lam, inv_L, sm, fmask, use_pallas)
         k_stop = jnp.minimum(s.k + screen_every, max_iters)
 
         def inner_cond(st):
@@ -404,13 +504,16 @@ def fista_solve_dynamic(
         # zero the dropped coordinates; restart momentum only when zeroing
         # actually moved the iterate (a moved iterate is a fresh point —
         # stale momentum and a stale rel_change would otherwise terminate
-        # the solve early; dropping already-zero coordinates is free).
+        # the solve early; dropping already-zero coordinates is free). The
+        # carried margins are re-swept for the masked point — one fused
+        # pass per segment, amortized over screen_every iterations.
         w_m = s.w * new_mask
         changed = jnp.sum((s.w - w_m) * (s.w - w_m)) > 0.0
+        u_m, obj_m = _margin_obj_sweep(X, y, lam, w_m, s.b, sm, use_pallas)
         s_masked = FistaState(
-            w=w_m, b=s.b, w_prev=w_m, b_prev=s.b,
+            w=w_m, b=s.b, w_prev=w_m, b_prev=s.b, u=u_m, u_prev=u_m,
             t=jnp.asarray(1.0, X.dtype), k=s.k,
-            obj=_objective(X, y, w_m, s.b, lam, sm),
+            obj=obj_m,
             rel_change=jnp.asarray(jnp.inf, X.dtype),
         )
         s = jax.tree_util.tree_map(
@@ -434,4 +537,70 @@ def fista_solve_dynamic(
         converged=out.rel_change <= tol,
         feature_mask=fmask > 0.5, kept_per_segment=kept,
         gap_per_segment=gaps, n_segments=seg,
+    )
+
+
+@partial(jax.jit, static_argnames=("max_iters", "screen_every", "n_feas_iters",
+                                   "use_pallas"))
+def _fista_solve_dynamic_jit(X, y, lam, w0, b0, max_iters, tol, L,
+                             sample_mask, feature_mask, screen_every, tau,
+                             n_feas_iters, use_pallas):
+    m = X.shape[0]
+    lam = jnp.asarray(lam, X.dtype)
+    if w0 is None:
+        w0 = jnp.zeros((m,), X.dtype)
+    if b0 is None:
+        b0 = jnp.mean(y)
+    if L is None:
+        L = lipschitz_estimate(X)
+    L = jnp.maximum(L * 1.01, 1e-12)
+
+    fmask0 = (
+        jnp.ones((m,), X.dtype) if feature_mask is None
+        else jnp.asarray(feature_mask, X.dtype)
+    )
+    w0 = w0 * fmask0
+    return _dynamic_run(X, y, lam, w0, b0, 1.0 / L, sample_mask, fmask0,
+                        max_iters, tol, screen_every, tau, n_feas_iters,
+                        use_pallas)
+
+
+def fista_solve_dynamic(
+    X: jax.Array,
+    y: jax.Array,
+    lam: jax.Array,
+    w0: Optional[jax.Array] = None,
+    b0: Optional[jax.Array] = None,
+    max_iters: int = 2000,
+    tol: float = 1e-9,
+    L: Optional[jax.Array] = None,
+    sample_mask: Optional[jax.Array] = None,
+    feature_mask: Optional[jax.Array] = None,
+    screen_every: int = 50,
+    tau: float = SAFE_TAU,
+    n_feas_iters: int = 4,
+    use_pallas: Optional[bool] = None,
+) -> DynamicFistaResult:
+    """Segmented FISTA with gap-driven dynamic feature screening.
+
+    Solves the same problem as :func:`fista_solve`, but every
+    ``screen_every`` iterations it (a) computes the duality gap at the
+    current iterate, (b) rebuilds the at-lambda VI region from the
+    gap-certified dual point (``lam1 = lam2 = lam``; the region collapses
+    onto ``theta*`` as the gap shrinks), (c) re-evaluates the feature
+    bounds, and (d) ANDs the keep mask into a live ``feature_mask`` that
+    zeroes screened coordinates for the rest of the solve. Screened
+    features are *provably* inactive at the optimum of the (sample-masked)
+    problem, so the accepted solution is unchanged beyond solver tolerance.
+
+    ``feature_mask`` (0/1 over rows, optional) seeds the live mask — e.g.
+    the path driver's between-lambda sequential screen; refreshes only ever
+    shrink it. ``L``/``use_pallas`` as in :func:`fista_solve`. Returns
+    :class:`DynamicFistaResult` with per-segment kept-counts and gaps
+    (sentinels ``-1`` / ``inf`` for segments not run).
+    """
+    return _fista_solve_dynamic_jit(
+        X, y, lam, w0, b0, max_iters, float(tol), L, sample_mask,
+        feature_mask, max(int(screen_every), 1), float(tau),
+        int(n_feas_iters), _resolve_pallas(use_pallas),
     )

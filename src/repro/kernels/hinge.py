@@ -4,7 +4,11 @@ Two tiled GEMV-shaped kernels (the FISTA iteration's only O(mn) work):
 
   * ``hinge_margin``  : u = X^T w, fused with xi = max(0, 1 - y(u + b)) and
                         the per-block loss partials — saves one HBM round
-                        trip of u and one of xi vs composing XLA ops.
+                        trip of u and one of xi vs composing XLA ops. The
+                        raw margins ``u`` are emitted alongside ``xi`` so the
+                        solver can carry them across iterations (the fused
+                        FISTA body extrapolates the momentum point's margins
+                        linearly from carried ``u`` instead of re-sweeping X).
   * ``hinge_grad``    : g = -X (y * xi), the transposed sweep.
 
 Both accumulate in fp32 VMEM scratch regardless of input dtype; tiles are
@@ -21,7 +25,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _margin_kernel(x_ref, w_ref, y_ref, b_ref, xi_ref, loss_ref, acc_ref, *, m_steps):
+def _margin_kernel(x_ref, w_ref, y_ref, b_ref, u_ref, xi_ref, loss_ref, acc_ref,
+                   *, m_steps):
     j = pl.program_id(1)  # feature-axis reduction step
 
     @pl.when(j == 0)
@@ -36,7 +41,9 @@ def _margin_kernel(x_ref, w_ref, y_ref, b_ref, xi_ref, loss_ref, acc_ref, *, m_s
     def _fin():
         y = y_ref[...].astype(jnp.float32)
         b = b_ref[0]
-        xi = jnp.maximum(0.0, 1.0 - y * (acc_ref[...] + b))
+        u = acc_ref[...]
+        xi = jnp.maximum(0.0, 1.0 - y * (u + b))
+        u_ref[...] = u
         xi_ref[...] = xi
         loss_ref[0] = 0.5 * jnp.sum(xi * xi)
 
@@ -46,14 +53,18 @@ def hinge_margin_pallas(
     X: jax.Array, w: jax.Array, y: jax.Array, b: jax.Array,
     block_m: int = 256, block_n: int = 512, interpret: bool = False,
 ):
-    """Returns (xi, loss). Shapes must be pre-padded to block multiples."""
+    """Returns (u, xi, loss). Shapes must be pre-padded to block multiples.
+
+    ``u = X^T w`` (bias NOT added), ``xi = max(0, 1 - y(u + b))``,
+    ``loss = 0.5 * sum(xi^2)`` — all three from one sweep of X.
+    """
     m, n = X.shape
     assert m % block_m == 0 and n % block_n == 0
     grid = (n // block_n, m // block_m)
     b_vec = jnp.full((8,), b, jnp.float32)
 
     kernel = functools.partial(_margin_kernel, m_steps=grid[1])
-    xi, loss_parts = pl.pallas_call(
+    u, xi, loss_parts = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -64,16 +75,18 @@ def hinge_margin_pallas(
         ],
         out_specs=[
             pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
             pl.BlockSpec((1,), lambda i, j: (i,)),
         ],
         out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
             jax.ShapeDtypeStruct((n,), jnp.float32),
             jax.ShapeDtypeStruct((grid[0],), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((block_n,), jnp.float32)],
         interpret=interpret,
     )(X, w, y, b_vec)
-    return xi, jnp.sum(loss_parts)
+    return u, xi, jnp.sum(loss_parts)
 
 
 def _grad_kernel(x_ref, v_ref, g_ref, acc_ref, *, n_steps):

@@ -31,6 +31,29 @@ def _default_interpret() -> bool:
     return not _on_tpu()
 
 
+def fista_use_pallas(flag: bool | None = None) -> bool:
+    """Resolve the solver's kernel-dispatch toggle to a concrete bool.
+
+    This is the seam ``solver._make_fista_body`` dispatches through: ``True``
+    routes the two O(mn) sweeps per FISTA iteration to the fused Pallas
+    kernels (:func:`margin_obj_op` + :func:`hinge_grad_op`), ``False`` keeps
+    the pure-XLA matmuls. Resolution order:
+
+    1. an explicit ``flag`` (the per-call argument) wins;
+    2. ``REPRO_FISTA_PALLAS=1`` / ``=0`` forces it on / off globally;
+    3. default: on when running on TPU (Mosaic), off elsewhere — on CPU the
+       kernels fall back to Pallas interpret mode (``_default_interpret``),
+       which is correct but far slower than XLA, so it is opt-in there
+       (tests force it to check solver equivalence).
+    """
+    if flag is not None:
+        return bool(flag)
+    env = os.environ.get("REPRO_FISTA_PALLAS", "")
+    if env != "":
+        return env != "0"
+    return _on_tpu()
+
+
 def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
     size = x.shape[axis]
     rem = (-size) % mult
@@ -121,21 +144,28 @@ def sample_surplus_op(
     return out[:n]
 
 
-def hinge_margin_op(
+def margin_obj_op(
     X: jax.Array, w: jax.Array, y: jax.Array, b,
     block_m: int = 256, block_n: int = 512, interpret: bool | None = None,
 ):
-    """(xi, loss) = fused margin/residual sweep (kernel-backed)."""
+    """(u, xi, loss) = fused margin/residual/loss sweep (kernel-backed).
+
+    One pass over X yields ``u = X^T w`` (bias not added), the hinge slacks
+    ``xi = max(0, 1 - y(u + b))``, and the squared-hinge loss
+    ``0.5 * sum(xi^2)`` — this is the sweep the fused FISTA body issues at
+    each *new* iterate, so the objective costs no extra pass over X (the
+    separate ``_objective`` sweep of the pre-fusion solver is gone).
+    """
     if interpret is None:
         interpret = _default_interpret()
     m, n = X.shape
     Xp = _pad_to(_pad_to(X, block_m, 0), block_n, 1)
     wp = _pad_to(w, block_m, 0)
-    # pad y with +1 labels against margin 0 -> xi = max(0, 1-1*(0+b)); to keep
-    # padded slots inert we pad y with 0 => xi = 1 - 0 = 1?? No: xi = max(0, 1-0*(u+b)) = 1.
-    # Instead pad y with a sentinel and mask xi after the call.
+    # pad y with 0 => padded xi = max(0, 1-0*(u+b)) = 1: inert for u (w rows
+    # are zero-padded) but each padded slot adds 0.5 to the loss — mask xi
+    # and subtract the padded contribution after the call.
     yp = _pad_to(y, block_n, 0)
-    xi, loss = _hinge.hinge_margin_pallas(
+    u, xi, loss = _hinge.hinge_margin_pallas(
         Xp, wp, yp, jnp.asarray(b, jnp.float32),
         block_m=block_m, block_n=block_n, interpret=interpret,
     )
@@ -144,7 +174,17 @@ def hinge_margin_op(
         xi = xi * mask
         # padded slots contributed 0.5 * 1^2 each to the loss (y=0 => xi=1)
         loss = loss - 0.5 * jnp.sum(1.0 - mask)
-    return xi[:n], loss
+    return u[:n], xi[:n], loss
+
+
+def hinge_margin_op(
+    X: jax.Array, w: jax.Array, y: jax.Array, b,
+    block_m: int = 256, block_n: int = 512, interpret: bool | None = None,
+):
+    """(xi, loss) = fused margin/residual sweep (kernel-backed)."""
+    _, xi, loss = margin_obj_op(X, w, y, b, block_m=block_m, block_n=block_n,
+                                interpret=interpret)
+    return xi, loss
 
 
 def hinge_grad_op(

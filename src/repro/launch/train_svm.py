@@ -35,6 +35,7 @@ from repro.checkpoint import CheckpointManager
 from repro.core import (
     default_lambda_grid,
     lambda_max,
+    lipschitz_estimate,
     theta_at_lambda_max,
 )
 from repro.core.distributed import fista_sharded, screen_sharded, svm_mesh
@@ -61,11 +62,18 @@ def run_path(
     max_verify_rounds: int = 3,
     dynamic: bool = False,
     screen_every: int = 50,
+    exact_lipschitz: bool = False,
 ):
     mesh = svm_mesh(model=model, data=data)
     Xj, yj = jnp.asarray(X), jnp.asarray(y)
     m, n = Xj.shape
     X_np, y_np = np.asarray(X), np.asarray(y)
+
+    # one Lipschitz estimate serves the whole path: every per-step solve is
+    # a masked reduction of X, whose sigma_max never exceeds the full
+    # matrix's (see solver.lipschitz_estimate) — saves the 30-iteration
+    # distributed power sweep per solve and per verification round.
+    L_path = None if exact_lipschitz else lipschitz_estimate(Xj)
 
     rule_list = make_rules(None if rules in (None, "none") else rules)
     feature_rules = [r for r in rule_list if r.axis == AXIS_FEATURES]
@@ -140,6 +148,7 @@ def run_path(
                 feature_mask=keep.astype(jnp.float32),
                 screen_every=screen_every if dynamic else None,
                 tau=dynamic_tau(feature_rules),
+                L=L_path,
             )
             warm["w"], warm["b"] = r.w, r.b
             return r, np.asarray(r.w, np.float64), float(r.b)
@@ -193,6 +202,9 @@ def main():
                     help="re-screen inside the sharded FISTA loop every "
                          "--screen-every iterations (gap-certified)")
     ap.add_argument("--screen-every", type=int, default=50)
+    ap.add_argument("--exact-lipschitz", action="store_true",
+                    help="re-estimate L per solve instead of reusing the "
+                         "full-X upper bound computed once per path")
     ap.add_argument("--ckpt-dir", default="artifacts/svm_ckpt")
     args = ap.parse_args()
 
@@ -201,7 +213,8 @@ def main():
     results = run_path(ds.X, ds.y, n_lambdas=args.n_lambdas,
                        model=args.model, data=args.data,
                        ckpt_dir=args.ckpt_dir, rules=rules,
-                       dynamic=args.dynamic, screen_every=args.screen_every)
+                       dynamic=args.dynamic, screen_every=args.screen_every,
+                       exact_lipschitz=args.exact_lipschitz)
     Path("artifacts").mkdir(exist_ok=True)
     Path("artifacts/svm_path.json").write_text(json.dumps(results, indent=2))
 

@@ -9,6 +9,7 @@ from repro.data import make_sparse_classification
 from repro.kernels.ops import (
     hinge_grad_op,
     hinge_margin_op,
+    margin_obj_op,
     sample_surplus_op,
     screen_bounds_op,
 )
@@ -135,6 +136,24 @@ def test_hinge_margin_kernel(shape, dtype):
     tol = 1e-4 if dtype == jnp.float32 else 0.15
     np.testing.assert_allclose(np.asarray(xi), np.asarray(xi_ref), rtol=tol, atol=tol)
     np.testing.assert_allclose(float(loss), float(loss_ref), rtol=tol)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_margin_obj_kernel(shape):
+    """The fused (u, xi, loss) sweep the FISTA hot loop runs — u is the raw
+    X^T w (bias excluded: the solver carries it separately), padding inert."""
+    m, n = shape
+    X, y = _data(m, n, jnp.float32, seed=7)
+    w = jnp.asarray(np.random.default_rng(5).standard_normal(m), jnp.float32)
+    b = -0.31
+    u_ref, xi_ref, loss_ref = hinge_stats_ref(X, y, w, b)
+    u, xi, loss = margin_obj_op(X, w, y, b, block_m=64, block_n=128,
+                                interpret=True)
+    np.testing.assert_allclose(np.asarray(u) + b, np.asarray(u_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(xi), np.asarray(xi_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(loss), float(loss_ref), rtol=1e-4)
 
 
 @pytest.mark.parametrize("shape", SHAPES)

@@ -1,0 +1,198 @@
+"""On-device path engine: scan-vs-host equivalence, Pallas-vs-XLA solver
+equivalence (interpret mode), the shared-Lipschitz upper-bound property, and
+batched-vs-single path equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    PathDriver,
+    fista_solve,
+    lambda_max,
+    lipschitz_estimate,
+    svm_path,
+    svm_path_batched,
+    svm_path_scan,
+)
+from repro.data import make_sparse_classification
+
+GRID = dict(n_lambdas=6, lam_min_ratio=0.15)
+SOLVE = dict(tol=1e-11, max_iters=20000)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_sparse_classification(m=300, n=120, k_active=10, seed=41)
+
+
+@pytest.fixture(scope="module")
+def host_path(ds):
+    return PathDriver(rules="feature_vi", **SOLVE).run(ds.X, ds.y, **GRID)
+
+
+@pytest.fixture(scope="module")
+def scan_path(ds):
+    return svm_path_scan(ds.X, ds.y, **GRID, **SOLVE)
+
+
+def test_scan_matches_host_screened(host_path, scan_path):
+    """Same grid, same solutions: objectives to 1e-6 (relative), weights to
+    fp32 solver resolution."""
+    np.testing.assert_allclose(scan_path.lambdas, host_path.lambdas)
+    rel = np.max(np.abs(host_path.objectives - scan_path.objectives)
+                 / np.maximum(np.abs(host_path.objectives), 1.0))
+    assert rel < 1e-6, rel
+    np.testing.assert_allclose(scan_path.weights, host_path.weights, atol=1e-3)
+    np.testing.assert_allclose(scan_path.biases, host_path.biases, atol=1e-3)
+
+
+def test_scan_matches_host_unscreened(ds):
+    h = PathDriver(rules=[], **SOLVE).run(ds.X, ds.y, **GRID)
+    s = svm_path_scan(ds.X, ds.y, screening=False, **GRID, **SOLVE)
+    rel = np.max(np.abs(h.objectives - s.objectives)
+                 / np.maximum(np.abs(h.objectives), 1.0))
+    assert rel < 1e-6, rel
+    assert np.all(s.kept == ds.X.shape[0])
+    assert not s.screened
+
+
+def test_scan_never_screens_an_active_feature(scan_path):
+    """Safety end-to-end: a screened (masked-out) feature is never active."""
+    for k in range(len(scan_path.lambdas)):
+        assert scan_path.active[k] <= scan_path.kept[k]
+    assert scan_path.extras["converged"].all()
+
+
+def test_scan_dynamic_matches_sequential(ds, scan_path):
+    dyn = svm_path_scan(ds.X, ds.y, dynamic=True, screen_every=25,
+                        **GRID, **SOLVE)
+    rel = np.max(np.abs(dyn.objectives - scan_path.objectives)
+                 / np.maximum(np.abs(scan_path.objectives), 1.0))
+    assert rel < 1e-6, rel
+
+
+def test_svm_path_engine_dispatch(ds, scan_path):
+    via = svm_path(ds.X, ds.y, engine="scan", **GRID, **SOLVE)
+    np.testing.assert_allclose(via.objectives, scan_path.objectives, rtol=1e-7)
+    assert via.extras["engine"] == "scan"
+    with pytest.raises(ValueError, match="engine"):
+        svm_path(ds.X, ds.y, engine="warp")
+    with pytest.raises(ValueError, match="feature rule"):
+        svm_path(ds.X, ds.y, engine="scan", rules="composite")
+
+
+def test_scan_grid_validation(ds):
+    with pytest.raises(ValueError, match="decreasing"):
+        svm_path_scan(ds.X, ds.y, lambdas=[0.1, 0.2])
+    with pytest.raises(ValueError, match="positive"):
+        svm_path_scan(ds.X, ds.y, lambdas=[0.1, -0.2])
+
+
+# ---------------------------------------------------------------------------
+# Pallas-fused solver vs XLA solver (interpret mode on non-TPU backends)
+# ---------------------------------------------------------------------------
+
+
+def test_pallas_fista_matches_xla(ds, monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+    lam = 0.3 * float(lambda_max(X, y))
+    ref = fista_solve(X, y, lam, max_iters=20000, tol=1e-12, use_pallas=False)
+    out = fista_solve(X, y, lam, max_iters=20000, tol=1e-12, use_pallas=True)
+    np.testing.assert_allclose(float(out.obj), float(ref.obj), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out.w), np.asarray(ref.w), atol=1e-3)
+
+
+def test_pallas_scan_path_matches_xla(ds, scan_path, monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    p = svm_path_scan(ds.X, ds.y, use_pallas=True, **GRID, **SOLVE)
+    rel = np.max(np.abs(p.objectives - scan_path.objectives)
+                 / np.maximum(np.abs(scan_path.objectives), 1.0))
+    assert rel < 1e-5, rel
+
+
+def test_restart_fallback_is_conditional():
+    """The monotone-restart branch must sit under lax.cond — not be computed
+    eagerly every iteration (the perf bug this PR fixes)."""
+    X = jnp.asarray(np.random.default_rng(0).standard_normal((16, 12)),
+                    jnp.float32)
+    y = jnp.asarray(np.sign(np.random.default_rng(1).standard_normal(12)),
+                    jnp.float32)
+    jaxpr = str(jax.make_jaxpr(
+        lambda X, y: fista_solve(X, y, 0.5, max_iters=7, use_pallas=False)
+    )(X, y))
+    assert "cond[" in jaxpr
+
+
+# ---------------------------------------------------------------------------
+# Shared Lipschitz bound: full X upper-bounds every masked submatrix
+# ---------------------------------------------------------------------------
+
+
+def test_full_lipschitz_upper_bounds_masked_submatrices():
+    rng = np.random.default_rng(7)
+    X = jnp.asarray(rng.standard_normal((120, 80)), jnp.float32)
+    L_full = float(lipschitz_estimate(X, n_iters=120))
+    for seed in range(5):
+        r = np.random.default_rng(seed)
+        rows = r.random(120) < r.uniform(0.3, 0.9)
+        cols = r.random(80) < r.uniform(0.3, 0.9)
+        rows[0] = cols[0] = True  # keep non-empty
+        # mask mode: zeroed rows (samples all kept)
+        L_mask = float(lipschitz_estimate(
+            X * jnp.asarray(rows[:, None], jnp.float32), n_iters=120))
+        # gather mode: physical submatrix on both axes
+        L_sub = float(lipschitz_estimate(
+            jnp.asarray(np.asarray(X)[rows][:, cols]), n_iters=120))
+        assert L_mask <= L_full * 1.01 + 1e-4, (seed, L_mask, L_full)
+        assert L_sub <= L_full * 1.01 + 1e-4, (seed, L_sub, L_full)
+
+
+# ---------------------------------------------------------------------------
+# Batched engine
+# ---------------------------------------------------------------------------
+
+
+def test_batched_grids_match_single(ds, host_path):
+    lmax = host_path.extras["lam_max"]
+    grids = np.stack([
+        np.geomspace(lmax, lmax * r, 5) for r in (0.15, 0.25, 0.4)
+    ])
+    batched = svm_path_batched(ds.X, ds.y, lambdas=grids, **SOLVE)
+    assert len(batched) == 3
+    for i in range(3):
+        single = svm_path_scan(ds.X, ds.y, lambdas=grids[i], **SOLVE)
+        # vmap changes the XLA lowering (GEMV -> GEMM, different fp32
+        # accumulation order), so near-threshold screening decisions and
+        # noise-level stopping may differ — solutions agree to fp32 solver
+        # resolution, not bitwise.
+        rel = np.max(np.abs(batched[i].objectives - single.objectives)
+                     / np.maximum(np.abs(single.objectives), 1.0))
+        assert rel < 1e-4, (i, rel)
+        np.testing.assert_allclose(batched[i].weights, single.weights,
+                                   atol=5e-3)
+
+
+def test_batched_problems_match_single():
+    sets = [make_sparse_classification(m=200, n=90, k_active=8, seed=s)
+            for s in (51, 52)]
+    Xb = np.stack([d.X for d in sets])
+    yb = np.stack([d.y for d in sets])
+    batched = svm_path_batched(Xb, yb, n_lambdas=5, lam_min_ratio=0.25,
+                               **SOLVE)
+    assert len(batched) == 2
+    for i, d in enumerate(sets):
+        single = svm_path_scan(d.X, d.y, n_lambdas=5, lam_min_ratio=0.25,
+                               **SOLVE)
+        rel = np.max(np.abs(batched[i].objectives - single.objectives)
+                     / np.maximum(np.abs(single.objectives), 1.0))
+        assert rel < 1e-4, (i, rel)  # see grids test: vmap lowering differs
+
+
+def test_batched_input_validation(ds):
+    with pytest.raises(ValueError, match="lambdas"):
+        svm_path_batched(ds.X, ds.y)  # 2-D X needs explicit grids
+    with pytest.raises(ValueError, match="B, T"):
+        svm_path_batched(ds.X, ds.y, lambdas=np.array([0.5, 0.1]))
