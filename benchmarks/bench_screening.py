@@ -10,7 +10,11 @@ and records per-step kept counts and wall times into a
 ``BENCH_screening.json`` trajectory file so successive PRs can diff
 screening power and overhead; the engine sweep does the same for the
 on-device ``lax.scan`` path engine (``core/path_scan.py``) under the
-``engines`` key.
+``engines`` key — including the compact (on-device active-set gather)
+reduction on a screen-effective grid (``engines["compact"]``), the
+(1,1)-mesh sharded-scan bitwise check, and batched throughput. The file is
+stamped with backend/device/jax-version metadata (``meta``) so trajectories
+from different machines are not silently compared.
 
 CLI:  PYTHONPATH=src python -m benchmarks.bench_screening [--smoke]
 ``--smoke`` runs a seconds-scale engine-equivalence check on a tiny
@@ -21,9 +25,11 @@ from __future__ import annotations
 
 import argparse
 import json
+import platform
 import time
 from pathlib import Path
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -42,6 +48,24 @@ from repro.data import make_sparse_classification
 RATIOS = (0.95, 0.9, 0.8, 0.7, 0.5, 0.3, 0.1)
 RULE_SPECS = ("feature_vi", "sample_vi", "composite", "dvi", None)
 TRAJECTORY_PATH = Path(__file__).resolve().parent.parent / "BENCH_screening.json"
+
+
+def _machine_meta() -> dict:
+    """Backend/device/version stamp for the trajectory file.
+
+    Wall-clock trajectories are only comparable across PRs when they ran on
+    the same kind of machine — this stamp makes cross-machine diffs
+    interpretable instead of silently misleading.
+    """
+    dev = jax.devices()[0]
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", str(dev)),
+        "device_count": jax.device_count(),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+    }
 
 
 def _rate_tables(rows, log):
@@ -89,6 +113,7 @@ def _rule_sweep(rows, log, m=2000, n=400, n_lambdas=10, lam_min_ratio=0.05):
     log("rules,path_s,kept_features,kept_samples,verify_resolves")
     traj = {
         "bench": "screening_rule_sweep",
+        "meta": _machine_meta(),
         "instance": {"m": m, "n": n, "n_lambdas": n_lambdas,
                      "lam_min_ratio": lam_min_ratio, "seed": 11},
         "runs": [],
@@ -255,6 +280,47 @@ def _engine_sweep(rows, log, traj, m=2000, n=400, n_lambdas=10,
         )
         log("scan+pallas: skipped on interpret-mode backend")
 
+    # -- compact reduction: same grid (informational) + the screen-effective
+    # grid where FLOP-proportionality is the whole point --------------------
+    c, t_comp = timed(svm_path_scan, ds.X, ds.y, reduce="compact", **grid,
+                      **kw)
+    cdiff = float(np.max(np.abs(c.objectives - h.objectives)
+                         / np.maximum(np.abs(h.objectives), 1.0)))
+    log(f"scan_compact_s={t_comp:.3f} speedup_vs_mask={t_scan / t_comp:.2f}x "
+        f"obj_diff_vs_host={cdiff:.2e} caps={c.extras['caps'].tolist()}")
+    rows.append(("path_engine_scan_compact", t_comp * 1e6,
+                 f"speedup_vs_mask={t_scan / t_comp:.2f}x obj_diff={cdiff:.1e}"))
+    if check:
+        assert cdiff < 1e-6, f"compact/host mismatch: {cdiff:.3e}"
+    engines["compact_same_grid"] = {
+        "seconds": t_comp,
+        "speedup_vs_mask": t_scan / t_comp,
+        "max_rel_obj_diff_vs_host": cdiff,
+        "caps": [int(v) for v in c.extras["caps"]],
+    }
+    engines["compact"] = _compact_section(rows, log, ds, m=m, n=n,
+                                          n_lambdas=n_lambdas, tol=tol,
+                                          max_iters=max_iters,
+                                          reps=1 if check else 3)
+
+    # -- sharded scan on a trivial mesh: the bitwise-port check ------------
+    from repro.core import svm_path_scan_sharded
+    from repro.core.distributed import svm_mesh
+
+    shard = svm_path_scan_sharded(svm_mesh(1, 1), ds.X, ds.y, **grid, **kw)
+    # baseline must force the XLA sweeps: the sharded engine has no Pallas
+    # route, and on TPU (or REPRO_FISTA_PALLAS=1) the default-policy `s`
+    # above solved with the fp32-accumulating kernels — ulp-different, which
+    # would record a spurious bitwise regression
+    s_xla = svm_path_scan(ds.X, ds.y, use_pallas=False, **grid, **kw)
+    bitwise = bool(np.array_equal(shard.objectives, s_xla.objectives)
+                   and np.array_equal(shard.extras["keep_masks"],
+                                      s_xla.extras["keep_masks"]))
+    log(f"scan_sharded(1,1): bitwise_vs_scan={bitwise}")
+    if check:
+        assert bitwise, "sharded scan (1,1 mesh) diverged from local scan"
+    engines["sharded_1x1_bitwise"] = bitwise
+
     # -- batched throughput: B grids on one program ------------------------
     lam_max_val = h.extras["lam_max"]
     ratios = np.linspace(0.8 * lam_min_ratio, 1.2 * lam_min_ratio, batch)
@@ -279,6 +345,68 @@ def _engine_sweep(rows, log, traj, m=2000, n=400, n_lambdas=10,
     }
     traj["engines"] = engines
     return engines
+
+
+def _compact_section(rows, log, ds, m, n, n_lambdas, tol, max_iters,
+                     lam_min_ratio=0.3, reps=5):
+    """Compact vs mask where screening certifies small active sets.
+
+    The grid is chosen so the early path steps keep a small fraction of the
+    features (<=15% on the stock 2000x400 instance) — the regime the paper's
+    value proposition lives in, and the one the compact reduction must win:
+    per-step solver FLOPs proportional to the certified active set. Walls
+    are medians over ``reps`` runs — the engine-level difference is well
+    above scheduler noise, but single runs on a shared CPU are not (the
+    ``meta`` stamp records where the numbers came from).
+    """
+    X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+    lmax = float(lambda_max(X, y))
+    grid = np.geomspace(lmax, lmax * lam_min_ratio, n_lambdas)
+    kw = dict(lambdas=grid, tol=tol, max_iters=max_iters)
+
+    def med(fn, *a, **k):
+        out = fn(*a, **k)  # warm jit caches
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn(*a, **k)
+            ts.append(time.perf_counter() - t0)
+        return out, float(np.median(ts))
+
+    host, _ = med(PathDriver(rules="feature_vi", tol=tol,
+                             max_iters=max_iters).run, ds.X, ds.y,
+                  lambdas=grid)
+    mask, t_mask = med(svm_path_scan, ds.X, ds.y, **kw)
+    comp, t_comp = med(svm_path_scan, ds.X, ds.y, reduce="compact", **kw)
+    obj_diff = float(np.max(np.abs(comp.objectives - host.objectives)
+                            / np.maximum(np.abs(host.objectives), 1.0)))
+    speedup = t_mask / t_comp
+    kept_frac_early = float(np.max(comp.kept[: n_lambdas // 2]) / m)
+    log(f"\n# compact vs mask (m={m}, n={n}, {n_lambdas} lambdas, "
+        f"lam_min_ratio={lam_min_ratio}: early steps keep "
+        f"<= {100 * kept_frac_early:.1f}% of features)")
+    log(f"mask_s={t_mask:.3f} compact_s={t_comp:.3f} speedup={speedup:.2f}x "
+        f"obj_diff_vs_host={obj_diff:.2e}")
+    log("step,kept,cap,iters,resurrected")
+    for k in range(n_lambdas):
+        log(f"{k},{int(comp.kept[k])},{int(comp.extras['caps'][k])},"
+            f"{int(comp.solver_iters[k])},{int(comp.extras['resurrected'][k])}")
+    rows.append(("path_compact_screen_effective", t_comp * 1e6,
+                 f"speedup={speedup:.2f}x obj_diff={obj_diff:.1e}"))
+    return {
+        "instance": {"m": m, "n": n, "n_lambdas": n_lambdas,
+                     "lam_min_ratio": lam_min_ratio, "tol": tol},
+        "mask_seconds": t_mask,
+        "compact_seconds": t_comp,
+        "speedup_compact_over_mask": speedup,
+        "max_rel_obj_diff_vs_host": obj_diff,
+        "max_early_kept_fraction": kept_frac_early,
+        "kept": [int(v) for v in comp.kept],
+        "caps": [int(v) for v in comp.extras["caps"]],
+        "solver_iters": [int(v) for v in comp.solver_iters],
+        "resurrected": [int(v) for v in comp.extras["resurrected"]],
+        "mask_solver_iters": [int(v) for v in mask.solver_iters],
+    }
 
 
 def run(log=print, smoke=False):

@@ -7,12 +7,15 @@
 #   ./scripts/ci.sh fast         # fast:    tier-1 minus slow (multi-process)
 #   ./scripts/ci.sh kernels      # kernels: Pallas suites, interpret mode
 #                                #          forced via REPRO_PALLAS_INTERPRET=1
+#                                #          (incl. the valid_m row-count paths
+#                                #          the compact reduction drives)
 #   ./scripts/ci.sh x64          # x64:     numerical core under
 #                                #          JAX_ENABLE_X64=1 (screening bound
 #                                #          math, solver, paths)
 #   ./scripts/ci.sh bench        # bench:   engine-equivalence smoke
 #                                #          (bench_screening --smoke): catches
-#                                #          host/scan/pallas regressions in
+#                                #          host/scan/compact/pallas and
+#                                #          sharded-scan-bitwise regressions in
 #                                #          seconds, asserts objective match
 #   ./scripts/ci.sh all          # kernels + x64 + bench, then full
 #

@@ -34,8 +34,10 @@ from .solver import (  # noqa: F401
 from .path import PathDriver, PathResult, default_lambda_grid, svm_path  # noqa: F401
 from .path_scan import (  # noqa: F401
     ScanPathOutputs,
+    compact_caps,
     svm_path_batched,
     svm_path_scan,
+    svm_path_scan_sharded,
 )
 from .rules import (  # noqa: F401
     CompositeRule,

@@ -46,9 +46,15 @@ from .screening import (
     shared_scalars,
     shared_scalars_from_stats,
 )
-from .solver import DynamicFistaResult, FistaResult, soft_threshold
+from .solver import Collectives, DynamicFistaResult, FistaResult, soft_threshold
 
-__all__ = ["screen_sharded", "fista_sharded", "svm_mesh"]
+__all__ = [
+    "screen_sharded",
+    "fista_sharded",
+    "svm_mesh",
+    "mesh_collectives",
+    "sample_surplus_sharded",
+]
 
 
 def svm_mesh(model: int, data: int, devices=None) -> Mesh:
@@ -59,6 +65,120 @@ def svm_mesh(model: int, data: int, devices=None) -> Mesh:
 
     arr = np.asarray(devices[: model * data]).reshape(model, data)
     return Mesh(arr, ("model", "data"))
+
+
+def mesh_collectives(mesh: Mesh, data_axes=("data",),
+                     model_axis: str = "model") -> Collectives:
+    """``solver.Collectives`` bound to the ``svm_mesh`` 2-D psum pattern.
+
+    This is the plumbing that lets the *local* solver bodies (fused FISTA,
+    gap certificate, Lipschitz power iteration — ``core/solver.py``) and the
+    on-device path engine (``core/path_scan.py``) run unchanged inside a
+    ``shard_map``: margins and L1 norms reduce over the feature ("model")
+    axis, gradients and losses over the sample ("data") axes, the bias
+    gradient over both (averaged over the model replicas that each computed
+    the same xi), and the dual-feasibility rescale takes a pmax over
+    features. Same communication pattern as :func:`fista_sharded`.
+
+    Axes of size 1 bind to the identity, not to a degenerate all-reduce:
+    a trivial psum is value-preserving but still restructures XLA's fusion,
+    and the resulting 1-ulp objective noise flips the solver's restart /
+    stopping predicates at their convergence-plateau ties. Pruning trivial
+    axes keeps a 1-D mesh free of no-op collectives (e.g. a pure
+    data-parallel ``svm_mesh(1, N)`` issues zero "model" psums) and makes
+    the ``svm_mesh(1, 1)`` sharded engine bit-identical to the local one.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    d_axes = tuple(a for a in data_axes if sizes.get(a, 1) > 1)
+    have_model = sizes.get(model_axis, 1) > 1
+
+    def psum_model(x):
+        return jax.lax.psum(x, model_axis) if have_model else x
+
+    def psum_data(x):
+        return jax.lax.psum(x, d_axes) if d_axes else x
+
+    def psum_bias(x):
+        axes = (*d_axes, *((model_axis,) if have_model else ()))
+        if not axes:
+            return x
+        out = jax.lax.psum(x, axes)
+        if have_model:
+            out = out / jax.lax.psum(1.0, model_axis)
+        return out
+
+    def pmax_model(x):
+        return jax.lax.pmax(x, model_axis) if have_model else x
+
+    return Collectives(psum_model, psum_data, psum_bias, pmax_model)
+
+
+def sample_surplus_sharded(
+    mesh: Mesh,
+    X: jax.Array,
+    y: jax.Array,
+    w: jax.Array,
+    b,
+    dw=float("inf"),
+    db=float("inf"),
+    u_prev: Optional[jax.Array] = None,
+    shrink_factor: float = 2.0,
+    margin_floor: float = 1e-3,
+    data_axes=("data",),
+):
+    """Distributed sample-rule margin sweep. Returns ``(surplus, u1)``.
+
+    The sharded mirror of ``rules/sample_vi.sample_margin_surplus``: the two
+    feature-axis reductions it needs — the margins ``u1 = X^T w + b`` and
+    the column norms ``||x_i||^2`` — are computed locally over each shard's
+    feature rows and ``psum``-reduced over the "model" axis (one fused
+    2-row stack, mirroring :func:`screen_sharded`'s packed reduction), then
+    finalized with the *identical* slack arithmetic as the local rule
+    (``rules/sample_vi.margin_surplus_core``), so on a mesh that keeps the
+    feature axis whole the result matches the local oracle bitwise.
+
+    ``X``: (m, n) sharded ``P("model", data_axes)``; ``y``/``u_prev``: (n,)
+    sharded ``P(data_axes)``; ``w``: (m,) sharded ``P("model")``. Outputs
+    shard over ``P(data_axes)``. ``dw``/``db`` are the host trust-region
+    radii (python floats; ``inf`` = no movement history, never screens).
+    """
+    from .rules.sample_vi import margin_surplus_core  # lazy: no import cycle
+
+    # match the data dtype (not a hardcoded float32): the bitwise-oracle
+    # contract must hold under JAX_ENABLE_X64 too
+    b = jnp.asarray(b, X.dtype)
+    has_history = u_prev is not None
+    have_model = dict(zip(mesh.axis_names, mesh.devices.shape)).get(
+        "model", 1) > 1
+
+    def local(x_blk, y_blk, w_blk, up_blk):
+        if have_model:
+            # fused 2-row reduction over this shard's feature rows, one psum
+            part = jnp.stack([x_blk.T @ w_blk, jnp.sum(x_blk * x_blk, axis=0)])
+            part = jax.lax.psum(part, "model")
+            u1, x_sq = part[0] + b, part[1]
+        else:
+            # feature axis whole on this shard: identical arithmetic to the
+            # local oracle (no stack/psum detour), so the bitwise-equality
+            # contract of margin_surplus_core extends to the reductions too
+            u1 = x_blk.T @ w_blk + b
+            x_sq = jnp.sum(x_blk * x_blk, axis=0)
+        surplus = margin_surplus_core(
+            u1, y_blk, x_sq, dw, db,
+            u_prev=up_blk if has_history else None,
+            shrink_factor=shrink_factor, margin_floor=margin_floor,
+        )
+        return surplus, u1
+
+    up = u_prev if has_history else jnp.zeros_like(y)
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P("model", *data_axes), P(*data_axes), P("model"),
+                  P(*data_axes)),
+        out_specs=(P(*data_axes), P(*data_axes)),
+        check_rep=False,
+    )
+    return fn(X, y, w, up)
 
 
 def screen_sharded(

@@ -158,7 +158,11 @@ class PathDriver:
         docstring); ``use_pallas`` routes the FISTA hot-loop sweeps through
         the fused Pallas kernels (None = env/backend policy)."""
         if reduce not in ("gather", "mask"):
-            raise ValueError(f"reduce must be 'gather' or 'mask', got {reduce!r}")
+            raise ValueError(
+                f"host-driver reduce must be 'gather' or 'mask', got "
+                f"{reduce!r} ('compact' is the scan engine's on-device "
+                "gather — use svm_path(engine='scan', reduce='compact'))"
+            )
         self.rules = make_rules(rules)
         self.reduce = reduce
         self.tol = float(tol)
@@ -430,7 +434,7 @@ def svm_path(
     n_lambdas: int = 10,
     lam_min_ratio: float = 0.1,
     screening: bool = True,
-    reduce: str = "gather",
+    reduce: Optional[str] = None,
     tol: float = 1e-9,
     max_iters: int = 4000,
     tau: float = SAFE_TAU,
@@ -455,8 +459,15 @@ def svm_path(
     * ``"host"`` — this driver: per-step host orchestration, gather/mask
       reduction on both axes, any rule mix, sample-rule verification;
     * ``"scan"`` — ``core/path_scan.py``: the whole path as one jitted
-      ``lax.scan`` program (feature rule only, mask reduction, zero host
-      round trips). See that module for the trade-off discussion.
+      ``lax.scan`` program (feature rule only, mask or compact reduction,
+      zero host round trips). See that module for the trade-off discussion.
+
+    ``reduce`` defaults per engine (host: ``"gather"``, scan: ``"mask"``).
+    Rule of thumb — **gather** (host) for multiplicative feature x sample
+    reduction and verified sample rules; **mask** (either engine) when
+    screening is weak or paths are vmapped; **compact** (scan) when
+    screening certifies a small active set and the solve should cost FLOPs
+    proportional to it (see ``path_scan.py``'s module docstring).
     """
     if engine == "scan":
         from .path_scan import svm_path_scan  # deferred: path_scan imports us
@@ -473,12 +484,15 @@ def svm_path(
             tol=tol, max_iters=max_iters, dynamic=dynamic,
             screen_every=screen_every, use_pallas=use_pallas,
             exact_lipschitz=exact_lipschitz,
+            reduce="mask" if reduce is None else reduce,
         )
     if engine != "host":
         raise ValueError(f"engine must be 'host' or 'scan', got {engine!r}")
     if rules is None:
         rules = [FeatureVIRule(tau=tau)] if screening else []
-    driver = PathDriver(rules=rules, reduce=reduce, tol=tol, max_iters=max_iters,
+    driver = PathDriver(rules=rules,
+                        reduce="gather" if reduce is None else reduce,
+                        tol=tol, max_iters=max_iters,
                         dynamic=dynamic, screen_every=screen_every,
                         exact_lipschitz=exact_lipschitz, use_pallas=use_pallas)
     return driver.run(X, y, lambdas=lambdas, n_lambdas=n_lambdas,

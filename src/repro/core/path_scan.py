@@ -6,10 +6,9 @@ Why a second engine
 Python: per step it screens, gathers the kept rows/columns into a bucketed
 submatrix, solves, verifies sample rules at the solution, and certifies the
 next region — paying a device↔host round trip, a dispatch, and (in gather
-mode) a possible re-trace at every step. That is the right engine when the
-*FLOPs* dominate (gather mode physically shrinks the solve to
-``kept_features x kept_samples``) or when verified sample rules are in play
-(the KKT re-admission loop is inherently host-side control flow).
+mode) a possible re-trace at every step. That is the right engine when
+verified sample rules are in play (the KKT re-admission loop is inherently
+host-side control flow) or when the matrix is too large for a single device.
 
 On the bench-scale instances the opposite regime holds: solves converge in
 tens of iterations and the path is *orchestration*-bound — profiles show the
@@ -18,30 +17,63 @@ re-compiles of the per-step certificate, and per-solve Lipschitz power
 iterations. This module is the engine for that regime (``engine="scan"``):
 
 * the lambda grid is walked by a single jitted ``lax.scan`` whose carry is
-  ``(w, b, theta, delta, lam_prev)`` — XLA aliases the carry buffers in
-  place (donated, no copies), and nothing syncs to the host until the final
-  stacked ``PathResult`` is pulled once at the end;
+  ``(w, b, theta, delta, lam_prev, keep_mask)`` — XLA aliases the carry
+  buffers in place (donated, no copies), and nothing syncs to the host until
+  the final stacked ``PathResult`` is pulled once at the end;
 * each scan step rebuilds the paper's VI region from the carried anchor
   (``screening.shared_scalars_from_stats``), evaluates the feature bounds
   with the theta-independent reductions hoisted out of the loop (one sweep
-  per step, paper Sec. 6.4), mask-mode solves with the fused two-sweep FISTA
-  body (``solver.fista_run``, optionally Pallas-backed and/or dynamic), and
-  gap-certifies the solution (``solver.gap_theta_delta``) to anchor the next
-  step;
+  per step, paper Sec. 6.4), solves with the fused two-sweep FISTA body
+  (``solver.fista_run``, optionally Pallas-backed and/or dynamic), and
+  gap-certifies the solution (``solver.gap_theta_delta``, reusing the
+  solver's carried margins) to anchor the next step;
 * the Lipschitz constant is estimated once for the full ``X`` and reused by
   every step — valid because masking rows/columns never increases
   ``sigma_max`` (see ``solver.lipschitz_estimate``); per-step re-estimation
   is available via ``exact_lipschitz=True``;
 * :func:`svm_path_batched` is ``vmap`` of the same step over a batch of
-  problems or lambda grids — one program solving B paths at once
-  (hyperparameter sweeps, multi-tenant serving). Under ``vmap`` the
-  solver's restart ``lax.cond`` lowers to a select (both branches run) and
-  the while loops run until the *slowest* batch element converges; the
-  throughput win is that every launch, sweep, and reduction is batched.
+  problems or lambda grids — one program solving B paths at once;
+* :func:`svm_path_scan_sharded` wraps the *same* program in ``shard_map`` on
+  the ``svm_mesh`` (features x samples), so the whole path also runs as one
+  sharded XLA program — the solver/certificate reductions bind to mesh
+  collectives through ``solver.Collectives``
+  (``distributed.mesh_collectives``), not a forked implementation.
 
-Trade-off in one line: gather mode shrinks FLOPs, scan mode kills
-orchestration overhead — measure with ``benchmarks/bench_screening.py``
-(the ``engines`` section of ``BENCH_screening.json``).
+Reductions inside the scan step (``reduce=``)
+---------------------------------------------
+``"mask"``     solves the full-shape problem with screened feature rows
+               frozen at zero: static shapes, zero data movement, but every
+               FISTA sweep still pays O(m·n) FLOPs no matter how many
+               features screening removed.
+``"compact"``  physically gathers the live features into a fixed-capacity
+               padded buffer *inside* the jitted step: the keep mask is
+               compacted with a ``jnp.cumsum`` scatter into a static
+               ``(cap, n)`` submatrix, the fused FISTA body runs on it, and
+               the solution is scattered back before the anchor is
+               certified — so a step that keeps ``k`` of ``m`` features
+               sweeps ``O(cap·n)``, ``cap`` the smallest bucket holding
+               ``k``. The capacity comes from a small static bucket schedule
+               (à la ``path.py::_bucket``; one ``lax.switch`` branch per
+               bucket, so jit compiles a handful of solver bodies, not one
+               per kept-count), and a kept-count overflowing the largest
+               bucket falls back to the mask-mode branch — never wrong,
+               only less reduced. The carry holds each step's certified
+               keep mask (resurrection tracking): features re-entering the
+               keep set are counted per step (``extras["resurrected"]``),
+               and the buffer is sized to the certified keeps — which by
+               construction contain every feature allowed to be nonzero at
+               the step's lambda, warm-start support included.
+
+Rule of thumb across the three reductions (host ``gather`` + scan
+``mask``/``compact``): **gather** wins when sample rules shrink the n-axis
+too or a verified-exact reduced problem is wanted (host round trips buy
+multiplicative kept_m x kept_n FLOPs); **mask** wins when screening is weak
+(kept ~ m, compaction would only add gather traffic) or under ``vmap``
+(batched paths — a switch lowers to a select and every branch runs);
+**compact** wins whenever screening certifies a small active set — the
+paper's whole value proposition — keeping the path single-program *and*
+FLOP-proportional to what screening certifies. Measure with
+``benchmarks/bench_screening.py`` (``BENCH_screening.json["engines"]``).
 
 The scan engine deliberately supports the *feature*-axis reduction only
 (the paper's a-priori-safe rule, plus the in-solver dynamic refresh).
@@ -68,6 +100,8 @@ from .screening import (
     shared_scalars_from_stats,
 )
 from .solver import (
+    LOCAL,
+    Collectives,
     _dynamic_run,
     _resolve_pallas,
     fista_run,
@@ -75,21 +109,47 @@ from .solver import (
     lipschitz_estimate,
 )
 
-__all__ = ["svm_path_scan", "svm_path_batched", "ScanPathOutputs"]
+__all__ = [
+    "svm_path_scan",
+    "svm_path_batched",
+    "svm_path_scan_sharded",
+    "ScanPathOutputs",
+    "compact_caps",
+]
 
 
 class ScanPathOutputs(NamedTuple):
     """Stacked device-side per-step outputs of the scan engine (leading T)."""
 
-    w: jax.Array          # (T, m)
-    b: jax.Array          # (T,)
-    obj: jax.Array        # (T,)
-    kept: jax.Array       # (T,) int32 — live features fed to the solver
-    active: jax.Array     # (T,) int32 — nnz(w) at the solution
-    n_iters: jax.Array    # (T,) int32
-    converged: jax.Array  # (T,) bool
-    gap: jax.Array        # (T,) duality gap certified at the accepted point
-    delta: jax.Array      # (T,) theta-radius anchoring the next step
+    w: jax.Array           # (T, m)
+    b: jax.Array           # (T,)
+    obj: jax.Array         # (T,)
+    kept: jax.Array        # (T,) int32 — live features fed to the solver
+    active: jax.Array      # (T,) int32 — nnz(w) at the solution
+    n_iters: jax.Array     # (T,) int32
+    converged: jax.Array   # (T,) bool
+    gap: jax.Array         # (T,) duality gap certified at the accepted point
+    delta: jax.Array       # (T,) theta-radius anchoring the next step
+    fmask: jax.Array       # (T, m) bool — the certified keep mask per step
+    cap: jax.Array         # (T,) int32 — compact buffer capacity (m = mask)
+    resurrected: jax.Array  # (T,) int32 — keeps the previous mask had dropped
+
+
+def compact_caps(m: int, max_buckets: int = 4, min_cap: int = 32) -> tuple:
+    """Static bucket schedule for the compacted active-set buffer.
+
+    Powers of two up to ``m // 2`` (beyond that the gather/scatter overhead
+    cancels the FLOP win — the mask fallback is cheaper), keeping the
+    largest ``max_buckets`` so the jitted step compiles a bounded number of
+    ``lax.switch`` branches. Empty for small ``m`` — compact mode then
+    degenerates to mask mode.
+    """
+    caps = []
+    c = min_cap
+    while c <= m // 2:
+        caps.append(c)
+        c *= 2
+    return tuple(caps[-max_buckets:])
 
 
 def _path_scan_program(
@@ -111,89 +171,172 @@ def _path_scan_program(
     screen_every: int,
     use_pallas: bool,
     exact_lipschitz: bool,
+    reduce: str = "mask",
+    col: Collectives = LOCAL,
     n_feas_iters: int = 8,
 ) -> ScanPathOutputs:
     """The traced whole-path program (one ``lax.scan`` over the grid).
 
-    Pure function of device values — jitted (and optionally vmapped) by the
-    public wrappers. ``(w0, b0, theta0, delta0)`` seed the carry: an anchor
-    primal/dual pair at ``lam0`` with ``||theta0 - theta*(lam0)|| <= delta0``
-    (the closed form at ``lambda_max`` in the standard entry points).
+    Pure function of device values — jitted (and optionally vmapped or
+    shard_mapped) by the public wrappers. ``(w0, b0, theta0, delta0)`` seed
+    the carry: an anchor primal/dual pair at ``lam0`` with
+    ``||theta0 - theta*(lam0)|| <= delta0`` (the closed form at
+    ``lambda_max`` in the standard entry points). Under ``shard_map`` the
+    shapes here are the per-device blocks and ``col`` binds the reductions
+    to the mesh (compact reduction requires global row indices, so it is
+    local-only — wrappers enforce ``reduce="mask"`` when sharded).
     """
     m, n = X.shape
     dt = X.dtype
     tau = jnp.asarray(tau, dt)
     lambdas = jnp.asarray(lambdas, dt)
+    caps = compact_caps(m) if reduce == "compact" else ()
+    if dynamic and col is not LOCAL:
+        # _dynamic_run has no collectives seam: on shard blocks it would
+        # silently compute unreduced partial sums — fail loudly instead
+        raise NotImplementedError(
+            "dynamic in-solver screening is not plumbed through the "
+            "sharded collectives seam yet; use dynamic=False when sharded"
+        )
 
     if L is None:
-        L = lipschitz_estimate(X)
+        L = lipschitz_estimate(X, col=col)
     L = jnp.maximum(L * 1.01, 1e-12)
     inv_L = 1.0 / L
 
     # theta-independent screen reductions, hoisted out of the scan: per step
     # only the O(mn) ``X @ (y * theta)`` sweep remains (paper Sec. 6.4).
     ones = jnp.ones((n,), dt)
-    d_one = X @ y          # fhat_j^T 1
-    d_y = X @ ones         # fhat_j^T y
-    d_sq = jnp.sum(X * X, axis=1)
-    one_y = jnp.sum(y)
-    n_tot = jnp.asarray(float(n), dt)
+    d_one = col.psum_data(X @ y)          # fhat_j^T 1
+    d_y = col.psum_data(X @ ones)         # fhat_j^T y
+    d_sq = col.psum_data(jnp.sum(X * X, axis=1))
+    one_y = col.psum_data(jnp.sum(y))
+    n_tot = col.psum_data(jnp.asarray(float(n), dt))
+    m_tot = col.psum_model(jnp.asarray(float(m), dt)).astype(jnp.int32)
 
     def step(carry, lam):
-        w, b, theta, delta, lam_prev = carry
+        w, b, theta, delta, lam_prev, fmask_prev = carry
+
+        def solve(Xs, ws, bs, fms, inv_Ls, vm):
+            """Fused-FISTA (or dynamic segmented) solve on one reduction."""
+            if dynamic:
+                return _dynamic_run(
+                    Xs, y, lam, ws, bs, inv_Ls, None, fms,
+                    max_iters, tol, screen_every, tau, 4, use_pallas,
+                    valid_m=vm,
+                )
+            return fista_run(
+                Xs, y, lam, ws, bs, inv_Ls, None, fms,
+                max_iters, tol, use_pallas, col=col, valid_m=vm,
+            )
 
         # -- sequential screen from the carried anchor ---------------------
-        if screening:
-            sh = shared_scalars_from_stats(
-                lam_prev, lam, one_y=one_y,
-                theta_dot_one=jnp.sum(theta), theta_dot_y=theta @ y,
-                theta_sq=theta @ theta, n_tot=n_tot, delta=delta,
-            )
-            red = FeatureReductions(
-                d_theta=X @ (y * theta), d_one=d_one, d_y=d_y, d_sq=d_sq
-            )
-            bounds = screen_bounds_from_reductions(red, sh)
-            fmask = (bounds >= tau).astype(dt)
-        else:
-            fmask = jnp.ones((m,), dt)
+        with jax.named_scope("svm_path/screen"):
+            if screening:
+                sh = shared_scalars_from_stats(
+                    lam_prev, lam, one_y=one_y,
+                    theta_dot_one=col.psum_data(jnp.sum(theta)),
+                    theta_dot_y=col.psum_data(theta @ y),
+                    theta_sq=col.psum_data(theta @ theta),
+                    n_tot=n_tot, delta=delta,
+                )
+                red = FeatureReductions(
+                    d_theta=col.psum_data(X @ (y * theta)),
+                    d_one=d_one, d_y=d_y, d_sq=d_sq,
+                )
+                bounds = screen_bounds_from_reductions(red, sh)
+                keep = bounds >= tau
+            else:
+                keep = jnp.ones((m,), bool)
+            fmask = keep.astype(dt)
 
-        # -- mask-mode solve on the live features --------------------------
-        w_init = w * fmask
-        if exact_lipschitz:
-            L_k = jnp.maximum(
-                lipschitz_estimate(X * fmask[:, None]) * 1.01, 1e-12
-            )
-            inv_Lk = 1.0 / L_k
-        else:
-            inv_Lk = inv_L
-        if dynamic:
-            res = _dynamic_run(
-                X, y, lam, w_init, b, inv_Lk, None, fmask,
-                max_iters, tol, screen_every, tau, 4, use_pallas,
-            )
-        else:
-            res = fista_run(
-                X, y, lam, w_init, b, inv_Lk, None, fmask,
-                max_iters, tol, use_pallas,
-            )
+        # resurrection tracking: the carried mask records what the previous
+        # step certified, so features re-entering the keep set are counted
+        # per step. The buffer is sized to the certified keeps alone — they
+        # already contain every feature allowed to be nonzero at this
+        # lambda (a union with the carried support was considered and
+        # rejected: carried-but-uncertified features are provably zero, so
+        # buffering them frozen-at-zero only inflates the bucket).
+        resurrected = col.psum_model(
+            jnp.sum(keep & (fmask_prev < 0.5))).astype(jnp.int32)
+
+        # -- solve on the reduced problem ----------------------------------
+        def inv_L_for(Xs):
+            if exact_lipschitz:
+                return 1.0 / jnp.maximum(
+                    lipschitz_estimate(Xs, col=col) * 1.01, 1e-12)
+            return inv_L
+
+        def mask_branch(args):
+            w_, b_, fmask_ = args
+            # inv_L_for ignores its operand unless exact_lipschitz (the
+            # masked multiply is DCE'd then), mirroring the compact branch
+            res = solve(X, w_ * fmask_, b_, fmask_,
+                        inv_L_for(X * fmask_[:, None]), None)
+            return (res.w, res.b, res.obj, jnp.asarray(res.n_iters, jnp.int32),
+                    res.converged, res.u)
+
+        def make_compact_branch(cap):
+            def branch(args):
+                w_, b_, fmask_ = args
+                # cumsum compaction: kept row j lands in slot rank(j);
+                # screened rows scatter to the dropped sentinel slot
+                pos = jnp.cumsum(fmask_.astype(jnp.int32)) - 1
+                slot = jnp.where(fmask_ > 0.5, pos, cap)
+                sel = jnp.full((cap,), m, jnp.int32).at[slot].set(
+                    jnp.arange(m, dtype=jnp.int32), mode="drop")
+                validf = (sel < m).astype(dt)
+                selc = jnp.minimum(sel, m - 1)
+                Xc = jnp.take(X, selc, axis=0) * validf[:, None]
+                # every gathered row is a certified keep, so the buffer's
+                # live mask IS the validity mask; w already respects fmask
+                # on gathered rows (screened rows are not in the buffer)
+                w0_c = jnp.take(w_, selc) * validf
+                vcount = jnp.sum(fmask_).astype(jnp.int32)
+                res = solve(Xc, w0_c, b_, validf, inv_L_for(Xc), vcount)
+                w_full = jnp.zeros((m,), dt).at[selc].add(res.w * validf)
+                return (w_full, res.b, res.obj,
+                        jnp.asarray(res.n_iters, jnp.int32), res.converged,
+                        res.u)
+            return branch
+
+        with jax.named_scope("svm_path/solve"):
+            if caps:
+                caps_arr = jnp.asarray(caps, jnp.int32)
+                kept_ct = jnp.sum(fmask).astype(jnp.int32)
+                idx = jnp.sum(kept_ct > caps_arr)  # first bucket that fits
+                branches = [make_compact_branch(c) for c in caps]
+                branches.append(mask_branch)  # overflow: mask-mode fallback
+                w2, b2, obj, n_it, conv, u_fin = jax.lax.switch(
+                    idx, branches, (w, b, fmask))
+                cap_used = jnp.asarray((*caps, m), jnp.int32)[idx]
+            else:
+                w2, b2, obj, n_it, conv, u_fin = mask_branch((w, b, fmask))
+                cap_used = m_tot
 
         # -- gap-certify the accepted point: anchor for the next step ------
-        theta2, delta2, gap = gap_theta_delta(
-            X, y, res.w, res.b, lam, None, n_feas_iters=n_feas_iters
-        )
+        # (full-X certificate — the dual feasibility max runs over every
+        # feature — but the margin sweep rides the solver's carried u)
+        with jax.named_scope("svm_path/certify"):
+            theta2, delta2, gap = gap_theta_delta(
+                X, y, w2, b2, lam, None, n_feas_iters=n_feas_iters, col=col,
+                u=u_fin,
+            )
 
         out = ScanPathOutputs(
-            w=res.w, b=res.b, obj=res.obj,
-            kept=jnp.sum(fmask).astype(jnp.int32),
-            active=jnp.sum(jnp.abs(res.w) > 1e-10).astype(jnp.int32),
-            n_iters=jnp.asarray(res.n_iters, jnp.int32),
-            converged=res.converged,
+            w=w2, b=b2, obj=obj,
+            kept=col.psum_model(jnp.sum(fmask)).astype(jnp.int32),
+            active=col.psum_model(jnp.sum(jnp.abs(w2) > 1e-10)).astype(
+                jnp.int32),
+            n_iters=n_it,
+            converged=conv,
             gap=gap, delta=delta2,
+            fmask=keep, cap=cap_used, resurrected=resurrected,
         )
-        return (res.w, res.b, theta2, delta2, lam), out
+        return (w2, b2, theta2, delta2, lam, fmask), out
 
     carry0 = (w0, jnp.asarray(b0, dt), theta0, jnp.asarray(delta0, dt),
-              jnp.asarray(lam0, dt))
+              jnp.asarray(lam0, dt), jnp.ones((m,), dt))
     _, outs = jax.lax.scan(step, carry0, lambdas)
     return outs
 
@@ -245,8 +388,17 @@ def _validate_grid(lambdas) -> np.ndarray:
     return lambdas
 
 
+def _validate_reduce(reduce: str) -> str:
+    if reduce not in ("mask", "compact"):
+        raise ValueError(
+            "scan-engine reduce must be 'mask' or 'compact' (gather needs "
+            f"the host engine's per-step re-trace), got {reduce!r}"
+        )
+    return reduce
+
+
 def _static_opts(max_iters, screening, dynamic, screen_every, use_pallas,
-                 exact_lipschitz) -> tuple:
+                 exact_lipschitz, reduce="mask") -> tuple:
     return (
         ("max_iters", int(max_iters)),
         ("screening", bool(screening)),
@@ -254,6 +406,7 @@ def _static_opts(max_iters, screening, dynamic, screen_every, use_pallas,
         ("screen_every", max(int(screen_every), 1)),
         ("use_pallas", _resolve_pallas(use_pallas)),
         ("exact_lipschitz", bool(exact_lipschitz)),
+        ("reduce", _validate_reduce(reduce)),
     )
 
 
@@ -285,6 +438,9 @@ def _to_path_result(lambdas, outs: ScanPathOutputs, lam_max_val, wall_s,
             "gaps": np.asarray(outs.gap, np.float64),
             "deltas": np.asarray(outs.delta, np.float64),
             "converged": np.asarray(outs.converged, bool),
+            "keep_masks": np.asarray(outs.fmask, bool),
+            "caps": np.asarray(outs.cap, np.int64),
+            "resurrected": np.asarray(outs.resurrected, np.int64),
             "options": dict(static_kw),
         },
     )
@@ -305,20 +461,27 @@ def svm_path_scan(
     screen_every: int = 50,
     use_pallas: Optional[bool] = None,
     exact_lipschitz: bool = False,
+    reduce: str = "mask",
 ) -> PathResult:
     """Solve the feature-screened path as ONE jitted XLA program.
 
-    Semantics match ``svm_path(..., reduce="mask", rules="feature_vi")``:
-    every step screens against the previous step's gap-certified anchor,
-    solves under the live mask to ``tol``, and certifies its own anchor —
-    but with zero host involvement between the first dispatch and the final
+    Semantics match ``svm_path(..., rules="feature_vi")``: every step
+    screens against the previous step's gap-certified anchor, solves under
+    the certified keep set to ``tol``, and certifies its own anchor — but
+    with zero host involvement between the first dispatch and the final
     transfer. See the module docstring for when to prefer which engine.
 
+    ``reduce="compact"`` turns the keep mask into a physically gathered
+    fixed-capacity active set inside the step (``jnp.cumsum`` compaction,
+    static bucket schedule, mask-mode overflow fallback — module docstring),
+    making per-step solver FLOPs proportional to the surviving features;
+    ``reduce="mask"`` (default) keeps the full-shape zero-frozen solve.
     ``use_pallas`` routes the FISTA hot-loop sweeps through the fused Pallas
-    kernels (None = env/backend policy, ``kernels/ops.fista_use_pallas``);
-    ``dynamic=True`` swaps each step's solve for the segmented
+    kernels (None = env/backend policy, ``kernels/ops.fista_use_pallas``;
+    compacted solves pass their live-row count so the kernels skip padded
+    blocks); ``dynamic=True`` swaps each step's solve for the segmented
     ``screen_every``-interval in-solver re-screen; ``exact_lipschitz=True``
-    re-runs the power iteration per step on the masked matrix instead of
+    re-runs the power iteration per step on the reduced matrix instead of
     reusing the full-X upper bound.
     """
     X = jnp.asarray(X)
@@ -337,7 +500,7 @@ def svm_path_scan(
     delta0 = jnp.asarray(0.0, X.dtype)
 
     static_kw = _static_opts(max_iters, screening, dynamic, screen_every,
-                             use_pallas, exact_lipschitz)
+                             use_pallas, exact_lipschitz, reduce)
     engine = _engine_jit(static_kw, batched=None)
     t0 = time.perf_counter()
     outs = engine(X, y, jnp.asarray(lambdas, X.dtype), w0, b0, theta0,
@@ -347,6 +510,95 @@ def svm_path_scan(
     wall_s = time.perf_counter() - t0
     return _to_path_result(lambdas, outs, lam_max_val, wall_s, screening,
                            static_kw)
+
+
+def svm_path_scan_sharded(
+    mesh,
+    X: jax.Array,
+    y: jax.Array,
+    lambdas: Optional[Sequence[float]] = None,
+    n_lambdas: int = 10,
+    lam_min_ratio: float = 0.1,
+    *,
+    screening: bool = True,
+    tau: float = SAFE_TAU,
+    tol: float = 1e-9,
+    max_iters: int = 4000,
+    exact_lipschitz: bool = False,
+    data_axes=("data",),
+) -> PathResult:
+    """The scan engine as ONE ``shard_map``'d program on the ``svm_mesh``.
+
+    The exact step program of :func:`svm_path_scan` runs on the per-device
+    blocks of a 2-D (features x samples) mesh: the screen reductions, the
+    fused FISTA sweeps, the Lipschitz power iteration, and the gap
+    certificate all bind their reductions to ``lax.psum``/``pmax`` over the
+    mesh axes via ``distributed.mesh_collectives`` — same communication
+    pattern as ``distributed.fista_sharded`` (4-scalar + per-shard-vector
+    psums; margins over "model", gradients over "data"). On a trivial
+    ``svm_mesh(1, 1)`` every collective is an identity, so the outputs match
+    the single-device engine bitwise (tested in tests/test_path_scan.py).
+
+    Mask reduction only (compaction needs global row indices inside the
+    step — sharding the feature axis already divides the sweep); XLA sweeps
+    only (the fused Pallas margin kernel finalizes xi in-kernel, which needs
+    the un-psummed full margins); the dynamic in-solver re-screen is not
+    yet plumbed through the collectives seam.
+
+    For an ``X`` too large for any single device, pass ``X``/``y`` already
+    placed on the mesh (``jax.device_put`` with a ``NamedSharding`` matching
+    the in-specs): the setup reductions here (``lambda_max``, anchors) then
+    run SPMD on the sharded global array instead of materializing ``X`` on
+    device 0.
+    """
+    from .distributed import mesh_collectives, shard_map  # lazy: no cycle
+    from jax.sharding import PartitionSpec as P
+
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    m, n = X.shape
+
+    lam_max_val = float(lambda_max(X, y))
+    if lambdas is None:
+        lambdas = default_lambda_grid(lam_max_val, n_lambdas, lam_min_ratio)
+    lambdas = _validate_grid(lambdas)
+
+    w0 = jnp.zeros((m,), X.dtype)
+    b0 = bias_at_lambda_max(y)
+    theta0 = theta_at_lambda_max(y, jnp.asarray(lam_max_val, X.dtype))
+    delta0 = jnp.asarray(0.0, X.dtype)
+
+    static_kw = _static_opts(max_iters, screening, False, 1, False,
+                             exact_lipschitz, "mask")
+    col = mesh_collectives(mesh, data_axes)
+
+    def local_fn(Xb, yb, lams, w0b, b0b, th0b, d0b, lam0b, taub, tolb):
+        return _path_scan_program(
+            Xb, yb, lams, w0b, b0b, th0b, d0b, lam0b, None, taub, tolb,
+            col=col, **dict(static_kw),
+        )
+
+    in_specs = (P("model", *data_axes), P(*data_axes), P(), P("model"), P(),
+                P(*data_axes), P(), P(), P(), P())
+    out_specs = ScanPathOutputs(
+        w=P(None, "model"), b=P(), obj=P(), kept=P(), active=P(),
+        n_iters=P(), converged=P(), gap=P(), delta=P(),
+        fmask=P(None, "model"), cap=P(), resurrected=P(),
+    )
+    fn = jax.jit(shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_rep=False))
+    t0 = time.perf_counter()
+    outs = fn(X, y, jnp.asarray(lambdas, X.dtype), w0, b0, theta0, delta0,
+              jnp.asarray(lam_max_val, X.dtype),
+              jnp.asarray(float(tau), X.dtype),
+              jnp.asarray(float(tol), X.dtype))
+    outs = jax.block_until_ready(outs)
+    wall_s = time.perf_counter() - t0
+    r = _to_path_result(lambdas, outs, lam_max_val, wall_s, screening,
+                        static_kw)
+    r.extras["engine"] = "scan_sharded"
+    r.extras["mesh"] = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return r
 
 
 def svm_path_batched(
@@ -364,6 +616,7 @@ def svm_path_batched(
     screen_every: int = 50,
     use_pallas: Optional[bool] = None,
     exact_lipschitz: bool = False,
+    reduce: str = "mask",
 ) -> list[PathResult]:
     """``vmap`` of the scan engine over a batch of problems or grids.
 
@@ -381,7 +634,10 @@ def svm_path_batched(
     launches. The usual vmap caveats apply — the while loops run until the
     slowest batch element converges and the restart ``lax.cond`` becomes a
     select — so wall clock per path is bounded by the hardest problem in
-    the batch. The program is shard-transparent: inputs placed on a mesh
+    the batch. For the same reason ``reduce="compact"`` loses its FLOP
+    advantage under vmap (the bucket ``lax.switch`` lowers to a select and
+    *every* branch executes); prefer the default mask reduction for batched
+    paths. The program is shard-transparent: inputs placed on a mesh
     (e.g. batch-sharded ``X``) keep their sharding through jit, which is
     how the sharded-solver mesh serves batched paths.
 
@@ -392,7 +648,7 @@ def svm_path_batched(
     X = jnp.asarray(X)
     y = jnp.asarray(y)
     static_kw = _static_opts(max_iters, screening, dynamic, screen_every,
-                             use_pallas, exact_lipschitz)
+                             use_pallas, exact_lipschitz, reduce)
     if X.ndim == 2:
         # one problem, B grids — X/y/anchors stay unbatched (vmap broadcasts)
         if lambdas is None:

@@ -65,7 +65,8 @@ import jax.numpy as jnp
 from ..screening import _EPS, _t_max
 from .base import AXIS_SAMPLES, ConvexRegion, ScreeningRule, register_rule
 
-__all__ = ["SampleVIRule", "sample_slack_caps", "sample_margin_surplus"]
+__all__ = ["SampleVIRule", "sample_slack_caps", "sample_margin_surplus",
+           "margin_surplus_core"]
 
 # stands in for the driver's "no movement bound yet" dw/db = inf inside the
 # arithmetic: inf would produce 0 * inf = NaN for zero-norm sample columns,
@@ -95,6 +96,33 @@ def sample_slack_caps(region: ConvexRegion) -> jax.Array:
     return region.lam2 * jnp.maximum(t_i, 0.0)
 
 
+def margin_surplus_core(
+    u1: jax.Array,
+    y: jax.Array,
+    x_sq: jax.Array,
+    dw: float,
+    db: float,
+    u_prev: Optional[jax.Array] = None,
+    shrink_factor: float = 2.0,
+    margin_floor: float = 1e-3,
+) -> jax.Array:
+    """Surplus from precomputed margins + column norms (the slack arithmetic).
+
+    Factored out so the local rule (:func:`sample_margin_surplus`) and the
+    sharded sweep (``distributed.sample_surplus_sharded`` — which psums the
+    same two feature-axis reductions over the mesh) finalize with *bitwise
+    identical* scalar math; keep the two reduction producers in sync with
+    this signature rather than re-deriving the slack models.
+    """
+    dw = min(dw, _BIG)
+    db = min(db, _BIG)
+    slack = jnp.sqrt(x_sq) * dw + db  # huge (never screens) until history
+    if u_prev is not None:
+        secant = shrink_factor * jnp.abs(u1 - u_prev) + margin_floor
+        slack = jnp.minimum(slack, secant)
+    return y * u1 - 1.0 - slack
+
+
 def sample_margin_surplus(
     X: jax.Array,
     y: jax.Array,
@@ -121,13 +149,11 @@ def sample_margin_surplus(
         u1 = X.T @ region.w1 + region.b1
     if x_sq is None:
         x_sq = jnp.sum(X * X, axis=0)
-    dw = min(region.dw, _BIG)
-    db = min(region.db, _BIG)
-    slack = jnp.sqrt(x_sq) * dw + db  # huge (never screens) until history
-    if u_prev is not None:
-        secant = shrink_factor * jnp.abs(u1 - u_prev) + margin_floor
-        slack = jnp.minimum(slack, secant)
-    return y * u1 - 1.0 - slack, u1
+    surplus = margin_surplus_core(
+        u1, y, x_sq, region.dw, region.db, u_prev=u_prev,
+        shrink_factor=shrink_factor, margin_floor=margin_floor,
+    )
+    return surplus, u1
 
 
 @register_rule("sample_vi")

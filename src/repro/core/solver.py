@@ -89,6 +89,8 @@ from .screening import (
 )
 
 __all__ = [
+    "Collectives",
+    "LOCAL",
     "FistaState",
     "FistaResult",
     "DynamicFistaResult",
@@ -99,6 +101,44 @@ __all__ = [
     "fista_run",
     "gap_theta_delta",
 ]
+
+
+class Collectives(NamedTuple):
+    """Reduction seam: the four cross-shard reductions the solver math needs.
+
+    Every O(mn) routine in this module reduces over exactly two axes — the
+    feature ("model") axis for margins/L1 norms and the sample ("data") axis
+    for gradients/losses — plus a replicated bias-gradient reduction and a
+    max for the dual-feasibility rescale. Parameterizing the implementations
+    over these four callables lets ONE body serve both execution modes:
+
+    * :data:`LOCAL` (the default) binds all four to the identity, which is
+      exactly the single-device math — same ops, same order, bitwise;
+    * ``distributed.mesh_collectives`` binds them to ``lax.psum``/``pmax``
+      over the ``svm_mesh`` axes, which is how the sharded path engine
+      (``path_scan.svm_path_scan_sharded``) runs this module's FISTA body,
+      gap certificate, and Lipschitz power iteration inside ``shard_map``
+      without a forked implementation.
+    """
+
+    psum_model: "object"  # reduce over the feature axis (margins, sum|w|)
+    psum_data: "object"   # reduce over the sample axis (grads, losses)
+    psum_bias: "object"   # bias grad: global sum averaged over model replicas
+    pmax_model: "object"  # max over the feature axis (dual feasibility)
+
+
+def _identity(x):
+    return x
+
+
+# The local binding: every reduction is already global. Note for sharded
+# bindings (distributed.mesh_collectives): a psum over a size-1 mesh axis
+# must bind to this same identity, not to a degenerate all-reduce — a
+# trivial all-reduce is value-preserving but changes XLA's fusion context,
+# and the resulting 1-ulp objective differences flip the monotone-restart /
+# stopping predicates exactly at their convergence-plateau ties, breaking
+# the sharded-vs-local bitwise guarantee (tests/test_path_scan.py).
+LOCAL = Collectives(_identity, _identity, _identity, _identity)
 
 
 class FistaState(NamedTuple):
@@ -120,6 +160,10 @@ class FistaResult(NamedTuple):
     obj: jax.Array
     n_iters: jax.Array
     converged: jax.Array
+    # margins u = X^T w at the accepted point (carried by the fused body, so
+    # returning them is free); callers certifying the solution can hand them
+    # to gap_theta_delta and skip its re-sweep. None from legacy paths.
+    u: Optional[jax.Array] = None
 
 
 class DynamicFistaResult(NamedTuple):
@@ -140,13 +184,15 @@ class DynamicFistaResult(NamedTuple):
     kept_per_segment: jax.Array  # (S,) int32
     gap_per_segment: jax.Array   # (S,) float
     n_segments: jax.Array        # int32 — segments actually run
+    u: Optional[jax.Array] = None  # X^T w at the accepted point (see FistaResult)
 
 
 def soft_threshold(x: jax.Array, tau: jax.Array) -> jax.Array:
     return jnp.sign(x) * jnp.maximum(jnp.abs(x) - tau, 0.0)
 
 
-def lipschitz_estimate(X: jax.Array, n_iters: int = 30, key: Optional[jax.Array] = None) -> jax.Array:
+def lipschitz_estimate(X: jax.Array, n_iters: int = 30, key: Optional[jax.Array] = None,
+                       col: Collectives = LOCAL) -> jax.Array:
     """Power iteration for ``sigma_max([X; 1^T])^2`` (augmented bias row).
 
     Monotonicity along a path: any row/column submatrix of ``[X; 1^T]`` that
@@ -154,21 +200,29 @@ def lipschitz_estimate(X: jax.Array, n_iters: int = 30, key: Optional[jax.Array]
     ``sigma_max`` no larger than the full matrix's, so this estimate is a
     valid step-size bound for every screened solve of the same path
     (property-tested in tests/test_path_scan.py).
+
+    ``col`` binds the two GEMV reductions to mesh collectives when ``X`` is a
+    ``shard_map`` block (under sharding every data shard seeds the same local
+    key, so the implied global start vector is block-periodic — any nonzero
+    start is valid for power iteration).
     """
     n = X.shape[1]
     if key is None:
         key = jax.random.PRNGKey(0)
     v = jax.random.normal(key, (n,), dtype=X.dtype)
 
+    def norm(v):
+        return jnp.sqrt(jnp.maximum(col.psum_data(jnp.sum(v * v)), 0.0))
+
     def body(v, _):
-        v = v / jnp.maximum(jnp.linalg.norm(v), 1e-30)
-        u_w = X @ v
-        u_b = jnp.sum(v)
-        v = X.T @ u_w + u_b
+        v = v / jnp.maximum(norm(v), 1e-30)
+        u_w = col.psum_data(X @ v)
+        u_b = col.psum_data(jnp.sum(v))
+        v = col.psum_model(X.T @ u_w) + u_b
         return v, None
 
     v, _ = jax.lax.scan(body, v, None, length=n_iters)
-    return jnp.linalg.norm(v)  # ||A^T A v|| / ||v|| with ||v||=1 pre-normalized
+    return norm(v)  # ||A^T A v|| / ||v|| with ||v||=1 pre-normalized
 
 
 def _objective(X, y, w, b, lam, sample_mask=None):
@@ -178,42 +232,48 @@ def _objective(X, y, w, b, lam, sample_mask=None):
     return 0.5 * jnp.sum(xi * xi) + lam * jnp.sum(jnp.abs(w))
 
 
-def _margin_obj_sweep(X, y, lam, w, b, sm, use_pallas):
+def _margin_obj_sweep(X, y, lam, w, b, sm, use_pallas, col=LOCAL, valid_m=None):
     """One fused pass over X: ``(u = X^T w, objective(w, b))``.
 
     The Pallas route also folds the loss partials into the sweep; with a
     sample mask the (cheap, O(n)) masked loss is recomputed from the
-    returned slacks, so no second pass over X is ever needed.
+    returned slacks, so no second pass over X is ever needed. ``valid_m``
+    (dynamic scalar, Pallas route only) marks rows past the compacted active
+    set so the kernel can skip their blocks. The Pallas route needs the full
+    margins locally (xi is finalized in-kernel), so it is single-device only
+    — sharded callers (``col`` non-local) take the XLA path.
     """
-    if use_pallas:
+    if use_pallas and col is LOCAL:
         from repro.kernels.ops import margin_obj_op  # lazy: no import cycle
 
-        u, xi, loss = margin_obj_op(X, w, y, b)
+        u, xi, loss = margin_obj_op(X, w, y, b, valid_m=valid_m)
         u = u.astype(X.dtype)
         if sm is not None:
             xi = xi.astype(X.dtype) * sm
             loss = 0.5 * jnp.sum(xi * xi)
         loss = jnp.asarray(loss, X.dtype)
     else:
-        u = X.T @ w
+        u = col.psum_model(X.T @ w)
         xi = jnp.maximum(0.0, 1.0 - y * (u + b))
         if sm is not None:
             xi = xi * sm
-        loss = 0.5 * jnp.sum(xi * xi)
-    return u, loss + lam * jnp.sum(jnp.abs(w))
+        loss = col.psum_data(0.5 * jnp.sum(xi * xi))
+    return u, loss + lam * col.psum_model(jnp.sum(jnp.abs(w)))
 
 
-def _grad_sweep(X, y, xi, use_pallas):
+def _grad_sweep(X, y, xi, use_pallas, col=LOCAL, valid_m=None):
     """``grad_w = -X (y * xi)`` — the transposed pass over X."""
-    if use_pallas:
+    if use_pallas and col is LOCAL:
         from repro.kernels.ops import hinge_grad_op  # lazy: no import cycle
 
-        return hinge_grad_op(X, y, xi).astype(X.dtype)
-    return -(X @ (y * xi))
+        return hinge_grad_op(X, y, xi, valid_m=valid_m).astype(X.dtype)
+    return col.psum_data(-(X @ (y * xi)))
 
 
-def _init_state(X, y, lam, w0, b0, sm, use_pallas) -> FistaState:
-    u0, obj0 = _margin_obj_sweep(X, y, lam, w0, b0, sm, use_pallas)
+def _init_state(X, y, lam, w0, b0, sm, use_pallas, col=LOCAL,
+                valid_m=None) -> FistaState:
+    u0, obj0 = _margin_obj_sweep(X, y, lam, w0, b0, sm, use_pallas, col,
+                                 valid_m)
     return FistaState(
         w=w0, b=b0, w_prev=w0, b_prev=b0, u=u0, u_prev=u0,
         t=jnp.asarray(1.0, X.dtype), k=jnp.asarray(0, jnp.int32),
@@ -221,7 +281,8 @@ def _init_state(X, y, lam, w0, b0, sm, use_pallas) -> FistaState:
     )
 
 
-def _make_fista_body(X, y, lam, inv_L, sm, fmask=None, use_pallas=False):
+def _make_fista_body(X, y, lam, inv_L, sm, fmask=None, use_pallas=False,
+                     col=LOCAL, valid_m=None):
     """One FISTA iteration ``FistaState -> FistaState`` as a closure.
 
     ``fmask`` (0/1 over features, optional) freezes screened coordinates at
@@ -244,11 +305,12 @@ def _make_fista_body(X, y, lam, inv_L, sm, fmask=None, use_pallas=False):
         xi = jnp.maximum(0.0, 1.0 - y * (u_a + b_a))
         if sm is not None:
             xi = xi * sm
-        gw = _grad_sweep(X, y, xi, use_pallas)
-        gb = -jnp.sum(y * xi)
+        gw = _grad_sweep(X, y, xi, use_pallas, col, valid_m)
+        gb = col.psum_bias(-jnp.sum(y * xi))
         w_new = mask_w(soft_threshold(w_a - inv_L * gw, lam * inv_L))
         b_new = b_a - inv_L * gb
-        u_new, obj_new = _margin_obj_sweep(X, y, lam, w_new, b_new, sm, use_pallas)
+        u_new, obj_new = _margin_obj_sweep(X, y, lam, w_new, b_new, sm,
+                                           use_pallas, col, valid_m)
         return w_new, b_new, u_new, obj_new
 
     def body(s: FistaState) -> FistaState:
@@ -297,6 +359,8 @@ def fista_run(
     max_iters: int,
     tol: float,
     use_pallas: bool = False,
+    col: Collectives = LOCAL,
+    valid_m: Optional[jax.Array] = None,
 ) -> FistaResult:
     """The raw (unjitted) FISTA loop — trace-safe building block.
 
@@ -305,20 +369,23 @@ def fista_run(
     path engine (``core/path_scan.py``) inlines it into each ``lax.scan``
     step so the whole regularization path stays one XLA program.
     ``feature_mask`` (0/1, optional) freezes screened rows at zero — the
-    mask-mode reduction. ``w0`` must already respect it.
+    mask-mode reduction. ``w0`` must already respect it. ``col`` binds the
+    body's reductions to mesh collectives when the operands are ``shard_map``
+    blocks (the sharded path engine); ``valid_m`` is the live-row count of a
+    compacted active set (Pallas sweeps skip blocks past it).
     """
     init = _init_state(X, y, lam, w0, jnp.asarray(b0, X.dtype), sample_mask,
-                       use_pallas)
+                       use_pallas, col, valid_m)
 
     def cond(s: FistaState):
         return (s.k < max_iters) & (s.rel_change > tol)
 
     body = _make_fista_body(X, y, lam, inv_L, sample_mask, feature_mask,
-                            use_pallas)
+                            use_pallas, col, valid_m)
     out = jax.lax.while_loop(cond, body, init)
     return FistaResult(
         w=out.w, b=out.b, obj=out.obj, n_iters=out.k,
-        converged=out.rel_change <= tol,
+        converged=out.rel_change <= tol, u=out.u,
     )
 
 
@@ -382,6 +449,8 @@ def gap_theta_delta(
     lam: jax.Array,
     sample_mask: Optional[jax.Array] = None,
     n_feas_iters: int = 4,
+    col: Collectives = LOCAL,
+    u: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Gap-certified ``(theta1, delta, gap)`` at the current iterate.
 
@@ -391,36 +460,49 @@ def gap_theta_delta(
     masked-out columns removed, so the projection keeps their dual
     coordinates pinned at zero and the equality projection uses the live
     sample count. Pure ``jnp`` — callable from inside a jitted solve loop.
+
+    ``u`` (optional): precomputed margins ``X^T w`` — the fused solver body
+    already carries them for its accepted point, so certifying a just-solved
+    iterate saves one full sweep of X. ``col`` binds the reductions to mesh
+    collectives for ``shard_map`` blocks (see :class:`Collectives`).
     """
     sm = sample_mask
-    xi = jnp.maximum(0.0, 1.0 - y * (X.T @ w + b))
+    if u is None:
+        u = col.psum_model(X.T @ w)
+    xi = jnp.maximum(0.0, 1.0 - y * (u + b))
     if sm is not None:
         xi = xi * sm
     alpha = xi
-    p_obj = 0.5 * jnp.sum(alpha * alpha) + lam * jnp.sum(jnp.abs(w))
-    n_eff = jnp.sum(sm) if sm is not None else jnp.asarray(float(y.shape[0]), X.dtype)
+    p_obj = col.psum_data(0.5 * jnp.sum(alpha * alpha)) + lam * col.psum_model(
+        jnp.sum(jnp.abs(w)))
+    if sm is not None:
+        n_eff = col.psum_data(jnp.sum(sm))
+    else:
+        n_eff = col.psum_data(jnp.asarray(float(y.shape[0]), X.dtype))
+
+    def corr_scale(alpha):
+        corr = col.psum_data(X @ (y * alpha))  # fhat_j^T alpha for all j
+        mx = col.pmax_model(jnp.max(jnp.abs(corr)))
+        return jnp.minimum(1.0, lam / jnp.maximum(mx, 1e-30))
 
     def body(alpha, _):
-        corr = X @ (y * alpha)  # fhat_j^T alpha for all j
-        scale = jnp.minimum(1.0, lam / jnp.maximum(jnp.max(jnp.abs(corr)), 1e-30))
-        alpha = alpha * scale
-        alpha = jnp.maximum(0.0, alpha - (alpha @ y) / n_eff * y)
+        alpha = alpha * corr_scale(alpha)
+        alpha = jnp.maximum(0.0, alpha - col.psum_data(alpha @ y) / n_eff * y)
         if sm is not None:
             alpha = alpha * sm
         return alpha, None
 
     alpha, _ = jax.lax.scan(body, alpha, None, length=n_feas_iters)
     # final rescale so the inequality constraints hold for sure
-    corr = X @ (y * alpha)
-    scale = jnp.minimum(1.0, lam / jnp.maximum(jnp.max(jnp.abs(corr)), 1e-30))
-    alpha = alpha * scale
-    d_obj = jnp.sum(alpha) - 0.5 * jnp.sum(alpha * alpha)
+    alpha = alpha * corr_scale(alpha)
+    d_obj = col.psum_data(jnp.sum(alpha)) - 0.5 * col.psum_data(
+        jnp.sum(alpha * alpha))
     gap = jnp.maximum(p_obj - d_obj, 0.0)
     # the gap is a difference of two O(p_obj) reductions: floor it at a few
     # ulps of p_obj so cancellation noise can never *under*-inflate delta
     # (an underestimated delta is the unsafe direction)
     gap = jnp.maximum(gap, 4.0 * jnp.finfo(X.dtype).eps * jnp.abs(p_obj))
-    eq_resid = jnp.abs(alpha @ y) / jnp.sqrt(n_eff)
+    eq_resid = jnp.abs(col.psum_data(alpha @ y)) / jnp.sqrt(n_eff)
     delta = (jnp.sqrt(2.0 * gap) + 2.0 * eq_resid) / lam
     return alpha / lam, delta, gap
 
@@ -440,12 +522,14 @@ def _dynamic_run(
     tau: float,
     n_feas_iters: int,
     use_pallas: bool,
+    valid_m: Optional[jax.Array] = None,
 ) -> DynamicFistaResult:
     """Raw segmented dynamic solve (see :func:`fista_solve_dynamic`).
 
     Trace-safe like :func:`fista_run`; the scan path engine calls this
-    directly with the path-shared ``inv_L`` and the step's sequential screen
-    as ``fmask0``.
+    directly with the path-shared ``inv_L``, the step's sequential screen
+    as ``fmask0``, and (compact reduction) the live-row count ``valid_m``
+    for the Pallas sweeps.
     """
     sm = sample_mask
     screen_every = max(int(screen_every), 1)
@@ -459,7 +543,8 @@ def _dynamic_run(
     one_y = jnp.sum(y * sm_vec)
     n_tot = jnp.sum(sm_vec)
 
-    s0 = _init_state(X, y, lam, w0, jnp.asarray(b0, X.dtype), sm, use_pallas)
+    s0 = _init_state(X, y, lam, w0, jnp.asarray(b0, X.dtype), sm, use_pallas,
+                     valid_m=valid_m)
     kept0 = jnp.full((n_seg,), -1, jnp.int32)
     gaps0 = jnp.full((n_seg,), jnp.inf, X.dtype)
 
@@ -471,7 +556,8 @@ def _dynamic_run(
         s, fmask, kept, gaps, seg = carry
 
         # -- segment: up to screen_every FISTA steps on the live mask ------
-        body = _make_fista_body(X, y, lam, inv_L, sm, fmask, use_pallas)
+        body = _make_fista_body(X, y, lam, inv_L, sm, fmask, use_pallas,
+                                valid_m=valid_m)
         k_stop = jnp.minimum(s.k + screen_every, max_iters)
 
         def inner_cond(st):
@@ -480,8 +566,10 @@ def _dynamic_run(
         s = jax.lax.while_loop(inner_cond, body, s)
 
         # -- refresh: gap-certified region at the current iterate ----------
+        # the carried margins s.u are X^T w at the current point, so the
+        # certificate skips its own margin sweep
         theta, delta, gap = gap_theta_delta(
-            X, y, s.w, s.b, lam, sm, n_feas_iters=n_feas_iters
+            X, y, s.w, s.b, lam, sm, n_feas_iters=n_feas_iters, u=s.u
         )
         sh = shared_scalars_from_stats(
             lam, lam, one_y=one_y,
@@ -509,7 +597,8 @@ def _dynamic_run(
         # pass per segment, amortized over screen_every iterations.
         w_m = s.w * new_mask
         changed = jnp.sum((s.w - w_m) * (s.w - w_m)) > 0.0
-        u_m, obj_m = _margin_obj_sweep(X, y, lam, w_m, s.b, sm, use_pallas)
+        u_m, obj_m = _margin_obj_sweep(X, y, lam, w_m, s.b, sm, use_pallas,
+                                       valid_m=valid_m)
         s_masked = FistaState(
             w=w_m, b=s.b, w_prev=w_m, b_prev=s.b, u=u_m, u_prev=u_m,
             t=jnp.asarray(1.0, X.dtype), k=s.k,
@@ -536,7 +625,7 @@ def _dynamic_run(
         w=out.w, b=out.b, obj=out.obj, n_iters=out.k,
         converged=out.rel_change <= tol,
         feature_mask=fmask > 0.5, kept_per_segment=kept,
-        gap_per_segment=gaps, n_segments=seg,
+        gap_per_segment=gaps, n_segments=seg, u=out.u,
     )
 
 

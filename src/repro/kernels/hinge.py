@@ -13,6 +13,14 @@ Two tiled GEMV-shaped kernels (the FISTA iteration's only O(mn) work):
 
 Both accumulate in fp32 VMEM scratch regardless of input dtype; tiles are
 (8k-aligned sublane x 128-aligned lane) blocks.
+
+Row-validity counts (the active-set compaction seam, ``core/path_scan.py``
+``reduce="compact"``): both kernels take a dynamic scalar ``valid_m`` — the
+number of live leading feature rows. Compacted operands zero-pad the rows
+past ``valid_m``, so those blocks contribute nothing; the count lets the
+kernel *skip* their MXU work outright (``pl.when`` on the feature-block id)
+instead of multiplying zeros. Passing ``valid_m = m`` is the full-matrix
+case and leaves the schedule untouched.
 """
 
 from __future__ import annotations
@@ -25,17 +33,21 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _margin_kernel(x_ref, w_ref, y_ref, b_ref, u_ref, xi_ref, loss_ref, acc_ref,
-                   *, m_steps):
+def _margin_kernel(x_ref, w_ref, y_ref, b_ref, vm_ref, u_ref, xi_ref, loss_ref,
+                   acc_ref, *, m_steps):
     j = pl.program_id(1)  # feature-axis reduction step
 
     @pl.when(j == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...].astype(jnp.float32)   # (bm, bn)
-    w = w_ref[...].astype(jnp.float32)   # (bm,)
-    acc_ref[...] += w @ x                # (bn,) partial of X^T w
+    # skip blocks entirely past the live rows of a compacted active set
+    # (their x/w are zero padding — no contribution, so no MXU work)
+    @pl.when(j * x_ref.shape[0] < vm_ref[0])
+    def _acc():
+        x = x_ref[...].astype(jnp.float32)   # (bm, bn)
+        w = w_ref[...].astype(jnp.float32)   # (bm,)
+        acc_ref[...] += w @ x                # (bn,) partial of X^T w
 
     @pl.when(j == m_steps - 1)
     def _fin():
@@ -51,17 +63,21 @@ def _margin_kernel(x_ref, w_ref, y_ref, b_ref, u_ref, xi_ref, loss_ref, acc_ref,
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
 def hinge_margin_pallas(
     X: jax.Array, w: jax.Array, y: jax.Array, b: jax.Array,
+    valid_m: jax.Array | None = None,
     block_m: int = 256, block_n: int = 512, interpret: bool = False,
 ):
     """Returns (u, xi, loss). Shapes must be pre-padded to block multiples.
 
     ``u = X^T w`` (bias NOT added), ``xi = max(0, 1 - y(u + b))``,
-    ``loss = 0.5 * sum(xi^2)`` — all three from one sweep of X.
+    ``loss = 0.5 * sum(xi^2)`` — all three from one sweep of X. ``valid_m``
+    (dynamic scalar, default all rows) skips feature blocks past the live
+    rows of a compacted active set.
     """
     m, n = X.shape
     assert m % block_m == 0 and n % block_n == 0
     grid = (n // block_n, m // block_m)
     b_vec = jnp.full((8,), b, jnp.float32)
+    vm_vec = jnp.full((8,), m if valid_m is None else valid_m, jnp.int32)
 
     kernel = functools.partial(_margin_kernel, m_steps=grid[1])
     u, xi, loss_parts = pl.pallas_call(
@@ -71,6 +87,7 @@ def hinge_margin_pallas(
             pl.BlockSpec((block_m, block_n), lambda i, j: (j, i)),
             pl.BlockSpec((block_m,), lambda i, j: (j,)),
             pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((8,), lambda i, j: (0,)),
             pl.BlockSpec((8,), lambda i, j: (0,)),
         ],
         out_specs=[
@@ -85,20 +102,25 @@ def hinge_margin_pallas(
         ],
         scratch_shapes=[pltpu.VMEM((block_n,), jnp.float32)],
         interpret=interpret,
-    )(X, w, y, b_vec)
+    )(X, w, y, b_vec, vm_vec)
     return u, xi, jnp.sum(loss_parts)
 
 
-def _grad_kernel(x_ref, v_ref, g_ref, acc_ref, *, n_steps):
+def _grad_kernel(x_ref, v_ref, vm_ref, g_ref, acc_ref, *, n_steps):
+    i = pl.program_id(0)  # feature-axis output block
     j = pl.program_id(1)  # sample-axis reduction step
 
     @pl.when(j == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...].astype(jnp.float32)   # (bm, bn)
-    v = v_ref[...].astype(jnp.float32)   # (bn,) = y * xi
-    acc_ref[...] += x @ v
+    # output blocks past the compacted active set stay zero: skip their MXU
+    # work (the final write still runs so every output row is defined)
+    @pl.when(i * x_ref.shape[0] < vm_ref[0])
+    def _acc():
+        x = x_ref[...].astype(jnp.float32)   # (bm, bn)
+        v = v_ref[...].astype(jnp.float32)   # (bn,) = y * xi
+        acc_ref[...] += x @ v
 
     @pl.when(j == n_steps - 1)
     def _fin():
@@ -108,12 +130,18 @@ def _grad_kernel(x_ref, v_ref, g_ref, acc_ref, *, n_steps):
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
 def hinge_grad_pallas(
     X: jax.Array, v: jax.Array,
+    valid_m: jax.Array | None = None,
     block_m: int = 256, block_n: int = 512, interpret: bool = False,
 ) -> jax.Array:
-    """g = -X v with fp32 accumulation (v = y * xi precomputed)."""
+    """g = -X v with fp32 accumulation (v = y * xi precomputed).
+
+    ``valid_m`` (dynamic scalar, default all rows) skips output blocks past
+    the live rows of a compacted active set — they are written as zeros.
+    """
     m, n = X.shape
     assert m % block_m == 0 and n % block_n == 0
     grid = (m // block_m, n // block_n)
+    vm_vec = jnp.full((8,), m if valid_m is None else valid_m, jnp.int32)
     kernel = functools.partial(_grad_kernel, n_steps=grid[1])
     return pl.pallas_call(
         kernel,
@@ -121,9 +149,10 @@ def hinge_grad_pallas(
         in_specs=[
             pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
             pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            pl.BlockSpec((8,), lambda i, j: (0,)),
         ],
         out_specs=pl.BlockSpec((block_m,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_m,), jnp.float32)],
         interpret=interpret,
-    )(X, v)
+    )(X, v, vm_vec)

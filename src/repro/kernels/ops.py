@@ -147,6 +147,7 @@ def sample_surplus_op(
 def margin_obj_op(
     X: jax.Array, w: jax.Array, y: jax.Array, b,
     block_m: int = 256, block_n: int = 512, interpret: bool | None = None,
+    valid_m: jax.Array | None = None,
 ):
     """(u, xi, loss) = fused margin/residual/loss sweep (kernel-backed).
 
@@ -155,6 +156,10 @@ def margin_obj_op(
     ``0.5 * sum(xi^2)`` — this is the sweep the fused FISTA body issues at
     each *new* iterate, so the objective costs no extra pass over X (the
     separate ``_objective`` sweep of the pre-fusion solver is gone).
+
+    ``valid_m`` (dynamic scalar): live leading-row count of a compacted
+    active set (``core/path_scan.py reduce="compact"``); rows past it must
+    be zero padding — the kernel skips their blocks.
     """
     if interpret is None:
         interpret = _default_interpret()
@@ -166,7 +171,7 @@ def margin_obj_op(
     # and subtract the padded contribution after the call.
     yp = _pad_to(y, block_n, 0)
     u, xi, loss = _hinge.hinge_margin_pallas(
-        Xp, wp, yp, jnp.asarray(b, jnp.float32),
+        Xp, wp, yp, jnp.asarray(b, jnp.float32), valid_m=valid_m,
         block_m=block_m, block_n=block_n, interpret=interpret,
     )
     if yp.shape[0] != n:
@@ -190,13 +195,15 @@ def hinge_margin_op(
 def hinge_grad_op(
     X: jax.Array, y: jax.Array, xi: jax.Array,
     block_m: int = 256, block_n: int = 512, interpret: bool | None = None,
+    valid_m: jax.Array | None = None,
 ) -> jax.Array:
-    """g = -X (y*xi) (kernel-backed)."""
+    """g = -X (y*xi) (kernel-backed). ``valid_m`` as in :func:`margin_obj_op`
+    (output rows past the live count are written as zeros, not computed)."""
     if interpret is None:
         interpret = _default_interpret()
     m, n = X.shape
     Xp = _pad_to(_pad_to(X, block_m, 0), block_n, 1)
     v = _pad_to(y.astype(jnp.float32) * xi.astype(jnp.float32), block_n, 0)
-    g = _hinge.hinge_grad_pallas(Xp, v, block_m=block_m, block_n=block_n,
-                                 interpret=interpret)
+    g = _hinge.hinge_grad_pallas(Xp, v, valid_m=valid_m, block_m=block_m,
+                                 block_n=block_n, interpret=interpret)
     return g[:m]

@@ -17,6 +17,16 @@ KKT verification loop re-admitting violators before a step commits.
 iterate, ANDing into a live "model"-sharded feature mask (per-segment kept
 counts land in the results JSON).
 
+``--engine scan`` swaps the host loop for the on-device path engine
+(``core/path_scan.py``): the whole path runs as ONE jitted program — as a
+single ``shard_map``'d program on the (model x data) mesh when the mesh has
+more than one device, locally otherwise. ``--reduce compact`` (single-device
+scan) additionally gathers each step's certified active set into a
+fixed-capacity buffer so solver FLOPs track what screening keeps. The scan
+engine is feature-rule-only and runs start-to-finish in one dispatch, so
+``--rules``/``--dynamic`` and per-step checkpoint/resume stay host-engine
+features.
+
 CPU smoke: PYTHONPATH=src python -m repro.launch.train_svm --m 2000 --n 400
 """
 
@@ -49,6 +59,76 @@ from repro.core.rules import (
 )
 from repro.core.rules.base import dynamic_tau, solve_with_verification
 from repro.data import make_sparse_classification
+
+
+def run_path_scan(
+    X: np.ndarray, y: np.ndarray,
+    n_lambdas: int = 10, lam_min_ratio: float = 0.1,
+    model: int = 1, data: int = 1,
+    tol: float = 1e-9, max_iters: int = 4000,
+    reduce: str = "mask",
+    rules: str = "feature_vi",
+    dynamic: bool = False,
+    screen_every: int = 50,
+    exact_lipschitz: bool = False,
+    log=print,
+):
+    """The launcher's scan-engine lane: one program, no per-step host loop.
+
+    Multi-device meshes run ``svm_path_scan_sharded`` (mask reduction — the
+    feature axis is already divided by sharding — and no in-solver dynamic
+    re-screen yet); a single-device mesh runs ``svm_path_scan`` and honors
+    ``--reduce compact`` and ``--dynamic/--screen-every``. Unsupported flag
+    combinations raise rather than silently running a different experiment.
+    """
+    from repro.core import svm_path_scan, svm_path_scan_sharded
+
+    if rules not in (None, "none", "feature_vi"):
+        raise ValueError(
+            "--engine scan supports the built-in feature rule only "
+            f"(got --rules {rules!r}); use --engine host for other rules"
+        )
+    screening = rules != "none"
+    if model * data > 1:
+        if reduce == "compact":
+            raise ValueError(
+                "--reduce compact needs the single-device scan engine "
+                "(compaction indexes global feature rows); on a mesh the "
+                "feature axis is already divided by sharding — use "
+                "--reduce mask"
+            )
+        if dynamic:
+            raise ValueError(
+                "--dynamic is not plumbed through the sharded scan engine "
+                "yet; use --engine host or a single-device mesh"
+            )
+        mesh = svm_mesh(model=model, data=data)
+        r = svm_path_scan_sharded(mesh, X, y, n_lambdas=n_lambdas,
+                                  lam_min_ratio=lam_min_ratio, tol=tol,
+                                  max_iters=max_iters, screening=screening,
+                                  exact_lipschitz=exact_lipschitz)
+    else:
+        r = svm_path_scan(X, y, n_lambdas=n_lambdas,
+                          lam_min_ratio=lam_min_ratio, tol=tol,
+                          max_iters=max_iters, reduce=reduce,
+                          screening=screening, dynamic=dynamic,
+                          screen_every=screen_every,
+                          exact_lipschitz=exact_lipschitz)
+    m = X.shape[0]
+    results = []
+    for k in range(len(r.lambdas)):
+        row = {"lam": float(r.lambdas[k]), "kept": int(r.kept[k]),
+               "nnz": int(r.active[k]), "obj": float(r.objectives[k]),
+               "iters": int(r.solver_iters[k]),
+               "cap": int(r.extras["caps"][k]),
+               "resurrected": int(r.extras["resurrected"][k])}
+        results.append(row)
+        log(f"[svm] k={k} lam={row['lam']:.4f} kept={row['kept']}/{m} "
+            f"cap={row['cap']} nnz={row['nnz']} obj={row['obj']:.5f}")
+    log(f"[svm] engine={r.extras['engine']} reduce={reduce} "
+        f"total={r.extras['total_seconds']:.2f}s (single dispatch, "
+        "per-step walls not observable)")
+    return results
 
 
 def run_path(
@@ -198,6 +278,13 @@ def main():
     ap.add_argument("--rules", default="feature_vi",
                     help="screening rules: feature_vi|sample_vi|composite|dvi|"
                          "none (comma-separated for a custom mix)")
+    ap.add_argument("--engine", choices=("host", "scan"), default="host",
+                    help="host: per-step sharded loop with checkpointing; "
+                         "scan: the whole path as one (shard_map'd) XLA "
+                         "program (feature rule only)")
+    ap.add_argument("--reduce", choices=("mask", "compact"), default="mask",
+                    help="scan engine: mask-mode solve vs on-device "
+                         "active-set compaction (single-device mesh only)")
     ap.add_argument("--dynamic", action="store_true",
                     help="re-screen inside the sharded FISTA loop every "
                          "--screen-every iterations (gap-certified)")
@@ -210,11 +297,32 @@ def main():
 
     rules = args.rules if "," not in args.rules else args.rules.split(",")
     ds = make_sparse_classification(m=args.m, n=args.n, seed=0)
-    results = run_path(ds.X, ds.y, n_lambdas=args.n_lambdas,
-                       model=args.model, data=args.data,
-                       ckpt_dir=args.ckpt_dir, rules=rules,
-                       dynamic=args.dynamic, screen_every=args.screen_every,
-                       exact_lipschitz=args.exact_lipschitz)
+    if args.engine == "host" and args.reduce != "mask":
+        raise SystemExit(
+            f"--reduce {args.reduce} is a scan-engine option; the host "
+            "engine reduces via its rule drivers (gather/mask). Add "
+            "--engine scan."
+        )
+    if args.engine == "scan" and args.ckpt_dir != ap.get_default("ckpt_dir"):
+        raise SystemExit(
+            "--ckpt-dir has no effect with --engine scan: the whole path is "
+            "one dispatch, so there is no per-step state to checkpoint or "
+            "resume. Use --engine host for checkpointed paths."
+        )
+    if args.engine == "scan":
+        results = run_path_scan(ds.X, ds.y, n_lambdas=args.n_lambdas,
+                                model=args.model, data=args.data,
+                                reduce=args.reduce, rules=args.rules,
+                                dynamic=args.dynamic,
+                                screen_every=args.screen_every,
+                                exact_lipschitz=args.exact_lipschitz)
+    else:
+        results = run_path(ds.X, ds.y, n_lambdas=args.n_lambdas,
+                           model=args.model, data=args.data,
+                           ckpt_dir=args.ckpt_dir, rules=rules,
+                           dynamic=args.dynamic,
+                           screen_every=args.screen_every,
+                           exact_lipschitz=args.exact_lipschitz)
     Path("artifacts").mkdir(exist_ok=True)
     Path("artifacts/svm_path.json").write_text(json.dumps(results, indent=2))
 

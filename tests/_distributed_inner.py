@@ -18,10 +18,18 @@ from repro.core import (  # noqa: E402
     fista_solve_dynamic,
     lambda_max,
     screen,
+    svm_path_scan,
+    svm_path_scan_sharded,
     theta_at_lambda_max,
 )
-from repro.core.distributed import fista_sharded, screen_sharded, svm_mesh  # noqa: E402
+from repro.core.distributed import (  # noqa: E402
+    fista_sharded,
+    sample_surplus_sharded,
+    screen_sharded,
+    svm_mesh,
+)
 from repro.core.dual import safe_theta_and_delta  # noqa: E402
+from repro.core.rules.sample_vi import margin_surplus_core  # noqa: E402
 from repro.data import make_sparse_classification  # noqa: E402
 
 
@@ -95,6 +103,51 @@ def main():
     kept_loc = np.asarray(loc.kept_per_segment)[: int(loc.n_segments)]
     assert kept.shape == kept_loc.shape and np.max(np.abs(kept - kept_loc)) <= 2, (
         kept, kept_loc)
+
+    # -- sharded scan path engine: one shard_map'd program ----------------
+    # (the bitwise unit-mesh check lives in test_path_scan.py; here the real
+    # 2-D mesh — psum reassociation and a reassociated L estimate mean
+    # tolerance equivalence, with safety and convergence held exactly)
+    grid = dict(n_lambdas=5, lam_min_ratio=0.2, tol=1e-10, max_iters=20000)
+    loc_p = svm_path_scan(X, y, **grid)
+    sh_p = svm_path_scan_sharded(mesh, X, y, **grid)
+    rel = np.max(np.abs(sh_p.objectives - loc_p.objectives)
+                 / np.maximum(np.abs(loc_p.objectives), 1.0))
+    assert rel < 1e-5, rel
+    np.testing.assert_allclose(sh_p.weights, loc_p.weights, atol=5e-3)
+    assert np.asarray(sh_p.extras["converged"]).all()
+    assert np.all(sh_p.active <= sh_p.kept)  # screened features stay inactive
+    # the sharded screen is the same certificate: masks agree off the tau
+    # boundary (reassociated anchors jitter a few boundary features)
+    mism = int(np.sum(sh_p.extras["keep_masks"] != loc_p.extras["keep_masks"]))
+    assert mism <= 0.05 * sh_p.extras["keep_masks"].size, mism
+
+    # -- sample-rule margin sweep, sharded ---------------------------------
+    rng = np.random.default_rng(3)
+    w_s = jnp.asarray((rng.standard_normal(X.shape[0])
+                       * (rng.random(X.shape[0]) < 0.2)).astype(np.float32))
+    b_s = 0.37
+    u_prev = jnp.asarray(rng.standard_normal(X.shape[1]).astype(np.float32))
+
+    @jax.jit
+    def surplus_oracle(X, y, w, up):
+        u1 = X.T @ w + b_s
+        return margin_surplus_core(u1, y, jnp.sum(X * X, axis=0), 0.5, 0.01,
+                                   u_prev=up), u1
+
+    ref_s, ref_u = surplus_oracle(X, y, w_s, u_prev)
+    # model axis whole => reductions are the oracle's own ops: BITWISE
+    s_d, u_d = sample_surplus_sharded(svm_mesh(1, 4), X, y, w_s, b_s,
+                                      dw=0.5, db=0.01, u_prev=u_prev)
+    assert np.array_equal(np.asarray(s_d), np.asarray(ref_s)), (
+        "sample surplus on a data-sharded mesh != local oracle bitwise")
+    assert np.array_equal(np.asarray(u_d), np.asarray(ref_u))
+    # 2-D mesh: psum over "model" => tolerance equivalence, decisions exact
+    s_2d, _ = sample_surplus_sharded(mesh, X, y, w_s, b_s, dw=0.5, db=0.01,
+                                     u_prev=u_prev)
+    np.testing.assert_allclose(np.asarray(s_2d), np.asarray(ref_s),
+                               rtol=2e-4, atol=2e-4)
+    assert np.array_equal(np.asarray(s_2d) < 0, np.asarray(ref_s) < 0)
     print("DISTRIBUTED_OK")
 
 

@@ -176,3 +176,44 @@ def test_kernel_padding_is_inert():
     out2 = np.asarray(screen_bounds_op(X, y, lmax, 0.5 * lmax, theta1,
                                        block_m=128, block_n=256, interpret=True))
     np.testing.assert_allclose(out1, out2, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Row-validity counts (the compact active-set seam, core/path_scan.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("valid", [1, 37, 64, 200, 300])
+def test_margin_kernel_valid_count_matches_full(valid):
+    """With rows >= valid zeroed, skipping their blocks must be a no-op:
+    the valid-count sweep equals the full sweep on the zero-padded operand
+    (which itself matches the XLA oracle — the tests above)."""
+    m, n = 300, 200
+    X, y = _data(m, n, jnp.float32, seed=11)
+    rng = np.random.default_rng(12)
+    live = (jnp.arange(m) < valid).astype(jnp.float32)
+    Xz = X * live[:, None]
+    w = jnp.asarray(rng.standard_normal(m), jnp.float32) * live
+    b = 0.21
+    kw = dict(block_m=64, block_n=128, interpret=True)
+    u_f, xi_f, loss_f = margin_obj_op(Xz, w, y, b, **kw)
+    u_v, xi_v, loss_v = margin_obj_op(Xz, w, y, b, valid_m=jnp.int32(valid),
+                                      **kw)
+    np.testing.assert_array_equal(np.asarray(u_v), np.asarray(u_f))
+    np.testing.assert_array_equal(np.asarray(xi_v), np.asarray(xi_f))
+    assert float(loss_v) == float(loss_f)
+
+
+@pytest.mark.parametrize("valid", [1, 37, 64, 200, 300])
+def test_grad_kernel_valid_count_matches_full(valid):
+    m, n = 300, 200
+    X, y = _data(m, n, jnp.float32, seed=13)
+    live = (jnp.arange(m) < valid).astype(jnp.float32)
+    Xz = X * live[:, None]
+    xi = jnp.asarray(np.random.default_rng(14).random(n), jnp.float32)
+    kw = dict(block_m=64, block_n=128, interpret=True)
+    g_f = np.asarray(hinge_grad_op(Xz, y, xi, **kw))
+    g_v = np.asarray(hinge_grad_op(Xz, y, xi, valid_m=jnp.int32(valid), **kw))
+    np.testing.assert_array_equal(g_v, g_f)
+    # skipped output rows are written, as zeros
+    assert np.all(g_v[valid:] == 0.0)

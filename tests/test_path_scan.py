@@ -1,6 +1,7 @@
-"""On-device path engine: scan-vs-host equivalence, Pallas-vs-XLA solver
-equivalence (interpret mode), the shared-Lipschitz upper-bound property, and
-batched-vs-single path equivalence."""
+"""On-device path engine: scan-vs-host equivalence, compact-vs-mask
+reduction equivalence (incl. the overflow fallback), the sharded scan's
+bitwise port check, Pallas-vs-XLA solver equivalence (interpret mode), the
+shared-Lipschitz upper-bound property, and batched-vs-single equivalence."""
 
 import jax
 import jax.numpy as jnp
@@ -9,13 +10,16 @@ import pytest
 
 from repro.core import (
     PathDriver,
+    compact_caps,
     fista_solve,
     lambda_max,
     lipschitz_estimate,
     svm_path,
     svm_path_batched,
     svm_path_scan,
+    svm_path_scan_sharded,
 )
+from repro.core.distributed import svm_mesh
 from repro.data import make_sparse_classification
 
 GRID = dict(n_lambdas=6, lam_min_ratio=0.15)
@@ -91,6 +95,106 @@ def test_scan_grid_validation(ds):
 
 
 # ---------------------------------------------------------------------------
+# Compact reduction: on-device active-set gather
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def compact_path(ds):
+    return svm_path_scan(ds.X, ds.y, reduce="compact", **GRID, **SOLVE)
+
+
+def test_compact_matches_mask_and_host(ds, scan_path, host_path, compact_path):
+    """The gathered subproblem is the masked problem with screened rows
+    physically absent: same inv_L, same iteration map => objectives match to
+    solver resolution (a few fp32 ulps of the objective — the gathered GEMV
+    reassociates, so the two trajectories stop 1-2 ulps apart; the bench
+    instance records the <=1e-7 criterion, BENCH_screening.json) and
+    weights to fp32 resolution."""
+    for ref in (scan_path, host_path):
+        rel = np.max(np.abs(ref.objectives - compact_path.objectives)
+                     / np.maximum(np.abs(ref.objectives), 1.0))
+        assert rel < 5e-7, rel
+    np.testing.assert_allclose(compact_path.weights, scan_path.weights,
+                               atol=1e-3)
+    # screened features scatter back as exact zeros
+    masks = compact_path.extras["keep_masks"]
+    assert np.all(compact_path.weights[~masks] == 0.0)
+
+
+def test_compact_uses_small_buffers_when_screening_bites(ds, compact_path):
+    """Early steps keep few features => the step must have solved in a
+    bucket well below m, and resurrection telemetry tracks mask growth."""
+    m = ds.X.shape[0]
+    caps = compact_path.extras["caps"]
+    kept = compact_path.kept
+    assert caps[0] < m and caps[0] >= kept[0]
+    assert np.all(caps >= kept)  # a bucket always fits the certified keeps
+    # kept counts grow along this grid => some features resurrect
+    assert compact_path.extras["resurrected"].sum() > 0
+
+
+def test_compact_overflow_falls_back_to_mask(ds):
+    """With screening off every step keeps all m features — past the largest
+    bucket — so the lax.cond/switch fallback must engage (cap == m) and
+    still match the mask engine."""
+    s = svm_path_scan(ds.X, ds.y, screening=False, **GRID, **SOLVE)
+    c = svm_path_scan(ds.X, ds.y, screening=False, reduce="compact",
+                      **GRID, **SOLVE)
+    assert np.all(c.extras["caps"] == ds.X.shape[0])
+    rel = np.max(np.abs(s.objectives - c.objectives)
+                 / np.maximum(np.abs(s.objectives), 1.0))
+    assert rel < 1e-9, rel
+
+
+def test_compact_dynamic_matches(ds, scan_path):
+    dyn = svm_path_scan(ds.X, ds.y, reduce="compact", dynamic=True,
+                        screen_every=25, **GRID, **SOLVE)
+    rel = np.max(np.abs(dyn.objectives - scan_path.objectives)
+                 / np.maximum(np.abs(scan_path.objectives), 1.0))
+    assert rel < 1e-6, rel
+
+
+def test_compact_caps_schedule():
+    assert compact_caps(2000) == (64, 128, 256, 512)
+    assert compact_caps(300) == (32, 64, 128)
+    assert compact_caps(16) == ()  # degenerates to mask mode
+    caps = compact_caps(10**6)
+    assert len(caps) == 4 and all(c <= 10**6 // 2 for c in caps)
+
+
+def test_reduce_validation(ds):
+    with pytest.raises(ValueError, match="mask' or 'compact"):
+        svm_path_scan(ds.X, ds.y, reduce="gather", **GRID)
+    with pytest.raises(ValueError, match="scan engine"):
+        PathDriver(reduce="compact")
+    # svm_path dispatch: per-engine defaults + pass-through
+    r = svm_path(ds.X, ds.y, engine="scan", reduce="compact", **GRID, **SOLVE)
+    assert r.extras["options"]["reduce"] == "compact"
+
+
+# ---------------------------------------------------------------------------
+# Sharded scan engine: one shard_map'd program over the svm_mesh
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_scan_bitwise_on_unit_mesh(ds, scan_path):
+    """On a trivial (1, 1) CPU mesh every collective binds to the identity,
+    so the shard_map'd program must reproduce the single-device scan
+    BITWISE — keep masks, objectives, weights, and certificates. This is
+    the port check: any drift means the sharded step diverged from the
+    local step."""
+    sh = svm_path_scan_sharded(svm_mesh(1, 1), ds.X, ds.y, **GRID, **SOLVE)
+    assert sh.extras["engine"] == "scan_sharded"
+    np.testing.assert_array_equal(sh.extras["keep_masks"],
+                                  scan_path.extras["keep_masks"])
+    np.testing.assert_array_equal(sh.objectives, scan_path.objectives)
+    np.testing.assert_array_equal(sh.weights, scan_path.weights)
+    np.testing.assert_array_equal(sh.extras["gaps"], scan_path.extras["gaps"])
+    np.testing.assert_array_equal(sh.solver_iters, scan_path.solver_iters)
+
+
+# ---------------------------------------------------------------------------
 # Pallas-fused solver vs XLA solver (interpret mode on non-TPU backends)
 # ---------------------------------------------------------------------------
 
@@ -110,6 +214,17 @@ def test_pallas_scan_path_matches_xla(ds, scan_path, monkeypatch):
     p = svm_path_scan(ds.X, ds.y, use_pallas=True, **GRID, **SOLVE)
     rel = np.max(np.abs(p.objectives - scan_path.objectives)
                  / np.maximum(np.abs(scan_path.objectives), 1.0))
+    assert rel < 1e-5, rel
+
+
+def test_pallas_compact_path_matches_xla(ds, compact_path, monkeypatch):
+    """Compact solves hand the kernels their live-row count (valid_m); the
+    skipped padded blocks must not change the path."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    p = svm_path_scan(ds.X, ds.y, use_pallas=True, reduce="compact",
+                      **GRID, **SOLVE)
+    rel = np.max(np.abs(p.objectives - compact_path.objectives)
+                 / np.maximum(np.abs(compact_path.objectives), 1.0))
     assert rel < 1e-5, rel
 
 
