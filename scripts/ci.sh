@@ -12,12 +12,18 @@
 #   ./scripts/ci.sh x64          # x64:     numerical core under
 #                                #          JAX_ENABLE_X64=1 (screening bound
 #                                #          math, solver, paths)
-#   ./scripts/ci.sh bench        # bench:   engine-equivalence smoke
+#   ./scripts/ci.sh stream       # stream:  out-of-core subsystem
+#                                #          (tests/test_sparse_stream.py) with
+#                                #          a small forced chunk size
+#                                #          (REPRO_STREAM_CHUNK_M=48): bitwise
+#                                #          chunked bound sweep, solver seam,
+#                                #          BCOO, memory-shape property
+#   ./scripts/ci.sh bench        # bench:   engine + storage equivalence smoke
 #                                #          (bench_screening --smoke): catches
-#                                #          host/scan/compact/pallas and
-#                                #          sharded-scan-bitwise regressions in
-#                                #          seconds, asserts objective match
-#   ./scripts/ci.sh all          # kernels + x64 + bench, then full
+#                                #          host/scan/compact/pallas/chunked
+#                                #          and sharded-scan-bitwise
+#                                #          regressions in seconds
+#   ./scripts/ci.sh all          # kernels + x64 + stream + bench, then full
 #
 # Extra pytest args pass through after the lane name (a leading '-' arg is
 # treated as pytest args for the full lane, back-compat):
@@ -30,9 +36,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 lane="${1:-full}"
 case "$lane" in
-  full|fast|kernels|x64|bench|all) shift || true ;;
+  full|fast|kernels|x64|stream|bench|all) shift || true ;;
   -*) lane="full" ;;  # bare pytest args => full lane (legacy invocation)
-  *) echo "unknown lane '$lane' (full|fast|kernels|x64|bench|all)" >&2; exit 2 ;;
+  *) echo "unknown lane '$lane' (full|fast|kernels|x64|stream|bench|all)" >&2; exit 2 ;;
 esac
 
 # suites whose numerics are dtype-parametric: the safe-screening bound
@@ -57,6 +63,12 @@ run_lane() {
     x64)
       JAX_ENABLE_X64=1 python -m pytest -x -q $X64_SUITES "$@"
       ;;
+    stream)
+      # deliberately small + ragged: many chunks per instance, last chunk
+      # partial — the shapes the out-of-core paths must be invariant to
+      REPRO_STREAM_CHUNK_M=48 python -m pytest -x -q \
+        tests/test_sparse_stream.py "$@"
+      ;;
     bench)
       python -m benchmarks.bench_screening --smoke
       ;;
@@ -64,10 +76,11 @@ run_lane() {
 }
 
 if [ "$lane" = "all" ]; then
-  # kernels (interpret-forced), x64, bench smoke, then full — full already
-  # includes every non-slow test, so running fast here would duplicate work
+  # kernels (interpret-forced), x64, stream, bench smoke, then full — full
+  # already includes every non-slow test, so fast here would duplicate work
   run_lane kernels "$@"
   run_lane x64 "$@"
+  run_lane stream "$@"
   run_lane bench
   run_lane full "$@"
 else

@@ -377,7 +377,7 @@ def fista_sharded(
                 return w_s, b_s, objective(w_s, b_s)
 
             def body(st):
-                w, b, wp, bp, t, k, obj, rel = st
+                w, b, wp, bp, t, k, obj, rel, rel_prev, rel_prev2 = st
                 t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
                 beta = (t - 1.0) / t_next
                 zw = w + beta * (w - wp)
@@ -389,6 +389,8 @@ def fista_sharded(
                 # actually increased the (replicated) objective — the
                 # predicate is identical on every device, so all shards
                 # take the same branch and the collectives stay matched.
+                restarted = obj_new > obj
+
                 def restart(_):
                     w_pl, b_pl, obj_pl = prox_step(w, b)
                     return w_pl, b_pl, obj_pl, jnp.float32(1.0)
@@ -397,11 +399,18 @@ def fista_sharded(
                     return w_new, b_new, obj_new, t_next
 
                 w_new, b_new, obj_new, t_next = jax.lax.cond(
-                    obj_new > obj, restart, accept, None
+                    restarted, restart, accept, None
                 )
 
-                rel = jnp.abs(obj - obj_new) / jnp.maximum(jnp.abs(obj), 1e-30)
-                return (w_new, b_new, w, b, t_next, k + 1, obj_new, rel)
+                # restart iterations don't count as convergence evidence
+                # (cf. solver._make_fista_body: the fallback step's tiny
+                # objective change is a momentum artifact, not a plateau)
+                rel_new = jnp.where(
+                    restarted, jnp.float32(jnp.inf),
+                    jnp.abs(obj - obj_new) / jnp.maximum(jnp.abs(obj), 1e-30),
+                )
+                return (w_new, b_new, w, b, t_next, k + 1, obj_new, rel_new,
+                        rel, rel_prev)
 
             return body
 
@@ -412,14 +421,18 @@ def fista_sharded(
             obj0 = objective(w_init, b_scalar)
 
             def cond(st):
-                w, b, wp, bp, t, k, obj, rel = st
-                return (k < max_iters) & (rel > tol)
+                w, b, wp, bp, t, k, obj, rel, rel_prev, rel_prev2 = st
+                # three consecutive sub-tol iterations (see solver.FistaState)
+                return (k < max_iters) & (
+                    jnp.maximum(jnp.maximum(rel, rel_prev), rel_prev2) > tol)
 
             st0 = (w_init, b_scalar, w_init, b_scalar, jnp.float32(1.0),
-                   jnp.int32(0), obj0, jnp.float32(jnp.inf))
-            w, b, _, _, _, k, obj, rel = jax.lax.while_loop(
+                   jnp.int32(0), obj0, jnp.float32(jnp.inf),
+                   jnp.float32(jnp.inf), jnp.float32(jnp.inf))
+            w, b, _, _, _, k, obj, rel, rel_p, rel_p2 = jax.lax.while_loop(
                 cond, make_body(fm_blk), st0)
-            return w, b, obj, k, rel <= tol
+            return (w, b, obj, k,
+                    jnp.maximum(jnp.maximum(rel, rel_p), rel_p2) <= tol)
 
         # ---- dynamic: segmented solve with in-loop gap screening ---------
         # theta-independent bound reductions over live samples (one sweep +
@@ -466,14 +479,16 @@ def fista_sharded(
 
         def outer_cond(carry):
             st, *_ = carry
-            return (st[5] < max_iters) & (st[7] > tol)
+            return (st[5] < max_iters) & (
+                jnp.maximum(jnp.maximum(st[7], st[8]), st[9]) > tol)
 
         def outer_body(carry):
             st, fm, kept, gaps, seg = carry
             k_stop = jnp.minimum(st[5] + screen_every, max_iters)
 
             def inner_cond(s_):
-                return (s_[5] < k_stop) & (s_[7] > tol)
+                return (s_[5] < k_stop) & (
+                    jnp.maximum(jnp.maximum(s_[7], s_[8]), s_[9]) > tol)
 
             st = jax.lax.while_loop(inner_cond, make_body(fm), st)
             w, b = st[0], st[1]
@@ -505,6 +520,7 @@ def fista_sharded(
             changed = jax.lax.psum(jnp.sum((w - w_m) * (w - w_m)), "model") > 0.0
             obj_m = objective(w_m, b)
             st_masked = (w_m, b, w_m, b, jnp.float32(1.0), st[5], obj_m,
+                         jnp.float32(jnp.inf), jnp.float32(jnp.inf),
                          jnp.float32(jnp.inf))
             st = jax.tree_util.tree_map(
                 lambda a_, b_: jnp.where(changed, a_, b_), st_masked, st
@@ -519,13 +535,16 @@ def fista_sharded(
 
         obj0 = objective(w_blk * fm_blk, b_scalar)
         st0 = (w_blk * fm_blk, b_scalar, w_blk * fm_blk, b_scalar,
-               jnp.float32(1.0), jnp.int32(0), obj0, jnp.float32(jnp.inf))
+               jnp.float32(1.0), jnp.int32(0), obj0, jnp.float32(jnp.inf),
+               jnp.float32(jnp.inf), jnp.float32(jnp.inf))
         carry0 = (st0, fm_blk, jnp.full((n_seg,), -1, jnp.int32),
                   jnp.full((n_seg,), jnp.inf, jnp.float32),
                   jnp.int32(0))
         st, fm, kept, gaps, seg = jax.lax.while_loop(outer_cond, outer_body, carry0)
-        w, b, _, _, _, k, obj, rel = st
-        return w, b, obj, k, rel <= tol, fm > 0.5, kept, gaps, seg
+        w, b, _, _, _, k, obj, rel, rel_p, rel_p2 = st
+        return (w, b, obj, k,
+                jnp.maximum(jnp.maximum(rel, rel_p), rel_p2) <= tol,
+                fm > 0.5, kept, gaps, seg)
 
     if w0 is None:
         w0 = jnp.zeros((m,), jnp.float32)

@@ -46,9 +46,15 @@ def lambda_max(X: jax.Array, y: jax.Array) -> jax.Array:
     """Smallest ``lam`` such that ``w*(lam) = 0`` (paper Eq. 26).
 
     ``lambda_max = || sum_i (y_i - b*) x_i ||_inf = || X (y - b*) ||_inf``.
+    Computed in the row-stable formulation (``screening.row_dot``) so the
+    out-of-core ``sparse.lambda_max_stream`` — a max of per-chunk maxima —
+    reproduces this value bitwise and both storages walk the *same*
+    default lambda grid.
     """
+    from .screening import row_dot  # local: keep dual.py dependency-light
+
     b_star = bias_at_lambda_max(y)
-    moment = X @ (y - b_star)
+    moment = row_dot(X, y - b_star)
     return jnp.max(jnp.abs(moment))
 
 

@@ -69,6 +69,7 @@ from .rules import (
     AXIS_SAMPLES,
     ConvexRegion,
     FeatureVIRule,
+    SampleVIRule,
     make_rules,
 )
 from .rules.base import dynamic_tau, solve_with_verification
@@ -79,6 +80,25 @@ from .solver import (
     fista_solve_dynamic,
     lipschitz_estimate,
 )
+
+
+def _is_chunked(X) -> bool:
+    """Duck-typed ``repro.sparse.FeatureChunked`` check (no import cycle)."""
+    return hasattr(X, "stream") and hasattr(X, "gather_rows")
+
+
+def _validate_grid(lambdas) -> np.ndarray:
+    lambdas = np.asarray(lambdas, dtype=np.float64)
+    if lambdas.size == 0:
+        raise ValueError("empty lambda grid")
+    if not np.all(np.isfinite(lambdas)) or np.any(lambdas <= 0):
+        raise ValueError(f"lambda grid must be finite and positive: {lambdas}")
+    if np.any(np.diff(lambdas) >= 0):
+        raise ValueError(
+            "lambda grid must be strictly decreasing (screening regions "
+            f"certify theta*(lam2) only for lam2 < lam1): {lambdas}"
+        )
+    return lambdas
 
 __all__ = ["PathResult", "PathDriver", "svm_path", "default_lambda_grid"]
 
@@ -116,11 +136,16 @@ def _bucket(n: int) -> int:
 def _dynamic_telemetry(res: DynamicFistaResult) -> dict:
     """Host-side view of one dynamic solve's per-segment screening trace."""
     s = int(res.n_segments)
-    return {
+    out = {
         "segments": s,
         "kept_per_segment": [int(v) for v in np.asarray(res.kept_per_segment)[:s]],
         "gap_per_segment": [float(v) for v in np.asarray(res.gap_per_segment)[:s]],
     }
+    if res.kept_samples_per_segment is not None:
+        out["kept_samples_per_segment"] = [
+            int(v) for v in np.asarray(res.kept_samples_per_segment)[:s]
+        ]
+    return out
 
 
 class PathDriver:
@@ -144,6 +169,7 @@ class PathDriver:
         screen_every: int = 50,
         exact_lipschitz: bool = False,
         use_pallas: Optional[bool] = None,
+        L=None,
     ):
         """``dynamic=True`` swaps every solve for the segmented
         ``solver.fista_solve_dynamic``: the step's sequential screen seeds a
@@ -156,7 +182,16 @@ class PathDriver:
         ``exact_lipschitz=True`` re-estimates L per reduced solve instead of
         reusing the full-X upper bound computed once per path (see module
         docstring); ``use_pallas`` routes the FISTA hot-loop sweeps through
-        the fused Pallas kernels (None = env/backend policy)."""
+        the fused Pallas kernels (None = env/backend policy).
+
+        ``L`` (optional): a known upper bound on the Lipschitz constant of
+        ``[X; 1^T]`` — skips the per-path power iteration entirely. The
+        bound is a property of the matrix, not of how it is stored, so
+        passing one value to several storage engines (dense / chunked /
+        CSR) gives them floating-point-identical step sizes and keeps
+        their trajectories comparable to solver tolerance (the streamed
+        estimator reassociates its reductions, and near fp32 plateau ties
+        even 1-ulp step-size differences move the stopping point)."""
         if reduce not in ("gather", "mask"):
             raise ValueError(
                 f"host-driver reduce must be 'gather' or 'mask', got "
@@ -173,6 +208,11 @@ class PathDriver:
         self.screen_every = int(screen_every)
         self.exact_lipschitz = bool(exact_lipschitz)
         self.use_pallas = use_pallas
+        if L is not None and exact_lipschitz:
+            raise ValueError("pass either L= (a known bound) or "
+                             "exact_lipschitz=True (per-solve estimates), "
+                             "not both")
+        self.L = L
 
     # -- reduction helpers -------------------------------------------------
 
@@ -185,7 +225,7 @@ class PathDriver:
         return sel, valid
 
     def _solve(self, Xr, yr, lam, w0, b0, sample_mask, feature_mask=None,
-               L=None):
+               L=None, sample_screen_kw=None):
         if self.dynamic:
             return fista_solve_dynamic(
                 Xr, yr, jnp.asarray(lam), w0=w0, b0=b0,
@@ -194,6 +234,7 @@ class PathDriver:
                 feature_mask=feature_mask,
                 screen_every=self.screen_every, tau=dynamic_tau(self.rules),
                 use_pallas=self.use_pallas,
+                **(sample_screen_kw or {}),
             )
         return fista_solve(
             Xr, yr, jnp.asarray(lam), w0=w0, b0=b0,
@@ -211,6 +252,14 @@ class PathDriver:
         n_lambdas: int = 10,
         lam_min_ratio: float = 0.1,
     ) -> PathResult:
+        """``X`` may be a dense ``(m, n)`` array or a
+        ``repro.sparse.FeatureChunked`` container — the latter runs the
+        out-of-core lane (:meth:`_run_chunked`): screening streams chunk by
+        chunk and the solver sees only the gathered surviving rows."""
+        if _is_chunked(X):
+            return self._run_chunked(X, y, lambdas=lambdas,
+                                     n_lambdas=n_lambdas,
+                                     lam_min_ratio=lam_min_ratio)
         X = jnp.asarray(X)
         y = jnp.asarray(y)
         m, n = X.shape
@@ -225,21 +274,15 @@ class PathDriver:
         # one Lipschitz estimate serves every solve of the path (including
         # verification re-solves): sigma_max of a masked/gathered subproblem
         # never exceeds the full X's. Opt out via exact_lipschitz=True.
-        L_path = None if self.exact_lipschitz else lipschitz_estimate(X)
+        if self.L is not None:
+            L_path = jnp.asarray(self.L, X.dtype)
+        else:
+            L_path = None if self.exact_lipschitz else lipschitz_estimate(X)
 
         lam_max_val = float(lambda_max(X, y))
         if lambdas is None:
             lambdas = default_lambda_grid(lam_max_val, n_lambdas, lam_min_ratio)
-        lambdas = np.asarray(lambdas, dtype=np.float64)
-        if lambdas.size == 0:
-            raise ValueError("empty lambda grid")
-        if not np.all(np.isfinite(lambdas)) or np.any(lambdas <= 0):
-            raise ValueError(f"lambda grid must be finite and positive: {lambdas}")
-        if np.any(np.diff(lambdas) >= 0):
-            raise ValueError(
-                "lambda grid must be strictly decreasing (screening regions "
-                f"certify theta*(lam2) only for lam2 < lam1): {lambdas}"
-            )
+        lambdas = _validate_grid(lambdas)
         T = len(lambdas)
 
         weights = np.zeros((T, m), dtype=np.float64)
@@ -297,6 +340,16 @@ class PathDriver:
         dw_pred = float("inf")
         db_pred = float("inf")
 
+        # dynamic *sample* re-screen: with dynamic=True, a sample rule, and
+        # mask-mode reduction (static shapes — the in-solver mask indexes
+        # global samples), the segmented solver also re-checks margins
+        # in-loop, using the rule's slack model. Gather mode keeps the
+        # driver-level (between-lambda) sample screen only.
+        dyn_sample_rule = None
+        if self.dynamic and self.reduce == "mask":
+            dyn_sample_rule = next(
+                (r for r in sample_rules if isinstance(r, SampleVIRule)), None)
+
         for k in range(1, T):
             lam = float(lambdas[k])
             t0 = time.perf_counter()
@@ -321,15 +374,38 @@ class PathDriver:
             kept[k] = len(f_idx)
 
             # -- solve + verification loop ----------------------------------
-            warm = {"w": w_host, "b": b_host}  # latest available point
+            warm = {"w": w_host, "b": b_host, "rounds": 0}
+
+            skw = None
+            if dyn_sample_rule is not None:
+                # the in-solver sample screen uses the same slack model the
+                # rule screens with between lambdas: the driver's trust
+                # radii plus the secant anchored at this step's margins
+                # (rule.bounds above just updated _u_prev to them)
+                skw = dict(
+                    dynamic_samples=True,
+                    sample_dw=dw_pred, sample_db=db_pred,
+                    sample_u_prev=dyn_sample_rule._u_prev,
+                    sample_shrink_factor=dyn_sample_rule.shrink_factor,
+                    sample_margin_floor=dyn_sample_rule.margin_floor,
+                )
 
             def solve(mask):
                 s_idx = np.nonzero(mask)[0]
+                # in-solver sample screening only on the first round: a
+                # verification re-solve must not re-drop the violators it
+                # was asked to re-admit
                 res, w_full = self._solve_reduced(
                     X, y, X_np, lam, f_mask, f_idx, mask, s_idx,
                     warm["w"], warm["b"], L_path,
+                    sample_screen_kw=skw if warm["rounds"] == 0 else None,
                 )
                 warm["w"], warm["b"] = w_full, float(res.b)
+                warm["rounds"] += 1
+                if getattr(res, "sample_mask", None) is not None:
+                    # fold the in-solver drops into the step's screened set
+                    # so the verification pass below covers them too
+                    mask &= np.asarray(res.sample_mask)
                 return res, w_full, float(res.b)
 
             res, w_full, b_new, rounds = solve_with_verification(
@@ -384,11 +460,13 @@ class PathDriver:
     # -- one reduced solve -------------------------------------------------
 
     def _solve_reduced(self, X, y, X_np, lam, f_mask, f_idx, s_mask, s_idx,
-                       w_host, b_host, L=None):
+                       w_host, b_host, L=None, sample_screen_kw=None):
         """Reduce X on both axes per self.reduce, solve, scatter w back.
 
         ``L``: the path-shared Lipschitz upper bound (valid for any
-        reduction of X; None re-estimates on the reduced matrix)."""
+        reduction of X; None re-estimates on the reduced matrix).
+        ``sample_screen_kw``: in-solver dynamic sample re-screen options
+        (mask mode only — gathered sample axes reindex the mask)."""
         m, n = X.shape
         screening_f = len(f_idx) < m
         screening_s = len(s_idx) < n
@@ -421,10 +499,179 @@ class PathDriver:
             smask = jnp.asarray(s_mask.astype(dtype)) if screening_s else None
             res = self._solve(Xr, y, lam, w0, jnp.asarray(b_host, X.dtype), smask,
                               feature_mask=jnp.asarray(f_mask.astype(dtype)),
-                              L=L)
+                              L=L, sample_screen_kw=sample_screen_kw)
             w_full = np.asarray(res.w, dtype=np.float64) * f_mask
 
         return res, w_full
+
+    # -- out-of-core lane --------------------------------------------------
+
+    def _run_chunked(self, fc, y, lambdas=None, n_lambdas: int = 10,
+                     lam_min_ratio: float = 0.1) -> PathResult:
+        """The screened path over ``repro.sparse.FeatureChunked`` storage.
+
+        Same sequential-screening recurrence as :meth:`run`, restructured
+        around the device-memory contract: the bound sweep streams X chunk
+        by chunk (``sparse.screen_stream`` — bitwise the in-core sweep on
+        dense chunks), gather-mode reduction materializes only the rows
+        that survive screening (``O(chunk + kept)`` peak device memory),
+        and anchor certification streams the correlation sweeps
+        (``sparse.gap_theta_delta_stream``). Supports the a-priori-safe
+        feature rule only (sample rules and the in-solver dynamic screen
+        need in-core X; use ``reduce='gather'``, the storage's whole
+        point).
+        """
+        from repro.sparse import (  # lazy: repro.sparse imports core.solver
+            fista_solve_chunked,
+            gap_theta_delta_stream,
+            lambda_max_stream,
+            lipschitz_estimate_stream,
+            screen_stream,
+        )
+
+        if self.reduce != "gather":
+            raise ValueError(
+                "chunked storage implies gather-mode reduction (mask mode "
+                f"would build the full (m, n) device matrix), got "
+                f"reduce={self.reduce!r}"
+            )
+        if self.dynamic:
+            raise ValueError(
+                "dynamic in-solver screening needs in-core X; run chunked "
+                "paths with dynamic=False"
+            )
+        bad = [r.name for r in self.rules if not isinstance(r, FeatureVIRule)]
+        if bad:
+            raise ValueError(
+                f"chunked storage supports the a-priori-safe feature rule "
+                f"only (sample rules sweep the transposed axis in-core), "
+                f"got {bad}"
+            )
+
+        y = jnp.asarray(y)
+        y_np = np.asarray(y)
+        m, n = fc.shape
+        tau = min((r.tau for r in self.rules), default=SAFE_TAU)
+
+        if self.L is not None:
+            L_path = jnp.asarray(self.L, fc.dtype)
+        else:
+            L_path = (None if self.exact_lipschitz
+                      else lipschitz_estimate_stream(fc))
+        lam_max_val = float(lambda_max_stream(fc, y))
+        if lambdas is None:
+            lambdas = default_lambda_grid(lam_max_val, n_lambdas, lam_min_ratio)
+        lambdas = _validate_grid(lambdas)
+        T = len(lambdas)
+
+        weights = np.zeros((T, m), dtype=np.float64)
+        biases = np.zeros((T,), dtype=np.float64)
+        objectives = np.zeros((T,), dtype=np.float64)
+        kept = np.zeros((T,), dtype=np.int64)
+        active = np.zeros((T,), dtype=np.int64)
+        iters = np.zeros((T,), dtype=np.int64)
+        wall = np.zeros((T,), dtype=np.float64)
+        s_times = np.zeros((T,), dtype=np.float64)
+
+        lam_prev = float(lambdas[0])
+        w_host = np.zeros((m,), dtype=np.float64)
+        if lambdas[0] >= lam_max_val * (1.0 - 1e-9):
+            b_host = float(bias_at_lambda_max(y))
+            theta_prev = theta_at_lambda_max(y, jnp.asarray(lambdas[0]))
+            delta_prev = jnp.asarray(0.0, jnp.asarray(y).dtype)
+            biases[0] = b_host
+            xi0 = np.maximum(0.0, 1.0 - y_np * b_host)
+            objectives[0] = 0.5 * float(np.sum(xi0 * xi0))
+        else:
+            # grid starts below lambda_max: streamed unscreened solve, then
+            # gap-certify (the closed form does not hold — cf. run())
+            t0 = time.perf_counter()
+            res0 = fista_solve_chunked(
+                fc, y, float(lambdas[0]), max_iters=self.max_iters,
+                tol=self.tol, L=L_path,
+            )
+            jax.block_until_ready(res0.w)
+            wall[0] = time.perf_counter() - t0
+            w_host = np.asarray(res0.w, dtype=np.float64)
+            b_host = float(res0.b)
+            weights[0] = w_host
+            biases[0] = b_host
+            objectives[0] = float(res0.obj)
+            kept[0] = m
+            active[0] = int(np.sum(np.abs(w_host) > 1e-10))
+            iters[0] = int(res0.n_iters)
+            theta_prev, delta_prev = gap_theta_delta_stream(
+                fc, y, jnp.asarray(w_host, fc.dtype), res0.b,
+                jnp.asarray(float(lambdas[0])), u=res0.u,
+            )
+
+        for k in range(1, T):
+            lam = float(lambdas[k])
+            t0 = time.perf_counter()
+
+            st0 = time.perf_counter()
+            if self.rules:
+                keep_m, _ = screen_stream(
+                    fc, y, lam_prev, lam, theta_prev, tau=tau,
+                    delta=delta_prev, use_pallas=self.use_pallas,
+                )
+                f_mask = np.asarray(keep_m)
+            else:
+                f_mask = np.ones((m,), dtype=bool)
+            s_times[k] = time.perf_counter() - st0
+
+            f_idx = np.nonzero(f_mask)[0]
+            kept[k] = len(f_idx)
+
+            # gather ONLY the surviving rows (bucket-padded): the device
+            # holds a (kept_padded, n) block, never the full matrix
+            sel_f, valid_f = self._feature_select(None, f_idx, m)
+            Xr = jnp.asarray(fc.gather_rows(sel_f)
+                             * valid_f[:, None].astype(fc.dtype))
+            w0 = jnp.asarray((w_host[sel_f] * valid_f).astype(fc.dtype))
+            res = fista_solve(
+                Xr, y, jnp.asarray(lam), w0=w0,
+                b0=jnp.asarray(b_host, fc.dtype),
+                max_iters=self.max_iters, tol=self.tol, L=L_path,
+                use_pallas=self.use_pallas,
+            )
+            w_full = np.zeros((m,), dtype=np.float64)
+            w_full[sel_f[: len(f_idx)]] = np.asarray(res.w, np.float64)[: len(f_idx)]
+            b_host = float(res.b)
+            w_host = w_full
+
+            # certify the accepted point as the next anchor. The margin
+            # sweep rides the solver's carried u (exact: padding rows are
+            # zero); only the correlation sweeps stream.
+            theta_prev, delta_prev = gap_theta_delta_stream(
+                fc, y, jnp.asarray(w_full, fc.dtype), res.b,
+                jnp.asarray(lam), u=res.u,
+            )
+            lam_prev = lam
+
+            weights[k] = w_full
+            biases[k] = b_host
+            objectives[k] = float(res.obj)
+            active[k] = int(np.sum(np.abs(w_full) > 1e-10))
+            iters[k] = int(res.n_iters)
+            jax.block_until_ready((theta_prev, delta_prev))
+            wall[k] = time.perf_counter() - t0
+
+        # no sample screening on chunked storage: every solved step feeds
+        # all n samples (step 0's closed form feeds none — cf. run())
+        kept_samples = np.full((T,), n, dtype=np.int64)
+        kept_samples[0] = 0
+        return PathResult(
+            lambdas=lambdas, weights=weights, biases=biases,
+            objectives=objectives, kept=kept, active=active,
+            solver_iters=iters, wall_times=wall, screen_times=s_times,
+            screened=bool(self.rules),
+            kept_samples=kept_samples,
+            verify_rounds=np.zeros((T,), dtype=np.int64),
+            rules=tuple(r.name for r in self.rules),
+            extras={"lam_max": lam_max_val, "storage": "chunked",
+                    "n_chunks": fc.n_chunks, "stream_stats": dict(fc.stats)},
+        )
 
 
 def svm_path(
@@ -472,6 +719,12 @@ def svm_path(
     if engine == "scan":
         from .path_scan import svm_path_scan  # deferred: path_scan imports us
 
+        if _is_chunked(X):
+            raise ValueError(
+                "engine='scan' jit-compiles over an in-core X; chunked "
+                "storage runs on the host engine (engine='host', the "
+                "default when X is a FeatureChunked)"
+            )
         if rules is not None:
             raise ValueError(
                 "engine='scan' supports the built-in feature rule only "

@@ -92,7 +92,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from .dual import bias_at_lambda_max, lambda_max, theta_at_lambda_max
-from .path import PathResult, default_lambda_grid
+# _validate_grid shared with the host driver: a grid-validation change
+# applied to one engine must never leave the other accepting what the
+# first rejects
+from .path import PathResult, _validate_grid, default_lambda_grid
 from .screening import (
     SAFE_TAU,
     FeatureReductions,
@@ -374,18 +377,6 @@ def _engine_jit(static_kw: tuple, batched: Optional[str] = None):
 _ENGINE_CACHE: dict = {}
 
 
-def _validate_grid(lambdas) -> np.ndarray:
-    lambdas = np.asarray(lambdas, dtype=np.float64)
-    if lambdas.size == 0:
-        raise ValueError("empty lambda grid")
-    if not np.all(np.isfinite(lambdas)) or np.any(lambdas <= 0):
-        raise ValueError(f"lambda grid must be finite and positive: {lambdas}")
-    if np.any(np.diff(lambdas) >= 0):
-        raise ValueError(
-            "lambda grid must be strictly decreasing (screening regions "
-            f"certify theta*(lam2) only along a decreasing path): {lambdas}"
-        )
-    return lambdas
 
 
 def _validate_reduce(reduce: str) -> str:

@@ -18,8 +18,9 @@ import jax.numpy as jnp
 from ..screening import (
     SAFE_TAU,
     FeatureReductions,
+    _finalize_bounds,
     feature_reductions,
-    screen_bounds_from_reductions,
+    row_dot,
 )
 from .base import AXIS_FEATURES, ConvexRegion, ScreeningRule, register_rule
 
@@ -44,18 +45,23 @@ class FeatureVIRule(ScreeningRule):
         self._static: Optional[tuple[jax.Array, jax.Array, jax.Array]] = None
 
     def prepare(self, X: jax.Array, y: jax.Array) -> None:
-        """Cache the three theta-independent reductions for a whole path."""
-        ones = jnp.ones((X.shape[1],), X.dtype)
-        self._static = (X @ y, X @ ones, jnp.sum(X * X, axis=1))
+        """Cache the three theta-independent reductions for a whole path.
+
+        Row-stable formulation (``screening.row_dot``) so the cached values
+        — and hence the whole bound sweep — match the chunk-streamed screen
+        (``repro/sparse/screen_stream.py``) bitwise.
+        """
+        red = feature_reductions(X, y, jnp.ones_like(y))
+        self._static = (red.d_one, red.d_y, red.d_sq)
 
     def bounds(self, X: jax.Array, y: jax.Array, region: ConvexRegion) -> jax.Array:
-        d_theta = X @ (y * region.theta1)
+        d_theta = row_dot(X, y * region.theta1)
         if self._static is not None:
             d_one, d_y, d_sq = self._static
             red = FeatureReductions(d_theta=d_theta, d_one=d_one, d_y=d_y, d_sq=d_sq)
         else:
             red = feature_reductions(X, y, region.theta1)._replace(d_theta=d_theta)
-        return screen_bounds_from_reductions(red, region.shared)
+        return _finalize_bounds(red, region.shared)
 
     def keep(self, bounds: jax.Array) -> jax.Array:
         return bounds >= self.tau

@@ -108,14 +108,17 @@ def margin_surplus_core(
 ) -> jax.Array:
     """Surplus from precomputed margins + column norms (the slack arithmetic).
 
-    Factored out so the local rule (:func:`sample_margin_surplus`) and the
+    Factored out so the local rule (:func:`sample_margin_surplus`), the
     sharded sweep (``distributed.sample_surplus_sharded`` — which psums the
-    same two feature-axis reductions over the mesh) finalize with *bitwise
-    identical* scalar math; keep the two reduction producers in sync with
-    this signature rather than re-deriving the slack models.
+    same two feature-axis reductions over the mesh), and the in-solver
+    dynamic sample re-screen (``solver.fista_solve_dynamic`` with
+    ``dynamic_samples=True``) finalize with *bitwise identical* scalar math;
+    keep the reduction producers in sync with this signature rather than
+    re-deriving the slack models. ``dw``/``db`` may be python floats or
+    traced scalars (the in-solver path passes tracers), hence the jnp clamp.
     """
-    dw = min(dw, _BIG)
-    db = min(db, _BIG)
+    dw = jnp.minimum(jnp.asarray(dw), _BIG)
+    db = jnp.minimum(jnp.asarray(db), _BIG)
     slack = jnp.sqrt(x_sq) * dw + db  # huge (never screens) until history
     if u_prev is not None:
         secant = shrink_factor * jnp.abs(u1 - u_prev) + margin_floor

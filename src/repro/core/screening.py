@@ -56,7 +56,6 @@ one GEMM-shaped sweep (see kernels/screen.py for the fused TPU kernel).
 
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple, Optional
 
 import jax
@@ -66,6 +65,7 @@ __all__ = [
     "FeatureReductions",
     "ScreenShared",
     "feature_reductions",
+    "row_dot",
     "shared_scalars",
     "shared_scalars_from_stats",
     "screen_bounds_from_reductions",
@@ -115,16 +115,40 @@ class ScreenShared(NamedTuple):
     halfspace_valid: jax.Array  # bool: ||theta1 - 1/lam1|| > 0
 
 
+@jax.jit
+def row_dot(X: jax.Array, v: jax.Array) -> jax.Array:
+    """``X @ v`` as an explicit multiply + last-axis reduction.
+
+    Row-stable formulation: each output row reduces over its own samples
+    only, and XLA lowers ``sum(X * v, axis=1)`` identically for any leading
+    row count — so concatenating the results of row *chunks* reproduces the
+    full-matrix result **bitwise** (a matmul/matvec does not: its tiling
+    depends on the row count). This is the contract the out-of-core streamed
+    screen (``repro/sparse/screen_stream.py``) is built on: the in-core and
+    chunk-accumulated bound sweeps share this kernel and agree exactly.
+    """
+    return jnp.sum(X * v[None, :], axis=1)
+
+
+@jax.jit
+def _row_stable_reductions(X, y_theta, y):
+    d_theta = jnp.sum(X * y_theta[None, :], axis=1)
+    d_one = jnp.sum(X * y[None, :], axis=1)
+    d_y = jnp.sum(X, axis=1)
+    d_sq = jnp.sum(X * X, axis=1)
+    return d_theta, d_one, d_y, d_sq
+
+
 def feature_reductions(X: jax.Array, y: jax.Array, theta1: jax.Array) -> FeatureReductions:
     """The four O(mn) reductions, batched over all features.
 
     ``X``: (m, n) features-major. This is the only data-touching step; the
     Pallas kernel in ``repro/kernels`` fuses the four passes into one.
+    Computed in the row-stable formulation (see :func:`row_dot`) so the
+    streamed per-chunk sweep concatenates to these values bitwise.
     """
-    rhs = jnp.stack([y * theta1, y, jnp.ones_like(y)], axis=1)  # (n, 3)
-    d = X @ rhs  # (m, 3)
-    d_sq = jnp.sum(X * X, axis=1)
-    return FeatureReductions(d_theta=d[:, 0], d_one=d[:, 1], d_y=d[:, 2], d_sq=d_sq)
+    d_theta, d_one, d_y, d_sq = _row_stable_reductions(X, y * theta1, y)
+    return FeatureReductions(d_theta=d_theta, d_one=d_one, d_y=d_y, d_sq=d_sq)
 
 
 def d_theta_sparse(X: jax.Array, y: jax.Array, theta1: jax.Array,
@@ -301,7 +325,14 @@ def screen_bounds_from_reductions(
     return jnp.maximum(m_pos, m_neg)
 
 
-@partial(jax.jit, static_argnames=())
+# jitted separately from the reduction sweep (not one fused program): the
+# streamed screen computes the reductions chunk-by-chunk and must finalize
+# through the *same* compiled function to preserve the bitwise contract —
+# a single whole-program jit would fuse reduction and finalizer into a
+# different lowering than the chunked path can reproduce.
+_finalize_bounds = jax.jit(screen_bounds_from_reductions)
+
+
 def screen_bounds(
     X: jax.Array,
     y: jax.Array,
@@ -315,7 +346,7 @@ def screen_bounds(
     if red is None:
         red = feature_reductions(X, y, theta1)
     sh = shared_scalars(y, lam1, lam2, theta1, delta=delta)
-    return screen_bounds_from_reductions(red, sh)
+    return _finalize_bounds(red, sh)
 
 
 def screen(

@@ -152,6 +152,17 @@ class FistaState(NamedTuple):
     k: jax.Array
     obj: jax.Array
     rel_change: jax.Array
+    # previous iterations' rel_change: convergence requires THREE consecutive
+    # sub-tol iterations. In fp32 the objective's relative ulp is ~6e-8, so
+    # below that any single rel_change is an exact-tie coin flip — FISTA's
+    # momentum plateaus produce such ties mid-trajectory while ``w`` is
+    # still moving (observed: a one-ulp different L stops 2.4e-5 short of
+    # the optimum on a plateau the other L sails through; a single
+    # look-back still stranded 1.3e-6). A run of three ties at a
+    # non-optimum is rare enough that engines with reassociated reductions
+    # (chunked storage, sharded meshes) agree to <=1e-6.
+    rel_prev: jax.Array = jnp.inf
+    rel_prev2: jax.Array = jnp.inf
 
 
 class FistaResult(NamedTuple):
@@ -185,10 +196,23 @@ class DynamicFistaResult(NamedTuple):
     gap_per_segment: jax.Array   # (S,) float
     n_segments: jax.Array        # int32 — segments actually run
     u: Optional[jax.Array] = None  # X^T w at the accepted point (see FistaResult)
+    # dynamic *sample* re-screen telemetry (``dynamic_samples=True`` only):
+    # final live sample mask and per-segment live-sample counts. The sample
+    # screen is margin-*predicted*, not a-priori safe — callers must verify
+    # screened samples at the solution (core/path.py's verification loop
+    # does) before treating the result as exact.
+    sample_mask: Optional[jax.Array] = None          # (n,) bool
+    kept_samples_per_segment: Optional[jax.Array] = None  # (S,) int32
 
 
 def soft_threshold(x: jax.Array, tau: jax.Array) -> jax.Array:
     return jnp.sign(x) * jnp.maximum(jnp.abs(x) - tau, 0.0)
+
+
+def _rel3(s: "FistaState") -> jax.Array:
+    """Worst rel_change of the last three iterations (the stop criterion —
+    see ``FistaState.rel_prev``)."""
+    return jnp.maximum(jnp.maximum(s.rel_change, s.rel_prev), s.rel_prev2)
 
 
 def lipschitz_estimate(X: jax.Array, n_iters: int = 30, key: Optional[jax.Array] = None,
@@ -278,6 +302,8 @@ def _init_state(X, y, lam, w0, b0, sm, use_pallas, col=LOCAL,
         w=w0, b=b0, w_prev=w0, b_prev=b0, u=u0, u_prev=u0,
         t=jnp.asarray(1.0, X.dtype), k=jnp.asarray(0, jnp.int32),
         obj=obj0, rel_change=jnp.asarray(jnp.inf, X.dtype),
+        rel_prev=jnp.asarray(jnp.inf, X.dtype),
+        rel_prev2=jnp.asarray(jnp.inf, X.dtype),
     )
 
 
@@ -327,6 +353,8 @@ def _make_fista_body(X, y, lam, inv_L, sm, fmask=None, use_pallas=False,
         # monotone restart: if the extrapolated step increased the objective,
         # fall back to a plain proximal step from (w, b) — under lax.cond so
         # its two sweeps are paid only when the restart actually fires.
+        restarted = obj_new > s.obj
+
         def restart(_):
             w_p, b_p, u_p, obj_p = prox_from(s.w, s.b, s.u)
             return w_p, b_p, u_p, obj_p, jnp.asarray(1.0, X.dtype)
@@ -335,13 +363,23 @@ def _make_fista_body(X, y, lam, inv_L, sm, fmask=None, use_pallas=False,
             return w_new, b_new, u_new, obj_new, t_next
 
         w_new, b_new, u_new, obj_new, t_next = jax.lax.cond(
-            obj_new > s.obj, restart, accept, None
+            restarted, restart, accept, None
         )
 
-        rel = jnp.abs(s.obj - obj_new) / jnp.maximum(jnp.abs(s.obj), 1e-30)
+        # a restart iteration is not convergence evidence: the fallback step
+        # from (w, b) moves little by construction, so counting its tiny
+        # objective change as rel_change stops the solve at a momentum
+        # overshoot instead of the optimum (observed: ulp-level L
+        # differences flip a restart tie and strand the objective 2e-5 off).
+        # Force one more (plain, t=1) iteration after every restart.
+        rel = jnp.where(
+            restarted, jnp.asarray(jnp.inf, X.dtype),
+            jnp.abs(s.obj - obj_new) / jnp.maximum(jnp.abs(s.obj), 1e-30),
+        )
         return FistaState(
             w=w_new, b=b_new, w_prev=s.w, b_prev=s.b, u=u_new, u_prev=s.u,
             t=t_next, k=s.k + 1, obj=obj_new, rel_change=rel,
+            rel_prev=s.rel_change, rel_prev2=s.rel_prev,
         )
 
     return body
@@ -378,14 +416,15 @@ def fista_run(
                        use_pallas, col, valid_m)
 
     def cond(s: FistaState):
-        return (s.k < max_iters) & (s.rel_change > tol)
+        # three consecutive sub-tol iterations (see FistaState.rel_prev)
+        return (s.k < max_iters) & (_rel3(s) > tol)
 
     body = _make_fista_body(X, y, lam, inv_L, sample_mask, feature_mask,
                             use_pallas, col, valid_m)
     out = jax.lax.while_loop(cond, body, init)
     return FistaResult(
         w=out.w, b=out.b, obj=out.obj, n_iters=out.k,
-        converged=out.rel_change <= tol, u=out.u,
+        converged=_rel3(out) <= tol, u=out.u,
     )
 
 
@@ -422,6 +461,7 @@ def fista_solve(
     L: Optional[jax.Array] = None,
     sample_mask: Optional[jax.Array] = None,
     use_pallas: Optional[bool] = None,
+    operator=None,
 ) -> FistaResult:
     """Solve the primal to relative-objective tolerance ``tol``.
 
@@ -436,8 +476,25 @@ def fista_solve(
     power sweep. ``use_pallas`` routes the two O(mn) sweeps per iteration
     through the fused Pallas kernels (None = the
     ``kernels/ops.py::fista_use_pallas`` policy: env override, else TPU).
+
+    ``operator`` (optional): the design-matrix seam. Accepts either a dense
+    array (identical to passing it as ``X``) or a
+    ``repro.sparse.FeatureChunked`` — the latter routes the solve through
+    the streamed chunk-accumulated GEMV pair
+    (``sparse/solver_stream.fista_solve_chunked``: host-orchestrated, one
+    chunk on device at a time), so in-core call sites run unchanged on data
+    that does not fit on the device. Chunked solves ignore ``use_pallas``
+    (the streamed sweeps are XLA/BCOO per chunk). Passing a chunked
+    container *as* ``X`` dispatches the same way.
     """
-    return _fista_solve_jit(X, y, lam, w0, b0, max_iters, float(tol), L,
+    A = operator if operator is not None else X
+    if hasattr(A, "stream") and hasattr(A, "rmatvec"):  # FeatureChunked
+        from repro.sparse.solver_stream import fista_solve_chunked  # lazy
+
+        return fista_solve_chunked(A, y, lam, w0=w0, b0=b0,
+                                   max_iters=max_iters, tol=tol, L=L,
+                                   sample_mask=sample_mask)
+    return _fista_solve_jit(A, y, lam, w0, b0, max_iters, float(tol), L,
                             sample_mask, _resolve_pallas(use_pallas))
 
 
@@ -523,45 +580,68 @@ def _dynamic_run(
     n_feas_iters: int,
     use_pallas: bool,
     valid_m: Optional[jax.Array] = None,
+    dynamic_samples: bool = False,
+    sample_dw=None,
+    sample_db=None,
+    sample_u_prev: Optional[jax.Array] = None,
+    sample_shrink: float = 2.0,
+    sample_floor: float = 1e-3,
 ) -> DynamicFistaResult:
     """Raw segmented dynamic solve (see :func:`fista_solve_dynamic`).
 
     Trace-safe like :func:`fista_run`; the scan path engine calls this
     directly with the path-shared ``inv_L``, the step's sequential screen
     as ``fmask0``, and (compact reduction) the live-row count ``valid_m``
-    for the Pallas sweeps.
+    for the Pallas sweeps. ``dynamic_samples`` additionally re-checks the
+    margin surplus of every live sample at each refresh (the carried
+    margins make it O(n)) and ANDs it into a live *sample* mask — see
+    :func:`fista_solve_dynamic` for the safety contract.
     """
     sm = sample_mask
     screen_every = max(int(screen_every), 1)
     n_seg = -(-max_iters // screen_every)  # ceil; static
 
-    # theta-independent bound reductions of the (masked) problem, one sweep
     sm_vec = jnp.ones_like(y) if sm is None else sm
-    d_one = X @ (y * sm_vec)      # fhat_j^T 1 over live samples
-    d_y = X @ sm_vec              # fhat_j^T y over live samples
-    d_sq = (X * X) @ sm_vec       # ||fhat_j||^2 over live samples
-    one_y = jnp.sum(y * sm_vec)
-    n_tot = jnp.sum(sm_vec)
+    if dynamic_samples:
+        from .rules.sample_vi import margin_surplus_core  # lazy: no cycle
+
+        # per-sample column norms over the (already feature-masked) matrix:
+        # valid for the trust-region slack — the weight movement it bounds is
+        # supported on live feature rows only — and theta-independent, so one
+        # sweep serves every refresh
+        x_sq_cols = jnp.sum(X * X, axis=0)
+
+    def bound_statics(smv):
+        """theta-independent bound reductions over the live samples."""
+        return (X @ (y * smv), X @ smv, (X * X) @ smv,
+                jnp.sum(y * smv), jnp.sum(smv))
+
+    # one sweep hoisted out of the loop; with dynamic_samples the values are
+    # carried and re-swept only after a refresh that actually dropped
+    # samples (the sm_dirty flag) — a stabilized sample mask costs nothing
+    statics0 = bound_statics(sm_vec)
 
     s0 = _init_state(X, y, lam, w0, jnp.asarray(b0, X.dtype), sm, use_pallas,
                      valid_m=valid_m)
     kept0 = jnp.full((n_seg,), -1, jnp.int32)
     gaps0 = jnp.full((n_seg,), jnp.inf, X.dtype)
+    kept_s0 = jnp.full((n_seg,), -1, jnp.int32)
 
     def outer_cond(carry):
         s, *_ = carry
-        return (s.k < max_iters) & (s.rel_change > tol)
+        return (s.k < max_iters) & (_rel3(s) > tol)
 
     def outer_body(carry):
-        s, fmask, kept, gaps, seg = carry
+        s, fmask, smask, statics, sm_dirty, kept, gaps, kept_s, seg = carry
+        seg_sm = smask if dynamic_samples else sm
 
         # -- segment: up to screen_every FISTA steps on the live mask ------
-        body = _make_fista_body(X, y, lam, inv_L, sm, fmask, use_pallas,
+        body = _make_fista_body(X, y, lam, inv_L, seg_sm, fmask, use_pallas,
                                 valid_m=valid_m)
         k_stop = jnp.minimum(s.k + screen_every, max_iters)
 
         def inner_cond(st):
-            return (st.k < k_stop) & (st.rel_change > tol)
+            return (st.k < k_stop) & (_rel3(st) > tol)
 
         s = jax.lax.while_loop(inner_cond, body, s)
 
@@ -569,15 +649,24 @@ def _dynamic_run(
         # the carried margins s.u are X^T w at the current point, so the
         # certificate skips its own margin sweep
         theta, delta, gap = gap_theta_delta(
-            X, y, s.w, s.b, lam, sm, n_feas_iters=n_feas_iters, u=s.u
+            X, y, s.w, s.b, lam, seg_sm, n_feas_iters=n_feas_iters, u=s.u
         )
+        if dynamic_samples:
+            # re-sweep the statics only if the previous refresh shrank the
+            # sample mask (this refresh's feature screen must see the mask
+            # the segment just ran with — exactly the carried smask)
+            statics = jax.lax.cond(
+                sm_dirty, lambda _: bound_statics(smask), lambda _: statics,
+                None,
+            )
+        d_one_c, d_y_c, d_sq_c, one_y_c, n_tot_c = statics
         sh = shared_scalars_from_stats(
-            lam, lam, one_y=one_y,
+            lam, lam, one_y=one_y_c,
             theta_dot_one=jnp.sum(theta), theta_dot_y=theta @ y,
-            theta_sq=theta @ theta, n_tot=n_tot, delta=delta,
+            theta_sq=theta @ theta, n_tot=n_tot_c, delta=delta,
         )
         red = FeatureReductions(
-            d_theta=X @ (y * theta), d_one=d_one, d_y=d_y, d_sq=d_sq
+            d_theta=X @ (y * theta), d_one=d_one_c, d_y=d_y_c, d_sq=d_sq_c
         )
         # two independent certificates, elementwise min (each is a valid
         # upper bound on |fhat_j^T theta*|): the at-lambda VI cap, and the
@@ -585,25 +674,47 @@ def _dynamic_run(
         # delta, so it is the one that bites as the solve converges.
         bounds = jnp.minimum(
             screen_bounds_from_reductions(red, sh),
-            jnp.abs(red.d_theta) + jnp.sqrt(jnp.maximum(d_sq, 0.0)) * delta,
+            jnp.abs(red.d_theta) + jnp.sqrt(jnp.maximum(d_sq_c, 0.0)) * delta,
         )
         new_mask = fmask * (bounds >= tau).astype(X.dtype)
 
-        # zero the dropped coordinates; restart momentum only when zeroing
-        # actually moved the iterate (a moved iterate is a fresh point —
-        # stale momentum and a stale rel_change would otherwise terminate
-        # the solve early; dropping already-zero coordinates is free). The
-        # carried margins are re-swept for the masked point — one fused
-        # pass per segment, amortized over screen_every iterations.
+        # -- dynamic sample re-screen: margin surplus at the carried
+        # margins (O(n) — no sweep). Samples whose surplus clears the slack
+        # budget are *predicted* inactive and dropped from the loss for the
+        # rest of the solve; the driver's KKT verification re-admits any
+        # violator, so exactness is restored at acceptance.
+        if dynamic_samples:
+            surplus = margin_surplus_core(
+                s.u + s.b, y, x_sq_cols, sample_dw, sample_db,
+                u_prev=sample_u_prev, shrink_factor=sample_shrink,
+                margin_floor=sample_floor,
+            )
+            new_sm = smask * (surplus < 0.0).astype(X.dtype)
+            sm_dirty = jnp.sum(smask - new_sm) > 0.0  # statics stale now
+        else:
+            new_sm = smask
+
+        # zero the dropped coordinates; restart momentum only when the mask
+        # change actually moved the problem (a moved iterate / shrunk loss
+        # is a fresh point — stale momentum and a stale rel_change would
+        # otherwise terminate the solve early; dropping already-zero
+        # coordinates is free). The carried margins are re-swept for the
+        # masked point — one fused pass per segment, amortized over
+        # screen_every iterations.
         w_m = s.w * new_mask
         changed = jnp.sum((s.w - w_m) * (s.w - w_m)) > 0.0
-        u_m, obj_m = _margin_obj_sweep(X, y, lam, w_m, s.b, sm, use_pallas,
-                                       valid_m=valid_m)
+        if dynamic_samples:
+            changed = changed | (jnp.sum(smask - new_sm) > 0.0)
+        u_m, obj_m = _margin_obj_sweep(
+            X, y, lam, w_m, s.b, new_sm if dynamic_samples else sm,
+            use_pallas, valid_m=valid_m)
         s_masked = FistaState(
             w=w_m, b=s.b, w_prev=w_m, b_prev=s.b, u=u_m, u_prev=u_m,
             t=jnp.asarray(1.0, X.dtype), k=s.k,
             obj=obj_m,
             rel_change=jnp.asarray(jnp.inf, X.dtype),
+            rel_prev=jnp.asarray(jnp.inf, X.dtype),
+            rel_prev2=jnp.asarray(jnp.inf, X.dtype),
         )
         s = jax.tree_util.tree_map(
             lambda a, b_: jnp.where(changed, a, b_), s_masked, s
@@ -616,24 +727,32 @@ def _dynamic_run(
         slot = jnp.minimum(seg, n_seg - 1)
         kept = kept.at[slot].set(jnp.sum(new_mask).astype(jnp.int32))
         gaps = gaps.at[slot].set(gap)
-        return (s, new_mask, kept, gaps, jnp.minimum(seg + 1, n_seg))
+        kept_s = kept_s.at[slot].set(jnp.sum(new_sm).astype(jnp.int32))
+        return (s, new_mask, new_sm, statics, sm_dirty, kept, gaps, kept_s,
+                jnp.minimum(seg + 1, n_seg))
 
-    out, fmask, kept, gaps, seg = jax.lax.while_loop(
-        outer_cond, outer_body, (s0, fmask0, kept0, gaps0, jnp.asarray(0, jnp.int32))
+    out, fmask, smask, _, _, kept, gaps, kept_s, seg = jax.lax.while_loop(
+        outer_cond, outer_body,
+        (s0, fmask0, sm_vec, statics0, jnp.asarray(False), kept0, gaps0,
+         kept_s0, jnp.asarray(0, jnp.int32))
     )
     return DynamicFistaResult(
         w=out.w, b=out.b, obj=out.obj, n_iters=out.k,
-        converged=out.rel_change <= tol,
+        converged=_rel3(out) <= tol,
         feature_mask=fmask > 0.5, kept_per_segment=kept,
         gap_per_segment=gaps, n_segments=seg, u=out.u,
+        sample_mask=(smask > 0.5) if dynamic_samples else None,
+        kept_samples_per_segment=kept_s if dynamic_samples else None,
     )
 
 
 @partial(jax.jit, static_argnames=("max_iters", "screen_every", "n_feas_iters",
-                                   "use_pallas"))
+                                   "use_pallas", "dynamic_samples"))
 def _fista_solve_dynamic_jit(X, y, lam, w0, b0, max_iters, tol, L,
                              sample_mask, feature_mask, screen_every, tau,
-                             n_feas_iters, use_pallas):
+                             n_feas_iters, use_pallas, dynamic_samples,
+                             sample_dw, sample_db, sample_u_prev,
+                             sample_shrink, sample_floor):
     m = X.shape[0]
     lam = jnp.asarray(lam, X.dtype)
     if w0 is None:
@@ -651,7 +770,11 @@ def _fista_solve_dynamic_jit(X, y, lam, w0, b0, max_iters, tol, L,
     w0 = w0 * fmask0
     return _dynamic_run(X, y, lam, w0, b0, 1.0 / L, sample_mask, fmask0,
                         max_iters, tol, screen_every, tau, n_feas_iters,
-                        use_pallas)
+                        use_pallas, dynamic_samples=dynamic_samples,
+                        sample_dw=sample_dw, sample_db=sample_db,
+                        sample_u_prev=sample_u_prev,
+                        sample_shrink=sample_shrink,
+                        sample_floor=sample_floor)
 
 
 def fista_solve_dynamic(
@@ -669,6 +792,12 @@ def fista_solve_dynamic(
     tau: float = SAFE_TAU,
     n_feas_iters: int = 4,
     use_pallas: Optional[bool] = None,
+    dynamic_samples: bool = False,
+    sample_dw: float = float("inf"),
+    sample_db: float = float("inf"),
+    sample_u_prev: Optional[jax.Array] = None,
+    sample_shrink_factor: float = 2.0,
+    sample_margin_floor: float = 1e-3,
 ) -> DynamicFistaResult:
     """Segmented FISTA with gap-driven dynamic feature screening.
 
@@ -687,9 +816,29 @@ def fista_solve_dynamic(
     shrink it. ``L``/``use_pallas`` as in :func:`fista_solve`. Returns
     :class:`DynamicFistaResult` with per-segment kept-counts and gaps
     (sentinels ``-1`` / ``inf`` for segments not run).
+
+    Dynamic *sample* re-screen (``dynamic_samples=True``): each refresh
+    additionally evaluates every live sample's margin surplus at the
+    carried margins (``rules/sample_vi.margin_surplus_core`` — O(n), no
+    extra sweep) against the trust-region radii ``sample_dw``/``sample_db``
+    and the secant model anchored at ``sample_u_prev``, and ANDs
+    ``surplus < 0`` into a live *sample* mask: samples predicted to satisfy
+    their margin stop contributing to gradients and to the gap certificate
+    for the rest of the solve. Unlike the feature screen this is
+    margin-*predicted*, not a-priori safe — the returned
+    ``DynamicFistaResult.sample_mask`` must be KKT-verified at the solution
+    (the path driver's verification loop re-admits violators and re-solves),
+    after which screened samples provably have ``xi_i = 0`` and the accepted
+    solution is exact.
     """
     return _fista_solve_dynamic_jit(
         X, y, lam, w0, b0, max_iters, float(tol), L, sample_mask,
         feature_mask, max(int(screen_every), 1), float(tau),
         int(n_feas_iters), _resolve_pallas(use_pallas),
+        bool(dynamic_samples),
+        jnp.asarray(min(float(sample_dw), 1e30)),
+        jnp.asarray(min(float(sample_db), 1e30)),
+        sample_u_prev,
+        jnp.asarray(float(sample_shrink_factor)),
+        jnp.asarray(float(sample_margin_floor)),
     )

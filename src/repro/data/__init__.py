@@ -1,2 +1,8 @@
-from .svm import make_sparse_classification, SvmDataset  # noqa: F401
+from .svm import (  # noqa: F401
+    CsrData,
+    SvmDataset,
+    csr_from_dense,
+    load_libsvm,
+    make_sparse_classification,
+)
 from .tokens import TokenPipeline, synthetic_batch_specs  # noqa: F401

@@ -1,9 +1,12 @@
-"""Synthetic datasets for the sparse-SVM workload.
+"""Synthetic + on-disk datasets for the sparse-SVM workload.
 
 Generates linearly-separable-ish two-class data with a *known* sparse ground
 truth ``w_true`` so screening behaviour (rejection rate vs lambda) can be
 studied in a controlled way, plus utilities to mimic the paper's
-high-dimensional text-like regimes (m >> n, sparse X).
+high-dimensional text-like regimes (m >> n, sparse X): a true CSR
+representation for sparse designs (feeding ``--storage csr`` /
+``repro.sparse.FeatureChunked.from_csr``) and a minimal libsvm-format text
+loader for real datasets.
 """
 
 from __future__ import annotations
@@ -12,11 +15,55 @@ from typing import NamedTuple, Optional
 
 import numpy as np
 
+__all__ = ["SvmDataset", "CsrData", "make_sparse_classification",
+           "csr_from_dense", "load_libsvm"]
+
+
+class CsrData(NamedTuple):
+    """CSR triple over *feature rows* (the paper's (m, n) layout)."""
+
+    data: np.ndarray     # (nnz,)
+    indices: np.ndarray  # (nnz,) int32 sample (column) indices
+    indptr: np.ndarray   # (m + 1,) int64
+    shape: tuple         # (m, n)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indptr[-1])
+
+    @property
+    def density(self) -> float:
+        m, n = self.shape
+        return self.nnz / max(m * n, 1)
+
+    def to_dense(self, dtype=None) -> np.ndarray:
+        m, n = self.shape
+        out = np.zeros((m, n), dtype=dtype or self.data.dtype)
+        rows = np.repeat(np.arange(m), np.diff(self.indptr))
+        out[rows, self.indices] = self.data
+        return out
+
 
 class SvmDataset(NamedTuple):
     X: np.ndarray       # (m, n) features x samples (paper layout)
     y: np.ndarray       # (n,) in {-1, +1}
     w_true: np.ndarray  # (m,) ground-truth sparse direction
+    #: true CSR view of X (same values, same dtype) for sparse designs;
+    #: ``None`` when the matrix is dense (``density == 1``)
+    csr: Optional[CsrData] = None
+
+
+def csr_from_dense(X: np.ndarray) -> CsrData:
+    """Exact CSR triple of a host matrix (row-major, numpy only)."""
+    X = np.asarray(X)
+    nz = X != 0
+    indptr = np.concatenate([[0], np.cumsum(nz.sum(axis=1))]).astype(np.int64)
+    return CsrData(
+        data=X[nz],
+        indices=np.nonzero(nz)[1].astype(np.int32),
+        indptr=indptr,
+        shape=tuple(X.shape),
+    )
 
 
 def make_sparse_classification(
@@ -31,16 +78,22 @@ def make_sparse_classification(
 ) -> SvmDataset:
     """Two-class data: ``y = sign(w_true^T x + eps)`` with k-sparse w_true.
 
-    ``density < 1`` zeroes random entries of X (text-like sparsity);
-    ``correlated > 0`` mixes features with an AR(1)-style factor to create
-    correlated (harder-to-screen) designs.
+    ``density < 1`` zeroes random entries of X (text-like sparsity) and the
+    returned dataset carries a true CSR triple (``.csr``) of the final
+    matrix. To keep that sparsity *real*, sparse designs are standardized by
+    feature scale only (no mean-centering — centering would densify every
+    row; this matches how sparse text features are used in practice).
+    Dense designs keep the paper's full standardization. ``correlated > 0``
+    mixes features with an AR(1)-style factor to create correlated
+    (harder-to-screen) designs.
     """
     rng = np.random.default_rng(seed)
     X = rng.standard_normal((m, n))
     if correlated > 0.0:
         common = rng.standard_normal((1, n))
         X = np.sqrt(1 - correlated) * X + np.sqrt(correlated) * common
-    if density < 1.0:
+    sparse = density < 1.0
+    if sparse:
         X *= rng.random((m, n)) < density
 
     w_true = np.zeros((m,))
@@ -49,6 +102,63 @@ def make_sparse_classification(
 
     scores = w_true @ X + noise * rng.standard_normal(n)
     y = np.where(scores >= np.median(scores), 1.0, -1.0)
-    # feature standardization (paper experiments standardize)
-    X = (X - X.mean(axis=1, keepdims=True)) / (X.std(axis=1, keepdims=True) + 1e-12)
-    return SvmDataset(X.astype(dtype), y.astype(dtype), w_true.astype(dtype))
+    # feature standardization (paper experiments standardize); scale-only
+    # for sparse designs so zeros stay zeros
+    if sparse:
+        X = X / (X.std(axis=1, keepdims=True) + 1e-12)
+    else:
+        X = (X - X.mean(axis=1, keepdims=True)) / (X.std(axis=1, keepdims=True) + 1e-12)
+    X = X.astype(dtype)
+    csr = csr_from_dense(X) if sparse else None
+    return SvmDataset(X, y.astype(dtype), w_true.astype(dtype), csr)
+
+
+def load_libsvm(
+    path,
+    n_features: Optional[int] = None,
+    dtype=np.float32,
+    zero_based: bool = False,
+) -> SvmDataset:
+    """Minimal libsvm/svmlight text loader, into the paper's (m, n) layout.
+
+    Each line is ``<label> <index>:<value> ...``; indices are 1-based unless
+    ``zero_based``. Labels are mapped to {-1, +1} by sign (0/1 labels map to
+    -1/+1). Returns an :class:`SvmDataset` whose ``X`` is the dense
+    ``(n_features, n_samples)`` matrix and whose ``.csr`` is the exact CSR
+    triple over feature rows — feed the latter to
+    ``FeatureChunked.from_csr`` for out-of-core use (this loader itself is
+    minimal and materializes the dense host matrix; ``w_true`` is zeros).
+    Pure numpy — no scipy requirement.
+    """
+    feats, samples, vals, labels = [], [], [], []
+    with open(path) as fh:
+        for line in fh:
+            line = line.split("#", 1)[0].strip()
+            if not line:
+                continue
+            parts = line.split()
+            labels.append(float(parts[0]))
+            i = len(labels) - 1
+            for tok in parts[1:]:
+                k, v = tok.split(":")
+                j = int(k) - (0 if zero_based else 1)
+                if j < 0:
+                    raise ValueError(
+                        f"feature index {k} in {path} is not "
+                        f"{'0' if zero_based else '1'}-based"
+                    )
+                feats.append(j)
+                samples.append(i)
+                vals.append(float(v))
+    n = len(labels)
+    if n == 0:
+        raise ValueError(f"no samples in {path}")
+    m = int(n_features) if n_features else (max(feats) + 1 if feats else 0)
+    X = np.zeros((m, n), dtype=dtype)
+    if feats:
+        f = np.asarray(feats)
+        if f.max() >= m:
+            raise ValueError(f"feature index {f.max()} >= n_features={m}")
+        X[f, np.asarray(samples)] = np.asarray(vals, dtype=dtype)
+    y = np.where(np.asarray(labels) > 0, 1.0, -1.0).astype(dtype)
+    return SvmDataset(X, y, np.zeros((m,), dtype), csr_from_dense(X))

@@ -48,17 +48,23 @@ from repro.core import (
     lipschitz_estimate,
     theta_at_lambda_max,
 )
-from repro.core.distributed import fista_sharded, screen_sharded, svm_mesh
+from repro.core.distributed import (
+    fista_sharded,
+    sample_surplus_sharded,
+    screen_sharded,
+    svm_mesh,
+)
 from repro.core.dual import safe_theta_and_delta
 from repro.core.rules import (
     AXIS_FEATURES,
     AXIS_SAMPLES,
     ConvexRegion,
     FeatureVIRule,
+    SampleVIRule,
     make_rules,
 )
 from repro.core.rules.base import dynamic_tau, solve_with_verification
-from repro.data import make_sparse_classification
+from repro.data import load_libsvm, make_sparse_classification
 
 
 def run_path_scan(
@@ -158,11 +164,15 @@ def run_path(
     rule_list = make_rules(None if rules in (None, "none") else rules)
     feature_rules = [r for r in rule_list if r.axis == AXIS_FEATURES]
     sample_rules = [r for r in rule_list if r.axis == AXIS_SAMPLES]
-    # the stock feature rule dispatches to the sharded psum sweep (same
-    # bounds, mesh-parallel); other feature rules go through their generic
-    # bounds/keep. Only the generic-path rules need their prepare() caches.
+    # the stock rules dispatch to their sharded psum sweeps (same bounds /
+    # surpluses, mesh-parallel): feature_vi -> screen_sharded, sample_vi ->
+    # sample_surplus_sharded; other rules go through their generic
+    # bounds/keep. Only the generic-path rules need their prepare() caches
+    # (the sharded sample sweep keeps its secant history on the rule object).
     sharded_feature = [r for r in feature_rules if type(r) is FeatureVIRule]
     generic_feature = [r for r in feature_rules if type(r) is not FeatureVIRule]
+    sharded_sample = [r for r in sample_rules if type(r) is SampleVIRule]
+    generic_sample = [r for r in sample_rules if type(r) is not SampleVIRule]
     for rule in (*generic_feature, *sample_rules):
         rule.prepare(Xj, yj)
 
@@ -210,7 +220,21 @@ def run_path(
         for rule in generic_feature:
             keep = keep & jnp.asarray(rule.keep(rule.bounds(Xj, yj, region)))
         s_mask = np.ones((n,), dtype=bool)
-        for rule in sample_rules:
+        for rule in sharded_sample:
+            # the mesh-parallel margin sweep (ROADMAP: queued since PR 4):
+            # same two feature-axis reductions, psum over "model", and the
+            # rule's own slack arithmetic — bitwise the local oracle on
+            # meshes that keep the feature axis whole. The secant history
+            # lives on the rule object, exactly as in the local path.
+            surplus, u1 = sample_surplus_sharded(
+                mesh, Xj, yj, state["w"], float(state["b"]),
+                dw=float(state["dw"]), db=float(state["db"]),
+                u_prev=rule._u_prev, shrink_factor=rule.shrink_factor,
+                margin_floor=rule.margin_floor,
+            )
+            rule._u_prev = u1
+            s_mask &= np.asarray(surplus < 0.0)
+        for rule in generic_sample:
             s_mask &= np.asarray(rule.keep(rule.bounds(Xj, yj, region)))
 
         kept = int(jnp.sum(keep))
@@ -268,6 +292,65 @@ def run_path(
     return results
 
 
+def run_path_chunked(
+    X, y, csr=None,
+    n_lambdas: int = 10, lam_min_ratio: float = 0.1,
+    tol: float = 1e-9, max_iters: int = 4000,
+    rules: str = "feature_vi",
+    storage: str = "chunked", chunk_m: int = 512,
+    exact_lipschitz: bool = False,
+    log=print,
+):
+    """The launcher's out-of-core lane: stream the screened path over
+    ``repro.sparse.FeatureChunked`` storage (``--storage chunked|csr``).
+
+    ``csr`` (a ``repro.data.CsrData``, e.g. from a sparse synthetic design
+    or the libsvm loader) backs ``--storage csr``; low-density chunks sweep
+    as BCOO so screening FLOPs track nnz. Single-host by construction — the
+    whole point is that only one chunk (plus the screened active set) ever
+    sits on the device.
+    """
+    from repro.core import PathDriver
+    from repro.sparse import FeatureChunked
+
+    if rules in (None, "none"):
+        rule_spec = []
+    elif rules == "feature_vi":
+        rule_spec = "feature_vi"
+    else:
+        raise ValueError(
+            f"--storage {storage} supports the built-in feature rule only "
+            f"(got --rules {rules!r}); sample rules need in-core X"
+        )
+    if storage == "csr":
+        if csr is None:
+            raise ValueError(
+                "--storage csr needs a CSR-backed dataset: generate with "
+                "--density < 1 or load one with --libsvm"
+            )
+        fc = FeatureChunked.from_csr(csr, chunk_m=chunk_m)
+    else:
+        fc = FeatureChunked.from_dense(X, chunk_m=chunk_m)
+    driver = PathDriver(rules=rule_spec, tol=tol, max_iters=max_iters,
+                        exact_lipschitz=exact_lipschitz)
+    r = driver.run(fc, y, n_lambdas=n_lambdas, lam_min_ratio=lam_min_ratio)
+    m = fc.shape[0]
+    results = []
+    for k in range(len(r.lambdas)):
+        row = {"lam": float(r.lambdas[k]), "kept": int(r.kept[k]),
+               "nnz": int(r.active[k]), "obj": float(r.objectives[k]),
+               "iters": int(r.solver_iters[k]),
+               "wall_s": float(r.wall_times[k])}
+        results.append(row)
+        log(f"[svm] k={k} lam={row['lam']:.4f} kept={row['kept']}/{m} "
+            f"nnz={row['nnz']} obj={row['obj']:.5f} ({row['wall_s']:.2f}s)")
+    st = r.extras["stream_stats"]
+    log(f"[svm] storage={storage} chunks={r.extras['n_chunks']} "
+        f"chunk_m={chunk_m} max_device_rows={st['max_put_rows']} "
+        f"transfers={st['puts']} bcoo_transfers={st['bcoo_puts']}")
+    return results
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--m", type=int, default=2000)
@@ -275,6 +358,20 @@ def main():
     ap.add_argument("--n-lambdas", type=int, default=8)
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--density", type=float, default=1.0,
+                    help="synthetic X density; < 1 also builds a true CSR "
+                         "representation (feeds --storage csr)")
+    ap.add_argument("--libsvm", default=None, metavar="FILE",
+                    help="load a libsvm/svmlight text file instead of "
+                         "generating synthetic data")
+    ap.add_argument("--storage", choices=("dense", "chunked", "csr"),
+                    default="dense",
+                    help="dense: in-core (m, n) device matrix; chunked: "
+                         "host-resident feature chunks streamed to device "
+                         "(out-of-core); csr: chunked CSR, low-density "
+                         "chunks swept as BCOO")
+    ap.add_argument("--chunk-m", type=int, default=512,
+                    help="feature rows per chunk for --storage chunked|csr")
     ap.add_argument("--rules", default="feature_vi",
                     help="screening rules: feature_vi|sample_vi|composite|dvi|"
                          "none (comma-separated for a custom mix)")
@@ -296,7 +393,11 @@ def main():
     args = ap.parse_args()
 
     rules = args.rules if "," not in args.rules else args.rules.split(",")
-    ds = make_sparse_classification(m=args.m, n=args.n, seed=0)
+    if args.libsvm:
+        ds = load_libsvm(args.libsvm)
+    else:
+        ds = make_sparse_classification(m=args.m, n=args.n, seed=0,
+                                        density=args.density)
     if args.engine == "host" and args.reduce != "mask":
         raise SystemExit(
             f"--reduce {args.reduce} is a scan-engine option; the host "
@@ -309,6 +410,29 @@ def main():
             "one dispatch, so there is no per-step state to checkpoint or "
             "resume. Use --engine host for checkpointed paths."
         )
+    if args.storage != "dense":
+        if args.engine == "scan":
+            raise SystemExit(
+                "--storage chunked|csr runs on the host engine (the scan "
+                "engine jit-compiles over an in-core X); drop --engine scan"
+            )
+        if args.model * args.data > 1:
+            raise SystemExit(
+                "--storage chunked|csr is single-host streaming (one chunk "
+                "on one device); use --storage dense for sharded meshes"
+            )
+        if args.dynamic:
+            raise SystemExit(
+                "--dynamic needs in-core X (the in-solver re-screen sweeps "
+                "the full matrix every segment); use --storage dense"
+            )
+        results = run_path_chunked(
+            ds.X, ds.y, csr=ds.csr, n_lambdas=args.n_lambdas,
+            rules=args.rules, storage=args.storage, chunk_m=args.chunk_m,
+            exact_lipschitz=args.exact_lipschitz)
+        Path("artifacts").mkdir(exist_ok=True)
+        Path("artifacts/svm_path.json").write_text(json.dumps(results, indent=2))
+        return
     if args.engine == "scan":
         results = run_path_scan(ds.X, ds.y, n_lambdas=args.n_lambdas,
                                 model=args.model, data=args.data,

@@ -1,0 +1,29 @@
+"""Out-of-core + sparse-matrix engine: chunked storage and streamed sweeps.
+
+Entry points:
+
+* :class:`FeatureChunked` — ``X`` as host-resident feature-row chunks
+  (dense or CSR; low-density chunks sweep as BCOO on device);
+* :func:`screen_stream` / :func:`screen_bounds_stream` — the paper's safe
+  screen, chunk-accumulated (bitwise vs the in-core sweep on dense chunks);
+* :func:`fista_solve_chunked` — streamed FISTA behind the
+  ``core/solver.fista_solve(operator=...)`` seam;
+* the chunked :class:`~repro.core.path.PathDriver` lane: pass a
+  ``FeatureChunked`` to ``svm_path`` / ``PathDriver.run`` and the screened
+  path gathers only the chunks that survive screening — peak device memory
+  ``O(chunk + kept)``.
+"""
+
+from .chunked import BCOO_DENSITY_THRESHOLD, CsrChunk, FeatureChunked  # noqa: F401
+from .screen_stream import (  # noqa: F401
+    fixed_reductions,
+    lambda_max_stream,
+    screen_bounds_stream,
+    screen_stream,
+    stream_feature_reductions,
+)
+from .solver_stream import (  # noqa: F401
+    fista_solve_chunked,
+    gap_theta_delta_stream,
+    lipschitz_estimate_stream,
+)

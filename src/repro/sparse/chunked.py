@@ -1,0 +1,318 @@
+"""Out-of-core feature-chunked storage for the ``(m, n)`` design matrix.
+
+The paper's headline regime — high-dimensional text-like data with
+``m >> n`` and mostly-zero ``X`` — is exactly where the design matrix stops
+fitting on one device while every *working set* (a feature chunk, the
+screened active set, every ``(n,)``/``(m,)`` vector) still does. This module
+provides the storage container the rest of the pipeline streams over:
+
+* :class:`FeatureChunked` holds ``X`` as a sequence of fixed-size
+  **feature-block chunks** (row blocks in the paper's features-major
+  layout). Each chunk lives on the *host*, either dense (``np.ndarray``) or
+  CSR (:class:`CsrChunk` — indptr/indices/data over the chunk's rows), and
+  is shipped to the device only while it is being swept.
+* :meth:`FeatureChunked.stream` is the single device-transfer point:
+  it double-buffers ``jax.device_put`` (chunk ``i+1`` is dispatched while
+  chunk ``i`` computes — transfers are async, so host→device copy overlaps
+  device compute), and converts low-density CSR chunks to
+  ``jax.experimental.sparse.BCOO`` so the hot sweeps cost FLOPs
+  proportional to ``nnz`` rather than ``chunk_m * n``.
+* :meth:`matvec` / :meth:`rmatvec` are the chunk-accumulated GEMV pair the
+  streamed FISTA solver is built on (``grad = X r`` concatenates per-chunk
+  rows; ``u = X^T w`` accumulates per-chunk partials), and
+  :meth:`gather_rows` is the host-side gather the chunked
+  :class:`~repro.core.path.PathDriver` uses to materialize only the rows
+  that *survive screening* — peak device memory is ``O(chunk + kept)``,
+  never ``O(m * n)``.
+
+Device-memory contract: no method of this class ever places more than one
+chunk (plus ``O(m + n)`` vectors) on the device at a time; the property test
+in ``tests/test_sparse_stream.py`` walks the jaxprs of every per-chunk
+kernel and asserts no ``(m, n)``-sized intermediate exists. ``as_dense()``
+is the explicit escape hatch for in-core use and small tests.
+
+``stats`` counts transfers (``puts``) and the largest row block ever put on
+device (``max_put_rows``) so benchmarks and tests can observe the contract
+instead of trusting it.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CsrChunk", "FeatureChunked", "BCOO_DENSITY_THRESHOLD"]
+
+#: CSR chunks at or below this density are swept as BCOO on device (FLOPs
+#: scale with nnz); denser CSR chunks are densified per transfer (the dense
+#: sweep's bandwidth wins once a third of the entries are nonzero anyway).
+BCOO_DENSITY_THRESHOLD = 0.05
+
+
+class CsrChunk(NamedTuple):
+    """Host CSR block over a contiguous range of feature rows."""
+
+    data: np.ndarray     # (nnz,)
+    indices: np.ndarray  # (nnz,) int32 column (sample) indices
+    indptr: np.ndarray   # (rows + 1,) int64
+    n_cols: int
+
+    @property
+    def rows(self) -> int:
+        return len(self.indptr) - 1
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indptr[-1])
+
+    @property
+    def density(self) -> float:
+        denom = max(self.rows * self.n_cols, 1)
+        return self.nnz / denom
+
+    def to_dense(self, dtype=None) -> np.ndarray:
+        out = np.zeros((self.rows, self.n_cols),
+                       dtype=dtype or self.data.dtype)
+        rows = np.repeat(np.arange(self.rows), np.diff(self.indptr))
+        out[rows, self.indices] = self.data
+        return out
+
+    def row_sq(self) -> np.ndarray:
+        """``||f_j||^2`` per chunk row, from the CSR data (no densify)."""
+        sq = self.data.astype(self.data.dtype) ** 2
+        out = np.zeros((self.rows,), dtype=self.data.dtype)
+        if len(sq):
+            rows = np.repeat(np.arange(self.rows), np.diff(self.indptr))
+            np.add.at(out, rows, sq)
+        return out
+
+
+def _as_csr_parts(csr) -> tuple[np.ndarray, np.ndarray, np.ndarray, tuple]:
+    """Duck-typed CSR unpack: scipy.sparse.csr_matrix, data/svm.CsrData, or
+    a plain ``(data, indices, indptr, shape)`` tuple."""
+    if hasattr(csr, "indptr") and hasattr(csr, "shape"):
+        return (np.asarray(csr.data), np.asarray(csr.indices),
+                np.asarray(csr.indptr), tuple(csr.shape))
+    data, indices, indptr, shape = csr
+    return np.asarray(data), np.asarray(indices), np.asarray(indptr), tuple(shape)
+
+
+class FeatureChunked:
+    """``X`` as host-resident feature-row chunks, streamed to device on use.
+
+    Build with :meth:`from_dense` or :meth:`from_csr`; the constructor takes
+    an explicit chunk list (each ``np.ndarray`` of shape ``(rows_i, n)`` or
+    :class:`CsrChunk`) for callers assembling chunks from external storage.
+    """
+
+    def __init__(self, chunks: Sequence[Union[np.ndarray, CsrChunk]], n: int,
+                 dtype=np.float32,
+                 bcoo_threshold: float = BCOO_DENSITY_THRESHOLD):
+        if not chunks:
+            raise ValueError("FeatureChunked needs at least one chunk")
+        self.chunks = list(chunks)
+        self.n = int(n)
+        self.dtype = np.dtype(dtype)
+        self.bcoo_threshold = float(bcoo_threshold)
+        rows = []
+        for c in self.chunks:
+            if isinstance(c, CsrChunk):
+                if c.n_cols != self.n:
+                    raise ValueError(f"chunk n_cols {c.n_cols} != {self.n}")
+                rows.append(c.rows)
+            else:
+                if c.ndim != 2 or c.shape[1] != self.n:
+                    raise ValueError(f"bad chunk shape {c.shape}")
+                rows.append(c.shape[0])
+        self.offsets = np.concatenate([[0], np.cumsum(rows)]).astype(np.int64)
+        self.m = int(self.offsets[-1])
+        self.stats = {"puts": 0, "max_put_rows": 0, "bcoo_puts": 0}
+
+    # -- constructors ------------------------------------------------------
+
+    @classmethod
+    def from_dense(cls, X, chunk_m: int = 512, **kw) -> "FeatureChunked":
+        """Split a dense ``(m, n)`` host matrix into row chunks (no copy of
+        the chunk data beyond numpy views)."""
+        X = np.asarray(X)
+        m, n = X.shape
+        chunk_m = max(int(chunk_m), 1)
+        chunks = [X[s: s + chunk_m] for s in range(0, m, chunk_m)]
+        return cls(chunks, n, dtype=X.dtype, **kw)
+
+    @classmethod
+    def from_csr(cls, csr, chunk_m: int = 512, **kw) -> "FeatureChunked":
+        """Split a CSR matrix over feature rows into :class:`CsrChunk`s.
+
+        ``csr`` is anything with ``data``/``indices``/``indptr``/``shape``
+        (scipy ``csr_matrix``, :class:`repro.data.svm.CsrData`) or a plain
+        ``(data, indices, indptr, shape)`` tuple. Slicing CSR row blocks is
+        an ``indptr`` slice — no per-element work.
+        """
+        data, indices, indptr, shape = _as_csr_parts(csr)
+        m, n = shape
+        chunk_m = max(int(chunk_m), 1)
+        chunks = []
+        for s in range(0, m, chunk_m):
+            e = min(s + chunk_m, m)
+            lo, hi = indptr[s], indptr[e]
+            chunks.append(CsrChunk(
+                data=data[lo:hi],
+                indices=np.asarray(indices[lo:hi], np.int32),
+                indptr=np.asarray(indptr[s: e + 1] - lo, np.int64),
+                n_cols=int(n),
+            ))
+        return cls(chunks, int(n), dtype=data.dtype, **kw)
+
+    # -- shape / metadata --------------------------------------------------
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.m, self.n)
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.chunks)
+
+    def chunk_bounds(self, i: int) -> tuple[int, int]:
+        return int(self.offsets[i]), int(self.offsets[i + 1])
+
+    def chunk_density(self, i: int) -> float:
+        c = self.chunks[i]
+        if isinstance(c, CsrChunk):
+            return c.density
+        denom = max(c.size, 1)
+        return float(np.count_nonzero(c)) / denom
+
+    def density(self) -> float:
+        nnz = sum(c.nnz if isinstance(c, CsrChunk) else np.count_nonzero(c)
+                  for c in self.chunks)
+        return nnz / max(self.m * self.n, 1)
+
+    # -- escape hatch ------------------------------------------------------
+
+    def as_dense(self) -> np.ndarray:
+        """Materialize the full host matrix (in-core escape hatch)."""
+        return np.concatenate([
+            c.to_dense(self.dtype) if isinstance(c, CsrChunk)
+            else np.asarray(c, self.dtype)
+            for c in self.chunks
+        ], axis=0)
+
+    # -- device streaming --------------------------------------------------
+
+    def _device_form(self, i: int):
+        """One chunk's device representation: dense ``jax.Array`` or BCOO."""
+        from jax.experimental import sparse as jsparse
+
+        c = self.chunks[i]
+        rows = c.rows if isinstance(c, CsrChunk) else c.shape[0]
+        self.stats["puts"] += 1
+        self.stats["max_put_rows"] = max(self.stats["max_put_rows"], rows)
+        if isinstance(c, CsrChunk) and c.density <= self.bcoo_threshold:
+            self.stats["bcoo_puts"] += 1
+            row_idx = np.repeat(np.arange(c.rows, dtype=np.int32),
+                                np.diff(c.indptr))
+            idx = np.stack([row_idx, c.indices.astype(np.int32)], axis=1)
+            return jsparse.BCOO(
+                (jax.device_put(c.data.astype(self.dtype)),
+                 jax.device_put(idx)),
+                shape=(c.rows, self.n),
+            )
+        dense = c.to_dense(self.dtype) if isinstance(c, CsrChunk) else c
+        return jax.device_put(np.asarray(dense, self.dtype))
+
+    def stream(self):
+        """Yield ``((start, stop), device_chunk)`` with one-chunk prefetch.
+
+        ``jax.device_put`` is asynchronous: dispatching chunk ``i+1``'s
+        transfer before yielding chunk ``i`` overlaps the next copy with the
+        caller's compute on the current chunk (classic double buffering);
+        at most two chunks are in flight on the device at any moment.
+        """
+        nxt = self._device_form(0)
+        for i in range(self.n_chunks):
+            cur = nxt
+            if i + 1 < self.n_chunks:
+                nxt = self._device_form(i + 1)
+            yield self.chunk_bounds(i), cur
+
+    # -- chunk-accumulated GEMV pair (the solver's two sweeps) -------------
+
+    def matvec(self, v) -> jax.Array:
+        """``X @ v`` — per-chunk rows, concatenated (the gradient sweep)."""
+        v = jnp.asarray(v, self.dtype)
+        return jnp.concatenate([_chunk_mv(dev, v) for _, dev in self.stream()])
+
+    def rmatvec(self, w) -> jax.Array:
+        """``X^T w`` — per-chunk partials, accumulated (the margin sweep)."""
+        w = jnp.asarray(w, self.dtype)
+        acc = jnp.zeros((self.n,), self.dtype)
+        for (s, e), dev in self.stream():
+            acc = acc + _chunk_rmv(dev, w[s:e])
+        return acc
+
+    def row_sq(self) -> jax.Array:
+        """``||f_j||^2`` for every feature row (one stream; CSR chunks from
+        their data, no densify)."""
+        outs = []
+        for i, c in enumerate(self.chunks):
+            if isinstance(c, CsrChunk):
+                outs.append(jnp.asarray(c.row_sq().astype(self.dtype)))
+            else:
+                outs.append(_chunk_sq(self._device_form(i)))
+        return jnp.concatenate(outs)
+
+    # -- host-side gather (the screened-path reduction) --------------------
+
+    def gather_rows(self, idx: np.ndarray) -> np.ndarray:
+        """Dense host gather of the given global feature rows.
+
+        The chunked path driver calls this with the rows that *survived*
+        screening (bucket-padded): only chunks containing surviving rows are
+        touched, and only those rows are densified — the device then holds a
+        ``(kept_padded, n)`` block, never the full matrix.
+        """
+        idx = np.asarray(idx, np.int64)
+        out = np.zeros((len(idx), self.n), dtype=self.dtype)
+        which = np.searchsorted(self.offsets[1:], idx, side="right")
+        for ci in np.unique(which):
+            sel = np.nonzero(which == ci)[0]
+            local = idx[sel] - self.offsets[ci]
+            c = self.chunks[ci]
+            if isinstance(c, CsrChunk):
+                for dst, r in zip(sel, local):
+                    lo, hi = c.indptr[r], c.indptr[r + 1]
+                    out[dst, c.indices[lo:hi]] = c.data[lo:hi]
+            else:
+                out[sel] = c[local]
+        return out
+
+
+# --------------------------------------------------------------------------
+# per-chunk device kernels (jitted once per chunk shape / sparsity pattern)
+# --------------------------------------------------------------------------
+# These, plus the screen-sweep kernels in screen_stream.py, are the ONLY
+# functions that ever see a chunk on device — the memory-shape property test
+# walks exactly these jaxprs.
+
+@jax.jit
+def _chunk_mv(Xc, v):
+    return Xc @ v
+
+
+@jax.jit
+def _chunk_rmv(Xc, wc):
+    # dense (rows, n).T @ (rows,) and BCOO both support this contraction;
+    # for BCOO the vector-matrix form avoids materializing the transpose
+    if isinstance(Xc, jnp.ndarray):
+        return Xc.T @ wc
+    return wc @ Xc
+
+
+@jax.jit
+def _chunk_sq(Xc):
+    return jnp.sum(Xc * Xc, axis=1)

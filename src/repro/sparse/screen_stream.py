@@ -1,0 +1,190 @@
+"""Chunk-accumulated safe-screening bound sweep over :class:`FeatureChunked`.
+
+The paper's O(mn) screen reduces each feature row independently (the four
+per-feature reductions of ``core/screening.py``), so it streams perfectly:
+sweep one feature chunk at a time, concatenate the per-chunk reductions, and
+finalize with the same closed-form bound — the device never holds more than
+one chunk of ``X``.
+
+Bitwise contract
+----------------
+For dense chunks the per-chunk reduction is the *same jitted row-stable
+kernel* (``core/screening._row_stable_reductions`` / ``row_dot``) the
+in-core sweep uses, and row-stable reductions are invariant to the leading
+row count — so ``screen_stream`` on any chunking returns **bitwise** the
+bounds of ``core/screening.screen_bounds`` on the dense matrix (asserted in
+``tests/test_sparse_stream.py``). BCOO chunks (low-density CSR) use sparse
+matvecs instead — FLOPs proportional to ``nnz`` — which reassociate the
+reduction; they carry a tolerance guarantee, and screening *safety* is
+unaffected either way (the tau margin absorbs ulp noise by design).
+
+Per-chunk Pallas route: ``use_pallas=True`` sends each dense chunk through
+the fused TPU bound kernel (``kernels/ops.screen_bounds_op``) instead — the
+bound finalizer is per-row, so evaluating it per chunk with the globally
+shared scalars is exact. fp32 kernel accumulation makes this a tolerance
+route too; default policy is Mosaic-on-TPU, XLA elsewhere.
+
+Theta-independent caching (paper Sec. 6.4): ``d_one``, ``d_y``, ``d_sq``
+do not depend on the anchor, so a path driver screens T lambdas with
+``T + 1`` streams of X, not ``4T`` — :func:`fixed_reductions` computes them
+once and memoizes on the container.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.screening import (
+    SAFE_TAU,
+    FeatureReductions,
+    _finalize_bounds,
+    _row_stable_reductions,
+    row_dot,
+    shared_scalars,
+)
+
+from .chunked import FeatureChunked
+
+__all__ = [
+    "fixed_reductions",
+    "stream_feature_reductions",
+    "screen_bounds_stream",
+    "screen_stream",
+    "lambda_max_stream",
+]
+
+_FIXED_CACHE = "_fixed_reductions"
+
+
+def fixed_reductions(fc: FeatureChunked, y) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``(d_one, d_y, d_sq)`` for every feature, streamed once and memoized.
+
+    The cache is keyed on the identity of the *caller's* ``y`` object — not
+    the dtype-converted copy, which would be fresh every call and silently
+    turn the "T + 1 streams per path" contract into 2T+ (one dataset per
+    container is the expected usage; a different ``y`` object recomputes).
+    """
+    cached = getattr(fc, _FIXED_CACHE, None)
+    if cached is not None and cached[0] is y:
+        return cached[1]
+    y_key = y
+    y = jnp.asarray(y, fc.dtype)
+    d_one, d_y, d_sq = [], [], []
+    for (_, _), dev in fc.stream():
+        if isinstance(dev, jnp.ndarray):
+            _, o, dy, sq = _row_stable_reductions(dev, y, y)
+            d_one.append(o), d_y.append(dy), d_sq.append(sq)
+        else:  # BCOO: sparse matvecs + data-side row norms
+            d_one.append(dev @ y)
+            d_y.append(dev @ jnp.ones_like(y))
+            d_sq.append(_bcoo_row_sq(dev))
+    out = (jnp.concatenate(d_one), jnp.concatenate(d_y), jnp.concatenate(d_sq))
+    setattr(fc, _FIXED_CACHE, (y_key, out))
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _bcoo_row_sq_impl(data, rows, n_rows):
+    return jax.ops.segment_sum(data * data, rows, num_segments=n_rows)
+
+
+def _bcoo_row_sq(dev) -> jax.Array:
+    """``||f_j||^2`` of a BCOO chunk from its data (nnz work, no densify)."""
+    return _bcoo_row_sq_impl(dev.data, dev.indices[:, 0], int(dev.shape[0]))
+
+
+def stream_feature_reductions(fc: FeatureChunked, y, theta1) -> FeatureReductions:
+    """The four screening reductions for every feature, one stream of X."""
+    # cache first, with the caller's y object (see fixed_reductions), then
+    # convert for the local arithmetic
+    d_one, d_y, d_sq = fixed_reductions(fc, y)
+    y = jnp.asarray(y, fc.dtype)
+    theta1 = jnp.asarray(theta1, fc.dtype)
+    yt = y * theta1
+    parts = []
+    for (_, _), dev in fc.stream():
+        parts.append(row_dot(dev, yt) if isinstance(dev, jnp.ndarray)
+                     else dev @ yt)
+    return FeatureReductions(d_theta=jnp.concatenate(parts), d_one=d_one,
+                             d_y=d_y, d_sq=d_sq)
+
+
+def screen_bounds_stream(
+    fc: FeatureChunked,
+    y,
+    lam1,
+    lam2,
+    theta1,
+    delta=0.0,
+    use_pallas: Optional[bool] = None,
+) -> jax.Array:
+    """Upper bound on ``|fhat_j^T theta*(lam2)|``, chunk-streamed.
+
+    XLA route (default off-TPU): per-chunk row-stable reductions + the
+    shared jitted finalizer — bitwise vs the in-core sweep on dense chunks.
+    Pallas route: per-chunk fused bound kernel (TPU hot path).
+    """
+    from repro.kernels.ops import fista_use_pallas  # lazy: no import cycle
+
+    if fista_use_pallas(use_pallas):
+        from repro.kernels.ops import screen_bounds_op
+
+        from .chunked import CsrChunk
+
+        y = jnp.asarray(y, fc.dtype)
+        theta1 = jnp.asarray(theta1, fc.dtype)
+        parts = []
+        # iterate the host chunks directly (densifying CSR ones) rather
+        # than fc.stream(): the fused kernel needs dense input, and going
+        # through stream() would build-and-discard a BCOO per sparse chunk
+        # — a second transfer the stats would record as the one used
+        for i, c in enumerate(fc.chunks):
+            dense = c.to_dense(fc.dtype) if isinstance(c, CsrChunk) else c
+            rows = dense.shape[0]
+            fc.stats["puts"] += 1
+            fc.stats["max_put_rows"] = max(fc.stats["max_put_rows"], rows)
+            parts.append(screen_bounds_op(jnp.asarray(dense, fc.dtype), y,
+                                          lam1, lam2, theta1, delta=delta))
+        return jnp.concatenate(parts)
+
+    red = stream_feature_reductions(fc, y, theta1)
+    sh = shared_scalars(jnp.asarray(y, fc.dtype), lam1, lam2,
+                        jnp.asarray(theta1, fc.dtype), delta=delta)
+    return _finalize_bounds(red, sh)
+
+
+def screen_stream(
+    fc: FeatureChunked,
+    y,
+    lam1,
+    lam2,
+    theta1,
+    tau: float = SAFE_TAU,
+    delta=0.0,
+    use_pallas: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Safe screening over chunked storage: ``(keep_mask, bounds)``."""
+    bounds = screen_bounds_stream(fc, y, lam1, lam2, theta1, delta=delta,
+                                  use_pallas=use_pallas)
+    return bounds >= tau, bounds
+
+
+def lambda_max_stream(fc: FeatureChunked, y) -> jax.Array:
+    """``|| X (y - mean y) ||_inf`` without an in-core X (cf. dual.lambda_max).
+
+    A max of per-chunk maxima is exact (max is associative), and the
+    per-chunk moment rows ride the same row-stable kernel as
+    ``dual.lambda_max`` — so on dense chunks this matches the in-core value
+    **bitwise**, and both storages walk identical default lambda grids.
+    """
+    y = jnp.asarray(y, fc.dtype)
+    v = y - jnp.mean(y)
+    best = jnp.asarray(0.0, fc.dtype)
+    for (_, _), dev in fc.stream():
+        moment = row_dot(dev, v) if isinstance(dev, jnp.ndarray) else dev @ v
+        best = jnp.maximum(best, jnp.max(jnp.abs(moment)))
+    return best

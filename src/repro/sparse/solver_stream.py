@@ -1,0 +1,217 @@
+"""Streamed FISTA over :class:`FeatureChunked` — the solver's two O(mn)
+sweeps as chunk-accumulated GEMVs.
+
+Mirrors the fused in-core body (``core/solver.py``): the iterate carries its
+margins ``u = X^T w`` so the momentum point's margins are an axpy, and one
+iteration costs exactly two streams of X —
+
+* gradient sweep  ``grad_w = -X (y xi)``: per-chunk rows, concatenated;
+* margin sweep    ``u_new = X^T w_new``: per-chunk partials, accumulated —
+
+with the monotone-restart fallback paying its two extra streams only when
+it fires. Orchestration is a host loop (each chunk transfer is a host
+decision), so per-iteration host sync is inherent to the out-of-core
+regime; the chunk transfers themselves are double-buffered by
+``FeatureChunked.stream``.
+
+This is the implementation behind ``core/solver.fista_solve(operator=...)``
+— the seam that lets every in-core call site run unchanged on data that
+does not fit on the device. Objectives match the dense solver to solver
+tolerance (chunk accumulation reassociates the ``X^T w`` reduction, so
+bitwise equality is *not* claimed here — that contract belongs to the
+screening bound sweep, see ``screen_stream.py``).
+
+``gap_theta_delta_stream`` is the streamed twin of
+``dual.safe_theta_and_delta`` (same alternating feasibility projection,
+same 1-strong-concavity radius), so the chunked path driver can certify
+anchors without an in-core X.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solver import FistaResult, soft_threshold
+
+from .chunked import FeatureChunked
+
+__all__ = [
+    "fista_solve_chunked",
+    "lipschitz_estimate_stream",
+    "gap_theta_delta_stream",
+]
+
+
+@jax.jit
+def _slacks(u, b, y, sm):
+    xi = jnp.maximum(0.0, 1.0 - y * (u + b))
+    return xi * sm
+
+
+@jax.jit
+def _objective(xi, w, lam):
+    return 0.5 * jnp.sum(xi * xi) + lam * jnp.sum(jnp.abs(w))
+
+
+@jax.jit
+def _prox(zw, zb, gw, gb, inv_L, lam):
+    return soft_threshold(zw - inv_L * gw, lam * inv_L), zb - inv_L * gb
+
+
+def lipschitz_estimate_stream(fc: FeatureChunked, n_iters: int = 30,
+                              key: Optional[jax.Array] = None) -> jax.Array:
+    """Power iteration for ``sigma_max([X; 1^T])^2``, two streams per iter.
+
+    Same recurrence (and start vector) as ``solver.lipschitz_estimate``; the
+    chunked GEMVs reassociate the reductions, so the estimate agrees to
+    float tolerance — still an upper-bound-compatible step size after the
+    solver's 1% safety factor, and still monotone under row masking.
+    """
+    n = fc.shape[1]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    v = jax.random.normal(key, (n,), dtype=fc.dtype)
+
+    def norm(v):
+        return jnp.sqrt(jnp.maximum(jnp.sum(v * v), 0.0))
+
+    for _ in range(n_iters):
+        v = v / jnp.maximum(norm(v), 1e-30)
+        u_w = fc.matvec(v)
+        u_b = jnp.sum(v)
+        v = fc.rmatvec(u_w) + u_b
+    return norm(v)
+
+
+def fista_solve_chunked(
+    fc: FeatureChunked,
+    y,
+    lam,
+    w0=None,
+    b0=None,
+    max_iters: int = 2000,
+    tol: float = 1e-9,
+    L: Optional[jax.Array] = None,
+    sample_mask=None,
+) -> FistaResult:
+    """Solve the primal over chunked storage (see module docstring).
+
+    Same contract as ``solver.fista_solve`` (warm starts, path-shared ``L``,
+    0/1 ``sample_mask`` dropping loss columns); device memory stays at one
+    chunk plus ``O(m + n)`` vectors.
+    """
+    m, n = fc.shape
+    y = jnp.asarray(y, fc.dtype)
+    lam = jnp.asarray(lam, fc.dtype)
+    sm = (jnp.ones_like(y) if sample_mask is None
+          else jnp.asarray(sample_mask, fc.dtype))
+    if L is None:
+        L = lipschitz_estimate_stream(fc)
+    L = jnp.maximum(jnp.asarray(L, fc.dtype) * 1.01, 1e-12)
+    inv_L = 1.0 / L
+
+    if w0 is None:
+        w = jnp.zeros((m,), fc.dtype)
+        u = jnp.zeros((n,), fc.dtype)
+    else:
+        w = jnp.asarray(w0, fc.dtype)
+        u = fc.rmatvec(w)
+    b = jnp.asarray(jnp.mean(y) if b0 is None else b0, fc.dtype)
+
+    xi = _slacks(u, b, y, sm)
+    obj = _objective(xi, w, lam)
+    w_prev, b_prev, u_prev = w, b, u
+    t = 1.0
+    tol = float(tol)
+    k = 0
+    converged = False
+    rel_prev = rel_prev2 = float("inf")
+
+    def prox_from(w_a, b_a, u_a):
+        """One proximal step anchored at known margins: 2 streams of X."""
+        xi_a = _slacks(u_a, b_a, y, sm)
+        gv = y * xi_a
+        gw = -fc.matvec(gv)
+        gb = -jnp.sum(gv)
+        w_new, b_new = _prox(w_a, b_a, gw, gb, inv_L, lam)
+        u_new = fc.rmatvec(w_new)
+        obj_new = _objective(_slacks(u_new, b_new, y, sm), w_new, lam)
+        return w_new, b_new, u_new, obj_new
+
+    while k < max_iters:
+        t_next = 0.5 * (1.0 + float(jnp.sqrt(1.0 + 4.0 * t * t)))
+        beta = (t - 1.0) / t_next
+        zw = w + beta * (w - w_prev)
+        zb = b + beta * (b - b_prev)
+        uz = u + beta * (u - u_prev)
+
+        w_new, b_new, u_new, obj_new = prox_from(zw, zb, uz)
+        restarted = float(obj_new) > float(obj)
+        if restarted:
+            # monotone restart: plain step from (w, b) — margins are carried
+            w_new, b_new, u_new, obj_new = prox_from(w, b, u)
+            t_next = 1.0
+
+        # restart iterations are not convergence evidence (cf. the in-core
+        # body): force one more plain iteration after every restart
+        rel = (float("inf") if restarted
+               else abs(float(obj) - float(obj_new)) / max(abs(float(obj)), 1e-30))
+        w_prev, b_prev, u_prev = w, b, u
+        w, b, u, obj, t = w_new, b_new, u_new, obj_new, t_next
+        k += 1
+        # three consecutive sub-tol iterations (see solver.FistaState.rel_prev)
+        if max(rel, rel_prev, rel_prev2) <= tol:
+            converged = True
+            break
+        rel_prev, rel_prev2 = rel, rel_prev
+
+    return FistaResult(
+        w=w, b=b, obj=obj, n_iters=jnp.asarray(k, jnp.int32),
+        converged=jnp.asarray(converged), u=u,
+    )
+
+
+def gap_theta_delta_stream(
+    fc: FeatureChunked,
+    y,
+    w,
+    b,
+    lam,
+    n_feas_iters: int = 8,
+    u: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Streamed ``(theta1, delta)`` certificate — twin of
+    ``dual.safe_theta_and_delta``.
+
+    Each feasibility iteration needs the full correlation sweep
+    ``X (y * alpha)`` (the rescale is a max over *all* features), so this
+    costs ``n_feas_iters + 1`` streams; ``u`` (margins ``X^T w``, e.g. the
+    solver's carried ones) saves the extra margin stream.
+    """
+    y = jnp.asarray(y, fc.dtype)
+    lam = jnp.asarray(lam, fc.dtype)
+    if u is None:
+        u = fc.rmatvec(jnp.asarray(w, fc.dtype))
+    xi = jnp.maximum(0.0, 1.0 - y * (u + jnp.asarray(b, fc.dtype)))
+    alpha = xi
+    n = y.shape[0]
+
+    def rescale(alpha):
+        corr = fc.matvec(y * alpha)
+        mx = jnp.max(jnp.abs(corr))
+        return alpha * jnp.minimum(1.0, lam / jnp.maximum(mx, 1e-30))
+
+    for _ in range(n_feas_iters):
+        alpha = rescale(alpha)
+        alpha = jnp.maximum(0.0, alpha - (alpha @ y) / n * y)
+    alpha = rescale(alpha)
+
+    gap = (0.5 * jnp.sum(xi * xi)
+           + lam * jnp.sum(jnp.abs(jnp.asarray(w, fc.dtype)))
+           - (jnp.sum(alpha) - 0.5 * jnp.sum(alpha * alpha)))
+    eq_resid = jnp.abs(alpha @ y) / jnp.sqrt(jnp.asarray(float(n), fc.dtype))
+    delta = (jnp.sqrt(2.0 * jnp.maximum(gap, 0.0)) + 2.0 * eq_resid) / lam
+    return alpha / lam, delta

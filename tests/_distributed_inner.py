@@ -101,8 +101,17 @@ def main():
     loc = fista_solve_dynamic(X, y, lam2, max_iters=20000, tol=1e-12,
                               screen_every=25)
     kept_loc = np.asarray(loc.kept_per_segment)[: int(loc.n_segments)]
-    assert kept.shape == kept_loc.shape and np.max(np.abs(kept - kept_loc)) <= 2, (
+    # psum reassociation perturbs objectives by ulps, and near the stopping
+    # boundary that legitimately shifts WHEN convergence triggers — so the
+    # sharded run may take one segment more or fewer than the local one.
+    # The invariants that must hold: monotone tightening, segment counts
+    # agreeing over the common prefix, and a final live set of similar size
+    # (safety of the screened set vs the true optimum is asserted above).
+    common = min(len(kept), len(kept_loc))
+    assert abs(len(kept) - len(kept_loc)) <= 1, (kept, kept_loc)
+    assert np.max(np.abs(kept[:common] - kept_loc[:common])) <= 2, (
         kept, kept_loc)
+    assert abs(int(kept[-1]) - int(kept_loc[-1])) <= 2, (kept, kept_loc)
 
     # -- sharded scan path engine: one shard_map'd program ----------------
     # (the bitwise unit-mesh check lives in test_path_scan.py; here the real

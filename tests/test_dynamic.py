@@ -206,6 +206,56 @@ def test_dvi_anchor_state_resets_per_path(inst):
     np.testing.assert_allclose(r1.kept, r2.kept)
 
 
+# -- DS: dynamic *sample* re-screen ------------------------------------------
+
+def test_dynamic_sample_solver_screens_and_verifies(inst):
+    """Solver-level: honest radii screen samples whose margins truly clear."""
+    _, X, y = inst
+    lam = 0.15 * float(lambda_max(X, y))
+    ref = fista_solve(X, y, lam, max_iters=40000, tol=1e-12)
+    # warm-start AT the optimum with (essentially) zero movement radii: the
+    # margin prediction is then exact, so every screened sample must have
+    # margin >= 1 at the optimum — and the objective must not move
+    dyn = fista_solve_dynamic(X, y, lam, w0=ref.w, b0=ref.b,
+                              max_iters=20000, tol=1e-11, screen_every=10,
+                              dynamic_samples=True,
+                              sample_dw=1e-4, sample_db=1e-4)
+    assert dyn.sample_mask is not None
+    screened = ~np.asarray(dyn.sample_mask)
+    assert screened.any(), "no sample screened with zero-movement radii"
+    margins = np.asarray(y * (X.T @ ref.w + ref.b))
+    assert margins[screened].min() >= 1.0 - 1e-4
+    np.testing.assert_allclose(float(dyn.obj), float(ref.obj), rtol=1e-5)
+    n_seg = int(dyn.n_segments)
+    kept_s = np.asarray(dyn.kept_samples_per_segment)[:n_seg]
+    assert np.all(np.diff(kept_s) <= 0)  # sample mask only shrinks
+
+
+def test_dynamic_sample_mask_default_off(inst):
+    _, X, y = inst
+    lam = 0.3 * float(lambda_max(X, y))
+    dyn = fista_solve_dynamic(X, y, lam, max_iters=5000, tol=1e-9,
+                              screen_every=25)
+    assert dyn.sample_mask is None
+    assert dyn.kept_samples_per_segment is None
+
+
+def test_dynamic_sample_path_exact_with_verification(inst):
+    """Path-level: dynamic in-solver sample drops ride the KKT verification
+    loop, so the accepted path equals the sequential one."""
+    ds, _, _ = inst
+    grid = dict(n_lambdas=6, lam_min_ratio=0.05)
+    kw = dict(tol=1e-10, max_iters=20000, reduce="mask")
+    seq = PathDriver(rules="composite", **kw).run(ds.X, ds.y, **grid)
+    dyn = PathDriver(rules="composite", dynamic=True, screen_every=25,
+                     **kw).run(ds.X, ds.y, **grid)
+    np.testing.assert_allclose(dyn.objectives, seq.objectives,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(dyn.weights, seq.weights, atol=3e-3)
+    tele = dyn.extras["dynamic"]
+    assert any("kept_samples_per_segment" in d for d in tele.values()), tele
+
+
 # -- S1: dtype ---------------------------------------------------------------
 
 def test_sample_margin_surplus_respects_x64():

@@ -158,7 +158,11 @@ def test_sparse_theta_reduction_exact():
     lam = 0.05 * lmax  # small lambda: strong fit => few margin violations
     res = fista_solve(X, y, lam, max_iters=60000, tol=1e-14)
     theta, _ = safe_theta_and_delta(X, y, res.w, res.b, jnp.asarray(lam))
-    nnz = int(jnp.sum(theta > 0))
+    # the gap certificate's equality projection leaves O(|alpha^T y|/n)
+    # dust on theta's zeros (~1e-9 here), so count the support above the
+    # dust level, not strict positivity
+    t_np = np.asarray(theta)
+    nnz = int(np.sum(t_np > 1e-6 * t_np.max()))
     dense = feature_reductions(X, y, theta).d_theta
     sparse = d_theta_sparse(X, y, theta, support=max(nnz, 1))
     np.testing.assert_allclose(np.asarray(sparse), np.asarray(dense),
