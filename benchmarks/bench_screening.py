@@ -12,7 +12,11 @@ screening power and overhead; the engine sweep does the same for the
 on-device ``lax.scan`` path engine (``core/path_scan.py``) under the
 ``engines`` key — including the compact (on-device active-set gather)
 reduction on a screen-effective grid (``engines["compact"]``), the
-(1,1)-mesh sharded-scan bitwise check, and batched throughput. The file is
+shared-cap batched compact vs batched mask comparison
+(``engines["batched_compact"]``), the (1,1)-mesh sharded-scan bitwise
+check, and batched throughput. The continuous-batching path server gets its
+own ``serve`` section (jobs/sec vs sequential ``svm_path``, slot occupancy,
+warm-cache hit/miss/retrace counters, p50/p95 job latency). The file is
 stamped with backend/device/jax-version metadata (``meta``) so trajectories
 from different machines are not silently compared.
 
@@ -150,6 +154,7 @@ def _rule_sweep(rows, log, m=2000, n=400, n_lambdas=10, lam_min_ratio=0.05):
                   lam_min_ratio=lam_min_ratio)
     _storage_sweep(rows, log, traj, m=m, n=n, n_lambdas=n_lambdas,
                    lam_min_ratio=lam_min_ratio)
+    _serve_sweep(rows, log, traj)
     TRAJECTORY_PATH.write_text(json.dumps(traj, indent=2))
     log(f"wrote trajectory file: {TRAJECTORY_PATH}")
 
@@ -345,8 +350,81 @@ def _engine_sweep(rows, log, traj, m=2000, n=400, n_lambdas=10,
                  "amortization, which shows on accelerators rather than "
                  "on an already-saturated CPU"),
     }
+    engines["batched_compact"] = _batched_compact_section(
+        rows, log, ds, m=m, n=n, n_lambdas=n_lambdas, tol=tol,
+        max_iters=max_iters, batch=2 if check else 4,
+        reps=1 if check else 3, check=check)
     traj["engines"] = engines
     return engines
+
+
+def _batched_compact_section(rows, log, ds, m, n, n_lambdas, tol, max_iters,
+                             lam_min_ratio=0.3, batch=4, reps=3, check=False):
+    """Batched compact (shared per-step capacity) vs batched mask.
+
+    The comparison compact-under-vmap must win: on the screen-effective grid
+    (early steps certify small active sets) a batch of grids solved with
+    ``reduce="compact"`` shares ONE capacity per lambda step — the scalar
+    batch-max keep count picks the bucket, so exactly one solver body runs
+    per step instead of the run-every-branch select a per-element
+    ``lax.switch`` would lower to. The shared-cap schedule is recorded
+    (identical across batch elements by construction) along with the
+    objective agreement against the batched mask engine.
+    """
+    X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+    lmax = float(lambda_max(X, y))
+    ratios = np.linspace(0.8 * lam_min_ratio, 1.2 * lam_min_ratio, batch)
+    grids = np.stack([np.geomspace(lmax, lmax * r, n_lambdas)
+                      for r in ratios])
+    kw = dict(lambdas=grids, tol=tol, max_iters=max_iters)
+
+    def med(fn, *a, **k):
+        out = fn(*a, **k)  # warm jit caches
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn(*a, **k)
+            ts.append(time.perf_counter() - t0)
+        return out, float(np.median(ts))
+
+    mask, t_mask = med(svm_path_batched, ds.X, ds.y, **kw)
+    comp, t_comp = med(svm_path_batched, ds.X, ds.y, reduce="compact", **kw)
+    obj_diff = max(
+        float(np.max(np.abs(comp[i].objectives - mask[i].objectives)
+                     / np.maximum(np.abs(mask[i].objectives), 1.0)))
+        for i in range(batch))
+    speedup = t_mask / t_comp
+    caps = comp[0].extras["caps"]
+    log(f"\n# batched compact vs batched mask (B={batch}, m={m}, n={n}, "
+        f"lam_min_ratio={lam_min_ratio} screen-effective grid)")
+    log(f"batched_mask_s={t_mask:.3f} batched_compact_s={t_comp:.3f} "
+        f"speedup={speedup:.2f}x obj_diff={obj_diff:.2e} "
+        f"shared_caps={caps.tolist()}")
+    if check:
+        # vmap lowering (GEMV -> GEMM) reassociates fp32 accumulation, so
+        # the two reductions agree to solver resolution, not bitwise
+        assert obj_diff < 1e-4, f"batched compact/mask mismatch: {obj_diff:.3e}"
+        for r in comp[1:]:
+            np.testing.assert_array_equal(caps, r.extras["caps"])
+        assert int(caps[0]) < m, "screen-effective grid never compacted"
+    rows.append(("path_batched_compact", t_comp * 1e6,
+                 f"B={batch} speedup_vs_mask={speedup:.2f}x "
+                 f"obj_diff={obj_diff:.1e}"))
+    return {
+        "instance": {"m": m, "n": n, "n_lambdas": n_lambdas,
+                     "lam_min_ratio": lam_min_ratio, "batch": batch,
+                     "tol": tol},
+        "batched_mask_seconds": t_mask,
+        "batched_compact_seconds": t_comp,
+        "speedup_compact_over_mask": speedup,
+        "max_rel_obj_diff_vs_mask": obj_diff,
+        "shared_caps": [int(v) for v in caps],
+        "kept": [[int(v) for v in r.kept] for r in comp],
+        "note": ("the shared per-step capacity is the batch-max keep count "
+                 "rounded up the bucket ladder; one overflowing element "
+                 "demotes that step to mask for the whole batch — "
+                 "correctness never depends on the schedule"),
+    }
 
 
 def _compact_section(rows, log, ds, m, n, n_lambdas, tol, max_iters,
@@ -525,6 +603,112 @@ def _storage_sweep(rows, log, traj, m=2000, n=400, n_lambdas=10,
     return traj["storage"]
 
 
+def _serve_sweep(rows, log, traj, n_jobs=8, m=300, n=120, slots=4,
+                 tol=1e-10, max_iters=8000, seed=17, check=False):
+    """Continuous-batching path server vs sequential ``svm_path``.
+
+    The serving acceptance sweep: a mixed-grid workload (ragged lambda-path
+    lengths) drains through the warm server and must (a) reproduce every
+    job's sequential ``svm_path`` objectives and (b) sustain more jobs/sec
+    than sequentially looping the default (host) engine over the same jobs.
+    The warm-up pass is separate and its compile cost is reported — the
+    steady-state number is the one a long-running server actually sustains.
+    Sequential scan-engine walls are recorded both cold (each distinct grid
+    length retraces the whole-path program — the ragged-workload reality the
+    server's bucket-keyed step cache avoids) and warm (tiny instances fit
+    the scan engine's sweet spot; the server's win there is multi-tenancy +
+    bounded compiles, not raw single-path speed). Writes
+    ``BENCH_screening.json["serve"]``.
+    """
+    from repro.core import svm_path
+    from repro.launch.path_server import PathServer, demo_jobs
+
+    log(f"\n# path server (jobs={n_jobs}, slots={slots}, m={m}, n={n}, "
+        f"ragged grids)")
+    server = PathServer(slots=slots, reduce="compact", tol=tol,
+                        max_iters=max_iters)
+    # warm-up workload in the same shape bucket: the measured pass below
+    # then reports steady-state throughput on a warm program cache
+    t0 = time.perf_counter()
+    server.serve(demo_jobs(max(2, slots), m=m, n=n, seed=seed + 100),
+                 log=lambda *a, **k: None)
+    t_warmup = time.perf_counter() - t0
+    jobs = demo_jobs(n_jobs, m=m, n=n, seed=seed)
+    results = server.serve(jobs, log=lambda *a, **k: None)
+    serve_info = dict(server.last_serve)
+
+    seq_kw = dict(tol=tol, max_iters=max_iters)
+    svm_path(jobs[0].X, jobs[0].y, lambdas=jobs[0].lambdas, **seq_kw)  # warm
+    t0 = time.perf_counter()
+    seq = [svm_path(j.X, j.y, lambdas=j.lambdas, **seq_kw) for j in jobs]
+    t_host = time.perf_counter() - t0
+
+    scan_kw = dict(engine="scan", reduce="compact", **seq_kw)
+    t0 = time.perf_counter()
+    for j in jobs:  # cold: one whole-path compile per distinct grid length
+        svm_path(j.X, j.y, lambdas=j.lambdas, **scan_kw)
+    t_scan_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for j in jobs:
+        svm_path(j.X, j.y, lambdas=j.lambdas, **scan_kw)
+    t_scan_warm = time.perf_counter() - t0
+
+    obj_diff = max(
+        float(np.max(np.abs(r.objectives - s.objectives)
+                     / np.maximum(np.abs(s.objectives), 1.0)))
+        for r, s in zip(results, seq))
+    st = server.cache_stats()
+    jps = serve_info["jobs_per_s"]
+    log(f"server_warm_jobs_per_s={jps:.2f} "
+        f"sequential_host={n_jobs / t_host:.2f} "
+        f"scan_cold={n_jobs / t_scan_cold:.2f} "
+        f"scan_warm={n_jobs / t_scan_warm:.2f}")
+    log(f"occupancy={serve_info['slot_occupancy']:.2f} "
+        f"latency_p50_s={serve_info['latency_p50_s']:.3f} "
+        f"p95_s={serve_info['latency_p95_s']:.3f} "
+        f"cache: programs={st['programs']} hits={st['hits']} "
+        f"misses={st['misses']} retraces={st['retraces']}")
+    log(f"max_rel_obj_diff_vs_sequential={obj_diff:.2e} "
+        f"(warmup_pass_s={t_warmup:.1f} incl. compiles)")
+    if check:
+        # correctness + cache discipline gate; throughput is recorded but
+        # not asserted (single CI runs on shared CPUs are scheduler noise)
+        assert obj_diff < 5e-6, f"server/sequential mismatch: {obj_diff:.3e}"
+        assert st["retraces"] == 0, st
+        assert st["hits"] > 0, st
+        assert st["programs"] == st["misses"], st
+        grid_lens = {len(j.lambdas) for j in jobs}
+        assert len(grid_lens) > 1, "workload not ragged — sweep proves nothing"
+    rows.append(("path_serve", n_jobs / jps * 1e6 if jps else 0.0,
+                 f"jobs={n_jobs} jobs_per_s={jps:.2f} "
+                 f"vs_host={n_jobs / t_host:.2f} obj_diff={obj_diff:.1e}"))
+    traj["serve"] = {
+        "instance": {"n_jobs": n_jobs, "slots": slots, "m": m, "n": n,
+                     "seed": seed, "tol": tol, "max_iters": max_iters,
+                     "grid_lengths": [len(j.lambdas) for j in jobs]},
+        "jobs_per_s": jps,
+        "slot_occupancy": serve_info["slot_occupancy"],
+        "latency_p50_s": serve_info["latency_p50_s"],
+        "latency_p95_s": serve_info["latency_p95_s"],
+        "steps": serve_info["steps"],
+        "warmup_pass_seconds": t_warmup,
+        "cache": {k: st[k] for k in
+                  ("programs", "hits", "misses", "retraces")},
+        "sequential_host_jobs_per_s": n_jobs / t_host,
+        "sequential_scan_cold_jobs_per_s": n_jobs / t_scan_cold,
+        "sequential_scan_warm_jobs_per_s": n_jobs / t_scan_warm,
+        "speedup_vs_sequential_host": jps * t_host / n_jobs,
+        "max_rel_obj_diff_vs_sequential": obj_diff,
+        "note": ("the server's win is bounded compiles on ragged grid "
+                 "lengths (a handful of bucket-keyed step programs vs one "
+                 "whole-path retrace per distinct length) plus "
+                 "multi-tenant slot refill; a warm single-path scan on a "
+                 "tiny CPU instance is faster per path — that baseline is "
+                 "recorded above, not hidden"),
+    }
+    return traj["serve"]
+
+
 def run(log=print, smoke=False):
     rows = []
     if smoke:
@@ -536,6 +720,8 @@ def run(log=print, smoke=False):
         _storage_sweep(rows, log, {}, m=320, n=120, n_lambdas=5,
                        lam_min_ratio=0.2, density=0.05, chunk_m=64,
                        tol=1e-10, max_iters=8000, check=True)
+        _serve_sweep(rows, log, {}, n_jobs=4, m=120, n=60, slots=2,
+                     tol=1e-10, max_iters=8000, check=True)
         return rows
     _rate_tables(rows, log)
     _rule_sweep(rows, log)

@@ -18,12 +18,18 @@
 #                                #          (REPRO_STREAM_CHUNK_M=48): bitwise
 #                                #          chunked bound sweep, solver seam,
 #                                #          BCOO, memory-shape property
+#   ./scripts/ci.sh serve        # serve:   path-server suite (continuous
+#                                #          batching, bucket padding, warm
+#                                #          program cache) + the --serve
+#                                #          launcher smoke
 #   ./scripts/ci.sh bench        # bench:   engine + storage equivalence smoke
 #                                #          (bench_screening --smoke): catches
-#                                #          host/scan/compact/pallas/chunked
-#                                #          and sharded-scan-bitwise
+#                                #          host/scan/compact/pallas/chunked,
+#                                #          batched-compact, server-vs-
+#                                #          sequential and sharded-scan-bitwise
 #                                #          regressions in seconds
-#   ./scripts/ci.sh all          # kernels + x64 + stream + bench, then full
+#   ./scripts/ci.sh all          # kernels + x64 + stream + serve + bench,
+#                                # then full
 #
 # Extra pytest args pass through after the lane name (a leading '-' arg is
 # treated as pytest args for the full lane, back-compat):
@@ -36,9 +42,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 lane="${1:-full}"
 case "$lane" in
-  full|fast|kernels|x64|stream|bench|all) shift || true ;;
+  full|fast|kernels|x64|stream|serve|bench|all) shift || true ;;
   -*) lane="full" ;;  # bare pytest args => full lane (legacy invocation)
-  *) echo "unknown lane '$lane' (full|fast|kernels|x64|stream|bench|all)" >&2; exit 2 ;;
+  *) echo "unknown lane '$lane' (full|fast|kernels|x64|stream|serve|bench|all)" >&2; exit 2 ;;
 esac
 
 # suites whose numerics are dtype-parametric: the safe-screening bound
@@ -69,6 +75,11 @@ run_lane() {
       REPRO_STREAM_CHUNK_M=48 python -m pytest -x -q \
         tests/test_sparse_stream.py "$@"
       ;;
+    serve)
+      python -m pytest -x -q tests/test_path_server.py "$@"
+      python -m repro.launch.train_svm --serve --serve-jobs 4 \
+        --serve-slots 2 --m 120 --n 60 --reduce compact
+      ;;
     bench)
       python -m benchmarks.bench_screening --smoke
       ;;
@@ -81,6 +92,7 @@ if [ "$lane" = "all" ]; then
   run_lane kernels "$@"
   run_lane x64 "$@"
   run_lane stream "$@"
+  run_lane serve "$@"
   run_lane bench
   run_lane full "$@"
 else

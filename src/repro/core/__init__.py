@@ -35,6 +35,8 @@ from .path import PathDriver, PathResult, default_lambda_grid, svm_path  # noqa:
 from .path_scan import (  # noqa: F401
     ScanPathOutputs,
     compact_caps,
+    compact_caps_batched,
+    engine_cache_info,
     svm_path_batched,
     svm_path_scan,
     svm_path_scan_sharded,

@@ -708,13 +708,21 @@ def svm_path(
     * ``"scan"`` — ``core/path_scan.py``: the whole path as one jitted
       ``lax.scan`` program (feature rule only, mask or compact reduction,
       zero host round trips). See that module for the trade-off discussion.
+    * ``"batched"`` — ``path_scan.svm_path_batched``: B paths as one
+      program (``X (B, m, n)`` independent problems, or ``X (m, n)`` with
+      ``lambdas (B, T)`` grids). Feature rule only; returns a *list* of
+      ``PathResult``. Compact reduction composes with batching through the
+      shared-cap schedule. For ragged many-job workloads prefer
+      ``launch/path_server.py`` (continuous batching over these programs).
 
-    ``reduce`` defaults per engine (host: ``"gather"``, scan: ``"mask"``).
-    Rule of thumb — **gather** (host) for multiplicative feature x sample
-    reduction and verified sample rules; **mask** (either engine) when
-    screening is weak or paths are vmapped; **compact** (scan) when
-    screening certifies a small active set and the solve should cost FLOPs
-    proportional to it (see ``path_scan.py``'s module docstring).
+    ``reduce`` defaults per engine (host: ``"gather"``, scan/batched:
+    ``"mask"``). Rule of thumb — **gather** (host) for multiplicative
+    feature x sample reduction and verified sample rules; **mask**
+    (any engine) when screening is weak, so compaction would only add
+    gather traffic; **compact** (scan/batched) when screening certifies a
+    small active set and the solve should cost FLOPs proportional to it
+    (see ``path_scan.py``'s module docstring for the batched shared-cap
+    composition).
     """
     if engine == "scan":
         from .path_scan import svm_path_scan  # deferred: path_scan imports us
@@ -739,8 +747,31 @@ def svm_path(
             exact_lipschitz=exact_lipschitz,
             reduce="mask" if reduce is None else reduce,
         )
+    if engine == "batched":
+        from .path_scan import svm_path_batched  # deferred: imports us
+
+        if _is_chunked(X):
+            raise ValueError(
+                "engine='batched' jit-compiles over in-core arrays; chunked "
+                "storage runs on the host engine"
+            )
+        if rules is not None:
+            raise ValueError(
+                "engine='batched' supports the built-in feature rule only "
+                "(screening=True/False, tau=...); use engine='host' for "
+                f"custom rule mixes, got rules={rules!r}"
+            )
+        return svm_path_batched(
+            X, y, lambdas=lambdas, n_lambdas=n_lambdas,
+            lam_min_ratio=lam_min_ratio, screening=screening, tau=tau,
+            tol=tol, max_iters=max_iters, dynamic=dynamic,
+            screen_every=screen_every, use_pallas=use_pallas,
+            exact_lipschitz=exact_lipschitz,
+            reduce="mask" if reduce is None else reduce,
+        )
     if engine != "host":
-        raise ValueError(f"engine must be 'host' or 'scan', got {engine!r}")
+        raise ValueError(
+            f"engine must be 'host', 'scan', or 'batched', got {engine!r}")
     if rules is None:
         rules = [FeatureVIRule(tau=tau)] if screening else []
     driver = PathDriver(rules=rules,

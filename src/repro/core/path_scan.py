@@ -68,11 +68,15 @@ Rule of thumb across the three reductions (host ``gather`` + scan
 ``mask``/``compact``): **gather** wins when sample rules shrink the n-axis
 too or a verified-exact reduced problem is wanted (host round trips buy
 multiplicative kept_m x kept_n FLOPs); **mask** wins when screening is weak
-(kept ~ m, compaction would only add gather traffic) or under ``vmap``
-(batched paths — a switch lowers to a select and every branch runs);
-**compact** wins whenever screening certifies a small active set — the
-paper's whole value proposition — keeping the path single-program *and*
-FLOP-proportional to what screening certifies. Measure with
+(kept ~ m, compaction would only add gather traffic) or when sharded
+(compaction needs local row indices); **compact** wins whenever screening
+certifies a small active set — the paper's whole value proposition —
+keeping the path single-program *and* FLOP-proportional to what screening
+certifies. Compaction composes with batching too: batched paths share ONE
+capacity per step, picked by the scalar batch-max kept count, so the bucket
+switch stays a real switch under ``vmap`` instead of lowering to a
+run-every-branch select (``_batched_path_scan_program``; one overflowing
+element demotes that step to mask for the whole sub-batch). Measure with
 ``benchmarks/bench_screening.py`` (``BENCH_screening.json["engines"]``).
 
 The scan engine deliberately supports the *feature*-axis reduction only
@@ -118,6 +122,8 @@ __all__ = [
     "svm_path_scan_sharded",
     "ScanPathOutputs",
     "compact_caps",
+    "compact_caps_batched",
+    "engine_cache_info",
 ]
 
 
@@ -153,6 +159,273 @@ def compact_caps(m: int, max_buckets: int = 4, min_cap: int = 32) -> tuple:
         caps.append(c)
         c *= 2
     return tuple(caps[-max_buckets:])
+
+
+def compact_caps_batched(m: int, kept_counts=None, max_buckets: int = 4,
+                         min_cap: int = 32):
+    """Shared-cap schedule for a *batch* of compacting path elements.
+
+    Under ``vmap`` the per-element bucket ``lax.switch`` degenerates to a
+    select (a batched predicate runs every branch), so batched compaction
+    shares ONE capacity per step across the whole sub-batch: the ladder is
+    the same as :func:`compact_caps`, but the branch index is a *scalar* —
+    the batch-max kept count over live elements — so exactly one branch
+    executes. With ``kept_counts`` given (observed or predicted per-element
+    keeps), returns the shared cap that sub-batch would select (``m`` means
+    the mask-mode overflow branch); with ``kept_counts=None``, returns the
+    ladder itself. The path server uses the ``kept_counts`` form to pick the
+    ``cap_bucket`` component of its program-cache key.
+    """
+    caps = compact_caps(m, max_buckets=max_buckets, min_cap=min_cap)
+    if kept_counts is None:
+        return caps
+    ks = np.asarray(kept_counts)
+    k = int(ks.max()) if ks.size else 0
+    for c in caps:
+        if k <= c:
+            return int(c)
+    return int(m)
+
+
+def _batched_statics(X, y, sm, shared_x: bool):
+    """Theta-independent screen reductions, per batch element.
+
+    The sample-masked generalization of the hoisted reductions in
+    ``_path_scan_program``: with a 0/1 ``sm`` the reductions are those of
+    the problem with masked-out columns removed (padded columns of a
+    zero-padded ``X`` contribute nothing), and ``n_tot`` is the live-sample
+    count — never the padded width.
+    """
+    def one(Xe, ye, sme):
+        d_one = Xe @ ye
+        d_y = Xe @ sme
+        d_sq = (Xe * Xe) @ sme
+        return (d_one, d_y, d_sq, jnp.sum(ye * sme), jnp.sum(sme))
+
+    return one(X, y, sm) if shared_x else jax.vmap(one)(X, y, sm)
+
+
+def _batched_path_step(
+    X, y, sm, statics, inv_L, tau, tol, carry, lam, act,
+    *,
+    caps: tuple,
+    shared_x: bool,
+    max_iters: int,
+    screening: bool,
+    dynamic: bool,
+    screen_every: int,
+    use_pallas: bool,
+    exact_lipschitz: bool,
+    n_feas_iters: int = 8,
+):
+    """One batched lambda step: screen -> shared-cap solve -> certify.
+
+    The batched counterpart of ``_path_scan_program.step`` — same screen /
+    solve / certify math per element (vmapped), but the compact bucket
+    schedule is lifted to the batch level: the ``lax.switch`` index is the
+    scalar batch-max kept count over live elements (``act``), so every
+    element of the sub-batch compacts into the same static ``(cap, n)``
+    buffer and exactly one branch runs. One element overflowing the largest
+    bucket demotes the whole step to the mask branch — the price of
+    shared-cap composition; never wrong, only less reduced.
+
+    Shapes: ``lam``/``act``/``inv_L`` are ``(B,)``; carry leaves lead with
+    B; ``X``/``y``/``sm``/``statics`` are shared (``shared_x=True``) or lead
+    with B. ``sm`` is a 0/1 sample mask (live columns) so padded elements
+    solve their true, unpadded problem. Returns ``(carry', out)`` with every
+    ``ScanPathOutputs`` leaf leading with B — usable directly as a scan body
+    (the full-path program below) or as a standalone jitted step (the path
+    server).
+    """
+    m, n = X.shape[-2], X.shape[-1]
+    dt = X.dtype
+    B = lam.shape[0]
+    ax = None if shared_x else 0
+    w, b, theta, delta, lam_prev, fmask_prev = carry
+
+    def screen_one(Xe, ye, st, th, de, lp, la):
+        d_one, d_y, d_sq, one_y, n_tot = st
+        sh = shared_scalars_from_stats(
+            lp, la, one_y=one_y, theta_dot_one=jnp.sum(th),
+            theta_dot_y=th @ ye, theta_sq=th @ th, n_tot=n_tot, delta=de,
+        )
+        red = FeatureReductions(
+            d_theta=Xe @ (ye * th), d_one=d_one, d_y=d_y, d_sq=d_sq)
+        return screen_bounds_from_reductions(red, sh) >= tau
+
+    with jax.named_scope("svm_path_batched/screen"):
+        if screening:
+            keep = jax.vmap(screen_one, in_axes=(ax, ax, ax, 0, 0, 0, 0))(
+                X, y, statics, theta, delta, lam_prev, lam)
+        else:
+            keep = jnp.ones((B, m), bool)
+        fmask = keep.astype(dt)
+    resurrected = jnp.sum(keep & (fmask_prev < 0.5), axis=1).astype(jnp.int32)
+    kept_ct = jnp.sum(fmask, axis=1).astype(jnp.int32)
+
+    def solve(Xs, ye, sme, la, ws, bs, fms, inv_Ls, vm):
+        if dynamic:
+            return _dynamic_run(
+                Xs, ye, la, ws, bs, inv_Ls, sme, fms,
+                max_iters, tol, screen_every, tau, 4, use_pallas,
+                valid_m=vm,
+            )
+        return fista_run(
+            Xs, ye, la, ws, bs, inv_Ls, sme, fms,
+            max_iters, tol, use_pallas, valid_m=vm,
+        )
+
+    def inv_L_for(Xs, inv_Ls):
+        if exact_lipschitz:
+            return 1.0 / jnp.maximum(lipschitz_estimate(Xs) * 1.01, 1e-12)
+        return inv_Ls
+
+    def mask_one(Xe, ye, sme, la, inv_Ls, w_, b_, fmask_):
+        res = solve(Xe, ye, sme, la, w_ * fmask_, b_, fmask_,
+                    inv_L_for(Xe * fmask_[:, None], inv_Ls), None)
+        return (res.w, res.b, res.obj, jnp.asarray(res.n_iters, jnp.int32),
+                res.converged, res.u)
+
+    def make_compact_one(cap):
+        def one(Xe, ye, sme, la, inv_Ls, w_, b_, fmask_):
+            # same cumsum compaction as the single-path compact branch
+            pos = jnp.cumsum(fmask_.astype(jnp.int32)) - 1
+            slot = jnp.where(fmask_ > 0.5, pos, cap)
+            sel = jnp.full((cap,), m, jnp.int32).at[slot].set(
+                jnp.arange(m, dtype=jnp.int32), mode="drop")
+            validf = (sel < m).astype(dt)
+            selc = jnp.minimum(sel, m - 1)
+            Xc = jnp.take(Xe, selc, axis=0) * validf[:, None]
+            w0_c = jnp.take(w_, selc) * validf
+            vcount = jnp.sum(fmask_).astype(jnp.int32)
+            res = solve(Xc, ye, sme, la, w0_c, b_, validf,
+                        inv_L_for(Xc, inv_Ls), vcount)
+            w_full = jnp.zeros((m,), dt).at[selc].add(res.w * validf)
+            return (w_full, res.b, res.obj,
+                    jnp.asarray(res.n_iters, jnp.int32), res.converged,
+                    res.u)
+        return one
+
+    def batch_branch(elem):
+        f = jax.vmap(elem, in_axes=(ax, ax, ax, 0, 0, 0, 0, 0))
+        return lambda args: f(X, y, sm, lam, inv_L, *args)
+
+    with jax.named_scope("svm_path_batched/solve"):
+        if caps:
+            caps_arr = jnp.asarray(caps, jnp.int32)
+            # the switch index is a SCALAR (batch-max keeps over live
+            # elements) — a batched predicate would lower the switch to a
+            # select and run every branch, forfeiting the compact win
+            max_kept = jnp.max(jnp.where(act, kept_ct, 0))
+            idx = jnp.sum(max_kept > caps_arr)
+            branches = [batch_branch(make_compact_one(c)) for c in caps]
+            branches.append(batch_branch(mask_one))  # shared overflow
+            w2, b2, obj, n_it, conv, u_fin = jax.lax.switch(
+                idx, branches, (w, b, fmask))
+            cap_used = jnp.full(
+                (B,), jnp.asarray((*caps, m), jnp.int32)[idx])
+        else:
+            w2, b2, obj, n_it, conv, u_fin = batch_branch(mask_one)(
+                (w, b, fmask))
+            cap_used = jnp.full((B,), m, jnp.int32)
+
+    def certify_one(Xe, ye, sme, w_, b_, la, u_):
+        return gap_theta_delta(Xe, ye, w_, b_, la, sme,
+                               n_feas_iters=n_feas_iters, u=u_)
+
+    with jax.named_scope("svm_path_batched/certify"):
+        theta2, delta2, gap = jax.vmap(
+            certify_one, in_axes=(ax, ax, ax, 0, 0, 0, 0))(
+            X, y, sm, w2, b2, lam, u_fin)
+
+    out = ScanPathOutputs(
+        w=w2, b=b2, obj=obj, kept=kept_ct,
+        active=jnp.sum(jnp.abs(w2) > 1e-10, axis=1).astype(jnp.int32),
+        n_iters=n_it, converged=conv, gap=gap, delta=delta2,
+        fmask=keep, cap=cap_used, resurrected=resurrected,
+    )
+    return (w2, b2, theta2, delta2, lam, fmask), out
+
+
+def _batched_path_scan_program(
+    X: jax.Array,
+    y: jax.Array,
+    sm: Optional[jax.Array],
+    lambdas: jax.Array,
+    w0: jax.Array,
+    b0: jax.Array,
+    theta0: jax.Array,
+    delta0: jax.Array,
+    lam0: jax.Array,
+    L: Optional[jax.Array],
+    tau,
+    tol,
+    *,
+    max_iters: int,
+    screening: bool,
+    dynamic: bool,
+    screen_every: int,
+    use_pallas: bool,
+    exact_lipschitz: bool,
+    reduce: str = "compact",
+    shared_x: bool = False,
+    n_feas_iters: int = 8,
+) -> ScanPathOutputs:
+    """B whole paths as one program, compaction composed with batching.
+
+    Structure matters here: ``vmap(_path_scan_program)`` batches the bucket
+    switch's predicate, which lowers the switch to a select — every branch
+    executes and compact mode pays mask-mode FLOPs plus gather traffic.
+    This program inverts the nesting: ``lax.scan`` over the T grid steps
+    stays OUTER, the per-element work is vmapped INNER, and each step picks
+    one shared compact capacity from the scalar batch-max kept count
+    (:func:`_batched_path_step`). Grids must share T (ragged grids are the
+    path server's job, which drives the same step one lambda at a time).
+
+    ``shared_x``: one dataset, B grids (``X (m, n)``) vs B problems
+    (``X (B, m, n)``). Anchors broadcast to B if given unbatched. ``sm`` is
+    an optional 0/1 live-column mask per element — zero-padded problems
+    solve their true geometry. Outputs lead with ``(B, T)``.
+    """
+    m, n = X.shape[-2], X.shape[-1]
+    dt = X.dtype
+    lambdas = jnp.asarray(lambdas, dt)
+    B, _ = lambdas.shape
+    tau = jnp.asarray(tau, dt)
+    caps = compact_caps(m) if reduce == "compact" else ()
+
+    if sm is None:
+        sm = jnp.ones((n,), dt) if shared_x else jnp.ones((B, n), dt)
+    if L is None:
+        L = lipschitz_estimate(X) if shared_x else jax.vmap(
+            lipschitz_estimate)(X)
+    inv_L = 1.0 / jnp.maximum(
+        jnp.broadcast_to(jnp.asarray(L, dt), (B,)) * 1.01, 1e-12)
+
+    statics = _batched_statics(X, y, sm, shared_x)
+    act = jnp.ones((B,), bool)
+    step_kw = dict(
+        caps=caps, shared_x=shared_x, max_iters=max_iters,
+        screening=screening, dynamic=dynamic, screen_every=screen_every,
+        use_pallas=use_pallas, exact_lipschitz=exact_lipschitz,
+        n_feas_iters=n_feas_iters,
+    )
+
+    def step(carry, lam):
+        return _batched_path_step(X, y, sm, statics, inv_L, tau, tol,
+                                  carry, lam, act, **step_kw)
+
+    carry0 = (
+        jnp.broadcast_to(jnp.asarray(w0, dt), (B, m)),
+        jnp.broadcast_to(jnp.asarray(b0, dt), (B,)),
+        jnp.broadcast_to(jnp.asarray(theta0, dt), (B, n)),
+        jnp.broadcast_to(jnp.asarray(delta0, dt), (B,)),
+        jnp.broadcast_to(jnp.asarray(lam0, dt), (B,)),
+        jnp.ones((B, m), dt),
+    )
+    _, outs = jax.lax.scan(step, carry0, jnp.swapaxes(lambdas, 0, 1))
+    # scan stacks along T; callers want per-element (B, T, ...) blocks
+    return jax.tree_util.tree_map(lambda a: jnp.swapaxes(a, 0, 1), outs)
 
 
 def _path_scan_program(
@@ -353,10 +626,27 @@ def _engine_jit(static_kw: tuple, batched: Optional[str] = None):
     carry (``w0/b0/theta0/delta0``) is donated in the single-path engine so
     XLA may alias it straight into the scan carry — skipped on backends
     without donation support (CPU) to avoid spurious warnings.
+    ``"grids_compact"``/``"problems_compact"`` route to the scan-outer /
+    vmap-inner :func:`_batched_path_scan_program` (shared-cap compaction —
+    the plain vmapped program would run every switch branch); note the extra
+    ``sm`` argument in that program's signature.
+
+    Cache hygiene contract (regression-tested): ``static_kw`` is a tuple of
+    ``(name, value)`` pairs of hashable primitives, so the engine dict hits
+    on repeated configs, and every jitted engine takes only arrays (or None)
+    as runtime arguments, so repeated same-shape calls hit jit's own cache
+    without retracing — :func:`engine_cache_info` exposes both layers.
     """
     key = (static_kw, batched)
     fn = _ENGINE_CACHE.get(key)
     if fn is not None:
+        return fn
+    if batched in ("grids_compact", "problems_compact"):
+        raw = partial(_batched_path_scan_program,
+                      shared_x=(batched == "grids_compact"),
+                      **dict(static_kw))
+        fn = jax.jit(raw)
+        _ENGINE_CACHE[key] = fn
         return fn
     raw = partial(_path_scan_program, **dict(static_kw))
     # arg order: (X, y, lambdas, w0, b0, theta0, delta0, lam0, L, tau, tol)
@@ -377,6 +667,20 @@ def _engine_jit(static_kw: tuple, batched: Optional[str] = None):
 _ENGINE_CACHE: dict = {}
 
 
+def engine_cache_info() -> dict:
+    """Both warm-cache layers of the scan engines, for retrace accounting.
+
+    Returns ``{(batched, static_opts): n_traces}`` — one entry per engine
+    variant built by :func:`_engine_jit`, with ``n_traces`` the number of
+    distinct traces jit holds for it (one per argument-shape signature; a
+    same-config same-shape call that bumps this number is a retrace
+    regression). ``-1`` when the running jax has no ``_cache_size`` probe.
+    """
+    info = {}
+    for (static_kw, batched), fn in _ENGINE_CACHE.items():
+        probe = getattr(fn, "_cache_size", None)
+        info[(batched, static_kw)] = int(probe()) if probe else -1
+    return info
 
 
 def _validate_reduce(reduce: str) -> str:
@@ -625,12 +929,21 @@ def svm_path_batched(
     launches. The usual vmap caveats apply — the while loops run until the
     slowest batch element converges and the restart ``lax.cond`` becomes a
     select — so wall clock per path is bounded by the hardest problem in
-    the batch. For the same reason ``reduce="compact"`` loses its FLOP
-    advantage under vmap (the bucket ``lax.switch`` lowers to a select and
-    *every* branch executes); prefer the default mask reduction for batched
-    paths. The program is shard-transparent: inputs placed on a mesh
-    (e.g. batch-sharded ``X``) keep their sharding through jit, which is
-    how the sharded-solver mesh serves batched paths.
+    the batch.
+
+    ``reduce="compact"`` composes with batching through the shared-cap
+    schedule (:func:`_batched_path_scan_program`): the scan over the grid
+    stays outer, the per-element work is vmapped inner, and each step's
+    compact capacity is picked by the *scalar* batch-max kept count — so
+    one switch branch runs, FLOPs track what screening certifies, and one
+    overflowing element demotes only that step to mask mode. Same rule of
+    thumb as the single-path engine: compact when screening certifies a
+    small active set, mask (default) when screening is weak and compaction
+    would only add gather traffic. The mask-mode program is
+    shard-transparent: inputs placed on a mesh (e.g. batch-sharded ``X``)
+    keep their sharding through jit, which is how the sharded-solver mesh
+    serves batched paths (compact mode needs local row indices — keep it
+    single-device).
 
     Returns one :class:`~repro.core.path.PathResult` per batch element
     (shared total wall clock in ``extras["total_seconds"]``, batch size in
@@ -640,6 +953,7 @@ def svm_path_batched(
     y = jnp.asarray(y)
     static_kw = _static_opts(max_iters, screening, dynamic, screen_every,
                              use_pallas, exact_lipschitz, reduce)
+    compact = dict(static_kw)["reduce"] == "compact"
     if X.ndim == 2:
         # one problem, B grids — X/y/anchors stay unbatched (vmap broadcasts)
         if lambdas is None:
@@ -655,7 +969,8 @@ def svm_path_batched(
         m = X.shape[0]
         lam_max_val = float(lambda_max(X, y))
         lam_maxs = np.full((B,), lam_max_val)
-        engine = _engine_jit(static_kw, batched="grids")
+        engine = _engine_jit(
+            static_kw, batched="grids_compact" if compact else "grids")
         args = (
             X, y, jnp.asarray(grids, X.dtype), jnp.zeros((m,), X.dtype),
             bias_at_lambda_max(y),
@@ -677,7 +992,8 @@ def svm_path_batched(
         for g in grids:
             _validate_grid(g)
         lam_maxs_j = jnp.asarray(lam_maxs, X.dtype)
-        engine = _engine_jit(static_kw, batched="problems")
+        engine = _engine_jit(
+            static_kw, batched="problems_compact" if compact else "problems")
         args = (
             X, y, jnp.asarray(grids, X.dtype), jnp.zeros((B, m), X.dtype),
             jax.vmap(bias_at_lambda_max)(y),
@@ -687,6 +1003,10 @@ def svm_path_batched(
     else:
         raise ValueError(f"X must be (m, n) or (B, m, n), got {X.shape}")
 
+    if compact:
+        # the batched-compact program takes an optional per-element sample
+        # mask right after (X, y) — unpadded callers pass None
+        args = args[:2] + (None,) + args[2:]
     t0 = time.perf_counter()
     outs = engine(*args, None, float(tau), float(tol))
     outs = jax.block_until_ready(outs)

@@ -1,0 +1,424 @@
+"""Multi-tenant sparse-SVM path server: continuous batching of screened paths.
+
+The paper's pitch is throughput — screening makes many solves (a lambda
+path per tenant, a hyperparameter sweep, one model per dataset) cost far
+less than their naive FLOPs. This module is the serving front end for that
+claim: a queue of :class:`PathJob` requests drains through a fixed number
+of batch *slots*, every lambda step of every resident job executes inside
+ONE jitted program (``core/path_scan._batched_path_step`` — the shared-cap
+batched screen/solve/certify step), and a slot refills the moment its job's
+grid is exhausted (continuous batching, the loop shape of
+``launch/serve.py::BatchedServer``). Results stream back per lambda step;
+a finished job's :class:`~repro.core.path.PathResult` is assembled from its
+streamed steps, so no job waits on the batch.
+
+Bucket / padding policy
+-----------------------
+Jobs are padded into power-of-two shape buckets (``core/path.py::_bucket``,
+min 8): a job with true shape ``(m, n)`` occupies a ``(m_b, n_b)`` slot
+with ``m_b = bucket(m)``, ``n_b = bucket(n)``. Padding is *safe by
+construction*, not cosmetic:
+
+* padded **feature rows** are zero, so their screen bound is 0 < tau and
+  sequential screening certifiably drops them at every step — under
+  ``reduce="compact"`` they cost nothing in the solve;
+* padded **sample columns** carry a 0/1 ``sample_mask`` threaded through
+  the solver, the certificate, and the hoisted screen reductions
+  (``n_tot`` is the live count), so each slot solves its *true, unpadded*
+  problem to solver resolution.
+
+Slots in one batch share a bucket, so a serve group is keyed by
+``(m_b, n_b, screening, dynamic)``; the queue drains group by group
+(a job from a different bucket waits for the current group's slots to
+empty rather than forcing a recompile mid-group).
+
+Program-cache key anatomy
+-------------------------
+Compiled step programs live in an explicit warm cache keyed by::
+
+    (m_bucket, n_bucket, cap_bucket, B, engine_config)
+
+``m_bucket``/``n_bucket``  padded slot shape (above);
+``cap_bucket``             the shared compact capacity for this step —
+                           predicted per sub-batch from the jobs' observed
+                           keep counts via ``compact_caps_batched`` (equal
+                           to ``m_bucket`` for mask-mode steps, so mask and
+                           compact steps are distinct programs);
+``B``                      the slot count (batch width of the program);
+``engine_config``          the hashable ``(name, value)`` static-option
+                           tuple (max_iters, screening, dynamic, ...).
+
+A cache hit dispatches with zero tracing; misses compile once per key
+(a handful per bucket ladder); ``cache_stats()`` exposes hits / misses /
+retraces (a retrace = jit holding more than one trace for a cached
+program — a same-key same-shape dispatch that retraced is a regression).
+Under-predicting the capacity never breaks correctness: the step program's
+scalar overflow check demotes that step to its mask branch on device.
+
+CPU smoke: PYTHONPATH=src python -m repro.launch.path_server --jobs 6
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dual import bias_at_lambda_max, lambda_max, theta_at_lambda_max
+from repro.core.path import PathResult, _bucket, _validate_grid, default_lambda_grid
+from repro.core.path_scan import (
+    ScanPathOutputs,
+    _batched_path_step,
+    _static_opts,
+    _to_path_result,
+    compact_caps_batched,
+)
+from repro.core.screening import SAFE_TAU
+from repro.core.solver import lipschitz_estimate
+
+
+@dataclass
+class PathJob:
+    """One tenant's path request: a dataset handle, a grid, and rules."""
+
+    jid: int
+    X: np.ndarray                       # (m, n) feature-major design
+    y: np.ndarray                       # (n,) ±1 labels
+    lambdas: Optional[np.ndarray] = None  # explicit decreasing grid, else:
+    n_lambdas: int = 10
+    lam_min_ratio: float = 0.1
+    rules: str = "feature_vi"           # "feature_vi" | "none"
+    dynamic: bool = False               # in-solver re-screen segments
+
+    # -- server-owned runtime state (streamed results) ---------------------
+    t: int = field(default=0, repr=False)
+    steps: list = field(default_factory=list, repr=False)
+    result: Optional[PathResult] = field(default=None, repr=False)
+    lam_max: float = field(default=0.0, repr=False)
+    t_submit: float = field(default=0.0, repr=False)
+    t_done: float = field(default=0.0, repr=False)
+
+    @property
+    def screening(self) -> bool:
+        if self.rules not in ("feature_vi", "none", None):
+            raise ValueError(
+                "the path server runs the scan engine: built-in feature "
+                f"rule only ('feature_vi' | 'none'), got {self.rules!r}"
+            )
+        return self.rules == "feature_vi"
+
+    def group_key(self) -> tuple:
+        """Jobs sharing this key can occupy slots of the same batch."""
+        m, n = self.X.shape
+        return (_bucket(m), _bucket(n), self.screening, bool(self.dynamic))
+
+
+class PathServer:
+    """Continuous-batching front end over the batched scan-engine step.
+
+    ``slots`` is the batch width B of every compiled step program; see the
+    module docstring for the bucket policy and cache-key anatomy.
+    ``reduce="compact"`` (default) predicts a shared compact capacity per
+    step from observed keep counts; ``reduce="mask"`` always solves
+    full-bucket-width.
+    """
+
+    def __init__(self, slots: int = 4, *, reduce: str = "compact",
+                 tau: float = SAFE_TAU, tol: float = 1e-9,
+                 max_iters: int = 4000, screen_every: int = 50,
+                 use_pallas: Optional[bool] = None,
+                 cap_growth: float = 1.5, dtype=np.float32):
+        if reduce not in ("mask", "compact"):
+            raise ValueError(f"reduce must be 'mask' or 'compact', got {reduce!r}")
+        self.slots = int(slots)
+        self.reduce = reduce
+        self.tau = float(tau)
+        self.tol = float(tol)
+        self.max_iters = int(max_iters)
+        self.screen_every = int(screen_every)
+        self.use_pallas = use_pallas
+        self.cap_growth = float(cap_growth)
+        self.dtype = np.dtype(dtype)
+
+        self._programs: dict = {}
+        self.stats = dict(hits=0, misses=0, steps=0, occupied_slots=0,
+                          jobs_done=0, mask_fallback_steps=0)
+        self._group: Optional[tuple] = None
+        self._act = np.zeros((self.slots,), bool)
+        self._slot_jobs: list[Optional[PathJob]] = [None] * self.slots
+
+    # -- program cache -----------------------------------------------------
+
+    def _program(self, m_b: int, n_b: int, cap_b: int, cfg: tuple):
+        key = (m_b, n_b, cap_b, self.slots, cfg)
+        fn = self._programs.get(key)
+        if fn is not None:
+            self.stats["hits"] += 1
+            return fn
+        self.stats["misses"] += 1
+        caps = () if cap_b >= m_b else (cap_b,)
+        fn = jax.jit(partial(_batched_path_step, caps=caps, shared_x=False,
+                             **dict(cfg)))
+        self._programs[key] = fn
+        return fn
+
+    def cache_stats(self) -> dict:
+        """Warm-cache health: compiled programs, hits/misses, retraces."""
+        retraces = 0
+        for fn in self._programs.values():
+            probe = getattr(fn, "_cache_size", None)
+            if probe:
+                retraces += max(0, int(probe()) - 1)
+        return dict(programs=len(self._programs), hits=self.stats["hits"],
+                    misses=self.stats["misses"], retraces=retraces)
+
+    # -- group (bucket) state ----------------------------------------------
+
+    def _alloc_group(self, group: tuple):
+        """(Re)allocate device slot state for a new bucket group."""
+        m_b, n_b, screening, dynamic = group
+        B, dt = self.slots, self.dtype
+        self._group = group
+        self._cfg = _static_opts(self.max_iters, screening, dynamic,
+                                 self.screen_every, self.use_pallas,
+                                 False, self.reduce)
+        # _batched_path_step takes the option subset without `reduce` —
+        # the reduction is carried by the caps tuple in the program key
+        self._step_cfg = tuple(kv for kv in self._cfg if kv[0] != "reduce")
+        z = lambda *s: jnp.zeros(s, dt)
+        self._X = z(B, m_b, n_b)
+        self._y = z(B, n_b)
+        self._sm = z(B, n_b)
+        self._statics = (z(B, m_b), z(B, m_b), z(B, m_b), z(B), z(B))
+        self._inv_L = jnp.ones((B,), dt)
+        self._carry = (z(B, m_b), z(B), z(B, n_b), z(B),
+                       jnp.ones((B,), dt), jnp.ones((B, m_b), dt))
+        self._lam_host = np.ones((B,), np.float64)
+        self._last_kept = np.zeros((B,), np.int64)
+        self._act[:] = False
+        self._slot_jobs = [None] * B
+
+    def _insert(self, slot: int, job: PathJob):
+        """Pad the job into its bucket and splice it into device state."""
+        m_b, n_b, _, _ = self._group
+        m, n = job.X.shape
+        dt = self.dtype
+        Xp = np.zeros((m_b, n_b), dt)
+        Xp[:m, :n] = job.X
+        yp = np.zeros((n_b,), dt)
+        yp[:n] = job.y
+        smp = np.zeros((n_b,), dt)
+        smp[:n] = 1.0
+
+        # anchors on the TRUE arrays with the repo's closed forms (eager,
+        # device dtype — matching what the scan engines compute)
+        Xj = jnp.asarray(job.X.astype(dt))
+        yj = jnp.asarray(job.y.astype(dt))
+        job.lam_max = float(lambda_max(Xj, yj))
+        if job.lambdas is None:
+            job.lambdas = default_lambda_grid(job.lam_max, job.n_lambdas,
+                                              job.lam_min_ratio)
+        job.lambdas = _validate_grid(job.lambdas)
+        b0 = bias_at_lambda_max(yj)
+        th0 = np.zeros((n_b,), dt)
+        th0[:n] = np.asarray(
+            theta_at_lambda_max(yj, jnp.asarray(job.lam_max, dt)))
+
+        Xpj = jnp.asarray(Xp)
+        ypj = jnp.asarray(yp)
+        smj = jnp.asarray(smp)
+        # padded rows/cols are zero, so sigma_max is the true problem's
+        L = jnp.maximum(lipschitz_estimate(Xpj) * 1.01, 1e-12)
+        # hoisted screen reductions (path_scan._batched_statics, per slot)
+        d_one = Xpj @ ypj
+        d_y = Xpj @ smj
+        d_sq = (Xpj * Xpj) @ smj
+        one_y = jnp.sum(ypj * smj)
+        n_tot = jnp.sum(smj)
+
+        at = lambda a, v: a.at[slot].set(v)
+        self._X = at(self._X, Xpj)
+        self._y = at(self._y, ypj)
+        self._sm = at(self._sm, smj)
+        s = self._statics
+        self._statics = (at(s[0], d_one), at(s[1], d_y), at(s[2], d_sq),
+                         at(s[3], one_y), at(s[4], n_tot))
+        self._inv_L = at(self._inv_L, 1.0 / L)
+        c = self._carry
+        self._carry = (
+            at(c[0], jnp.zeros((m_b,), dt)),
+            at(c[1], jnp.asarray(b0, dt)),
+            at(c[2], jnp.asarray(th0)),
+            at(c[3], jnp.asarray(0.0, dt)),
+            at(c[4], jnp.asarray(job.lam_max, dt)),
+            at(c[5], jnp.ones((m_b,), dt)),
+        )
+        self._lam_host[slot] = job.lam_max
+        self._last_kept[slot] = 0
+        self._act[slot] = True
+        self._slot_jobs[slot] = job
+
+    # -- one batched lambda step -------------------------------------------
+
+    def _predict_cap(self, m_b: int) -> int:
+        """Shared capacity for the next step from observed keep counts.
+
+        Keep counts grow as lambda decreases, so the last observed count
+        times ``cap_growth`` headroom feeds the shared-cap schedule. A
+        fresh job (no observation yet) predicts the smallest bucket — its
+        first step past lambda_max keeps almost nothing. Wrong predictions
+        cost speed, never correctness (on-device overflow fallback).
+        """
+        if self.reduce != "compact":
+            return m_b
+        pred = [max(1, int(np.ceil(self._last_kept[s] * self.cap_growth)))
+                for s in range(self.slots) if self._act[s]]
+        return int(compact_caps_batched(m_b, pred or [1]))
+
+    def step(self):
+        m_b, n_b, _, _ = self._group
+        for s in range(self.slots):
+            job = self._slot_jobs[s]
+            if self._act[s]:
+                self._lam_host[s] = float(job.lambdas[job.t])
+        cap_b = self._predict_cap(m_b)
+        fn = self._program(m_b, n_b, cap_b, self._step_cfg)
+        lam = jnp.asarray(self._lam_host, self.dtype)
+        act = jnp.asarray(self._act)
+        tau = jnp.asarray(self.tau, self.dtype)
+        self._carry, out = fn(self._X, self._y, self._sm, self._statics,
+                              self._inv_L, tau, self.tol, self._carry,
+                              lam, act)
+        host = {k: np.asarray(v) for k, v in out._asdict().items()}
+        self.stats["steps"] += 1
+        self.stats["occupied_slots"] += int(self._act.sum())
+        if self.reduce == "compact" and int(host["cap"][0]) >= m_b:
+            self.stats["mask_fallback_steps"] += 1
+        for s in range(self.slots):
+            if not self._act[s]:
+                continue
+            job = self._slot_jobs[s]
+            job.steps.append({k: v[s] for k, v in host.items()})
+            self._last_kept[s] = int(host["kept"][s])
+            job.t += 1
+            if job.t >= len(job.lambdas):
+                self._finish(s)
+
+    def _finish(self, slot: int):
+        job = self._slot_jobs[slot]
+        job.t_done = time.perf_counter()
+        m = job.X.shape[0]
+        stacked = {k: np.stack([st[k] for st in job.steps])
+                   for k in ScanPathOutputs._fields}
+        stacked["w"] = stacked["w"][:, :m]
+        stacked["fmask"] = stacked["fmask"][:, :m]
+        # mask-fallback steps report the bucket width; clamp to the true m
+        stacked["cap"] = np.minimum(stacked["cap"], m)
+        outs = ScanPathOutputs(**stacked)
+        r = _to_path_result(job.lambdas, outs, job.lam_max,
+                            job.t_done - job.t_submit, job.screening,
+                            self._cfg)
+        r.extras["engine"] = "serve"
+        r.extras["jid"] = job.jid
+        r.extras["latency_s"] = job.t_done - job.t_submit
+        job.result = r
+        job.steps = []
+        self.stats["jobs_done"] += 1
+        self._act[slot] = False
+        self._slot_jobs[slot] = None
+
+    # -- the serve loop ----------------------------------------------------
+
+    def serve(self, jobs: list[PathJob], log=print) -> list[PathResult]:
+        """Drain a job queue; returns results in submission order.
+
+        Continuous batching: empty slots refill from the queue (same bucket
+        group) before every step, so ragged grid lengths keep the device
+        program saturated instead of waiting on the longest path.
+        """
+        pending = list(jobs)
+        t0 = time.perf_counter()
+        for j in pending:
+            j.t_submit = t0
+        while pending or self._act.any():
+            if not self._act.any():
+                nxt_group = pending[0].group_key()
+                if self._group != nxt_group:
+                    self._alloc_group(nxt_group)
+            for s in range(self.slots):
+                if not self._act[s]:
+                    nxt = next((j for j in pending
+                                if j.group_key() == self._group), None)
+                    if nxt is None:
+                        break
+                    pending.remove(nxt)
+                    self._insert(s, nxt)
+            self.step()
+        wall = time.perf_counter() - t0
+        lat = np.array([j.t_done - j.t_submit for j in jobs])
+        occ = (self.stats["occupied_slots"]
+               / max(1, self.stats["steps"] * self.slots))
+        self.last_serve = dict(
+            jobs=len(jobs), wall_s=float(wall),
+            jobs_per_s=len(jobs) / wall, steps=self.stats["steps"],
+            slot_occupancy=float(occ),
+            latency_p50_s=float(np.percentile(lat, 50)),
+            latency_p95_s=float(np.percentile(lat, 95)),
+            **self.cache_stats(),
+        )
+        log(f"[serve] {len(jobs)} jobs in {wall:.2f}s "
+            f"({self.last_serve['jobs_per_s']:.2f} jobs/s), "
+            f"occupancy={occ:.2f}, cache={self.cache_stats()}")
+        return [j.result for j in jobs]
+
+
+def demo_jobs(n_jobs: int = 8, m: int = 300, n: int = 120,
+              seed: int = 0, ragged: bool = True) -> list[PathJob]:
+    """A mixed-grid job workload over independent synthetic problems."""
+    from repro.data import make_sparse_classification
+
+    rng = np.random.default_rng(seed)
+    jobs = []
+    for i in range(n_jobs):
+        ds = make_sparse_classification(m=m, n=n, k_active=10, seed=seed + i)
+        T = int(rng.integers(4, 10)) if ragged else 8
+        jobs.append(PathJob(jid=i, X=np.asarray(ds.X), y=np.asarray(ds.y),
+                            n_lambdas=T,
+                            lam_min_ratio=float(rng.uniform(0.1, 0.3))))
+    return jobs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--m", type=int, default=300)
+    ap.add_argument("--n", type=int, default=120)
+    ap.add_argument("--reduce", choices=("mask", "compact"),
+                    default="compact")
+    ap.add_argument("--tol", type=float, default=1e-9)
+    args = ap.parse_args()
+
+    server = PathServer(slots=args.slots, reduce=args.reduce, tol=args.tol)
+    jobs = demo_jobs(args.jobs, m=args.m, n=args.n)
+    results = server.serve(jobs)
+    for r in results:
+        print(f"  job {r.extras['jid']}: T={len(r.lambdas)} "
+              f"final nnz={int(r.active[-1])} "
+              f"obj={float(r.objectives[-1]):.5f} "
+              f"latency={r.extras['latency_s']:.2f}s")
+    Path("artifacts").mkdir(exist_ok=True)
+    Path("artifacts/svm_serve.json").write_text(
+        json.dumps(server.last_serve, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,12 @@ engine is feature-rule-only and runs start-to-finish in one dispatch, so
 ``--rules``/``--dynamic`` and per-step checkpoint/resume stay host-engine
 features.
 
+``--serve`` switches the launcher into multi-tenant mode: a synthetic
+mixed-grid job queue drains through ``launch/path_server.py`` (continuous
+batching of the batched scan step, ``--reduce`` selecting mask vs
+shared-cap compact solves) and the throughput/cache stats land in
+``artifacts/svm_serve.json``.
+
 CPU smoke: PYTHONPATH=src python -m repro.launch.train_svm --m 2000 --n 400
 """
 
@@ -390,7 +396,30 @@ def main():
                     help="re-estimate L per solve instead of reusing the "
                          "full-X upper bound computed once per path")
     ap.add_argument("--ckpt-dir", default="artifacts/svm_ckpt")
+    ap.add_argument("--serve", action="store_true",
+                    help="multi-tenant mode: drain a synthetic job mix "
+                         "through launch/path_server.py (continuous "
+                         "batching of the batched scan step) instead of "
+                         "solving one path")
+    ap.add_argument("--serve-jobs", type=int, default=8)
+    ap.add_argument("--serve-slots", type=int, default=4)
     args = ap.parse_args()
+
+    if args.serve:
+        from repro.launch.path_server import PathServer, demo_jobs
+
+        if args.engine != ap.get_default("engine") or args.storage != "dense":
+            raise SystemExit(
+                "--serve runs the batched scan step through the path "
+                "server; --engine/--storage do not apply"
+            )
+        server = PathServer(slots=args.serve_slots, reduce=args.reduce)
+        jobs = demo_jobs(args.serve_jobs, m=args.m, n=args.n)
+        server.serve(jobs)
+        Path("artifacts").mkdir(exist_ok=True)
+        Path("artifacts/svm_serve.json").write_text(
+            json.dumps(server.last_serve, indent=2))
+        return
 
     rules = args.rules if "," not in args.rules else args.rules.split(",")
     if args.libsvm:

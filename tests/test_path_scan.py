@@ -11,6 +11,7 @@ import pytest
 from repro.core import (
     PathDriver,
     compact_caps,
+    compact_caps_batched,
     fista_solve,
     lambda_max,
     lipschitz_estimate,
@@ -311,3 +312,150 @@ def test_batched_input_validation(ds):
         svm_path_batched(ds.X, ds.y)  # 2-D X needs explicit grids
     with pytest.raises(ValueError, match="B, T"):
         svm_path_batched(ds.X, ds.y, lambdas=np.array([0.5, 0.1]))
+
+
+# ---------------------------------------------------------------------------
+# Batched compact: the shared-cap schedule under vmap
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def batch_sets():
+    return [make_sparse_classification(m=200, n=90, k_active=8, seed=s)
+            for s in (51, 52)]
+
+
+@pytest.fixture(scope="module")
+def batched_compact(batch_sets):
+    Xb = np.stack([d.X for d in batch_sets])
+    yb = np.stack([d.y for d in batch_sets])
+    return svm_path_batched(Xb, yb, n_lambdas=6, lam_min_ratio=0.15,
+                            reduce="compact", **SOLVE)
+
+
+def test_compact_caps_batched_schedule():
+    # no counts: the ladder itself (same as the per-problem schedule)
+    assert compact_caps_batched(300) == compact_caps(300) == (32, 64, 128)
+    # with counts: the smallest shared cap fitting the batch-max keep
+    assert compact_caps_batched(300, [5]) == 32
+    assert compact_caps_batched(300, [10, 40]) == 64
+    assert compact_caps_batched(300, [10, 200]) == 300  # overflow -> mask
+    assert compact_caps_batched(16, [4]) == 16  # no ladder -> mask mode
+
+
+def test_batched_compact_matches_single_compact(batch_sets, batched_compact):
+    """vmapped compact == per-problem compact: same screen math, same
+    cumsum compaction, same solver trajectory (observed bitwise on CPU;
+    asserted at fp32 solver resolution since vmap may change the XLA
+    lowering) — and the certified keep masks agree exactly."""
+    for i, d in enumerate(batch_sets):
+        single = svm_path_scan(d.X, d.y, n_lambdas=6, lam_min_ratio=0.15,
+                               reduce="compact", **SOLVE)
+        rel = np.max(np.abs(batched_compact[i].objectives - single.objectives)
+                     / np.maximum(np.abs(single.objectives), 1.0))
+        assert rel < 1e-4, (i, rel)
+        np.testing.assert_array_equal(
+            batched_compact[i].extras["keep_masks"],
+            single.extras["keep_masks"])
+        assert batched_compact[i].extras["options"]["reduce"] == "compact"
+
+
+def test_batched_compact_matches_batched_mask(batch_sets, batched_compact):
+    """Compact vs mask reduction on the same batched program structure:
+    objectives to solver resolution, screened features exactly zero, and
+    the compact caps shared across the batch (ONE capacity per step)."""
+    Xb = np.stack([d.X for d in batch_sets])
+    yb = np.stack([d.y for d in batch_sets])
+    masked = svm_path_batched(Xb, yb, n_lambdas=6, lam_min_ratio=0.15,
+                              reduce="mask", **SOLVE)
+    for i in range(2):
+        rel = np.max(np.abs(batched_compact[i].objectives
+                            - masked[i].objectives)
+                     / np.maximum(np.abs(masked[i].objectives), 1.0))
+        assert rel < 5e-6, (i, rel)
+        km = batched_compact[i].extras["keep_masks"]
+        assert np.all(batched_compact[i].weights[~km] == 0.0)
+        caps = batched_compact[i].extras["caps"]
+        kept = batched_compact[i].kept
+        assert np.all(caps >= kept)  # the shared cap fits every element
+        assert caps[0] < Xb.shape[1]  # early steps actually compacted
+    # the schedule is batch-level: every element reports the same cap
+    np.testing.assert_array_equal(batched_compact[0].extras["caps"],
+                                  batched_compact[1].extras["caps"])
+
+
+def test_batched_grids_compact_matches_single(ds, host_path):
+    lmax = host_path.extras["lam_max"]
+    grids = np.stack([
+        np.geomspace(lmax, lmax * r, 5) for r in (0.15, 0.25, 0.4)
+    ])
+    batched = svm_path_batched(ds.X, ds.y, lambdas=grids, reduce="compact",
+                               **SOLVE)
+    for i in range(3):
+        single = svm_path_scan(ds.X, ds.y, lambdas=grids[i],
+                               reduce="compact", **SOLVE)
+        rel = np.max(np.abs(batched[i].objectives - single.objectives)
+                     / np.maximum(np.abs(single.objectives), 1.0))
+        assert rel < 1e-4, (i, rel)
+
+
+def test_batched_compact_overflow_falls_back(batch_sets):
+    """Screening off keeps all m features every step — past the largest
+    bucket — so the batch-level overflow branch must fire (cap == m for
+    every element) and still match the batched mask engine."""
+    Xb = np.stack([d.X for d in batch_sets])
+    yb = np.stack([d.y for d in batch_sets])
+    kw = dict(n_lambdas=4, lam_min_ratio=0.3, screening=False,
+              tol=1e-9, max_iters=4000)
+    c = svm_path_batched(Xb, yb, reduce="compact", **kw)
+    s = svm_path_batched(Xb, yb, reduce="mask", **kw)
+    for i in range(2):
+        assert np.all(c[i].extras["caps"] == Xb.shape[1])
+        rel = np.max(np.abs(c[i].objectives - s[i].objectives)
+                     / np.maximum(np.abs(s[i].objectives), 1.0))
+        assert rel < 1e-9, (i, rel)
+
+
+def test_svm_path_engine_batched_dispatch(batch_sets):
+    """PR-4 leftover: svm_path now dispatches engine='batched' (returns a
+    list) and accepts reduce='compact' there; the engine validation names
+    all three engines."""
+    Xb = np.stack([d.X for d in batch_sets])
+    yb = np.stack([d.y for d in batch_sets])
+    rs = svm_path(Xb, yb, engine="batched", reduce="compact", n_lambdas=4,
+                  lam_min_ratio=0.25, tol=1e-9, max_iters=4000)
+    assert isinstance(rs, list) and len(rs) == 2
+    for r in rs:
+        assert r.extras["options"]["reduce"] == "compact"
+        assert r.extras["batch"] == 2
+    with pytest.raises(ValueError, match="'host', 'scan', or 'batched'"):
+        svm_path(Xb, yb, engine="bogus")
+    with pytest.raises(ValueError, match="feature rule only"):
+        svm_path(Xb, yb, engine="batched", rules="sample_vi")
+
+
+def test_engine_cache_no_retrace(batch_sets):
+    """Same config + same shapes must hit both warm-cache layers: the
+    engine dict (one jitted engine per static-opts key) and jit's own trace
+    cache (no retrace on the repeat call)."""
+    from repro.core.path_scan import _engine_jit, _static_opts, engine_cache_info
+
+    # layer 1: static opts are hashable and hit the engine dict
+    a = _engine_jit(_static_opts(4000, True, False, 50, None, False,
+                                 "compact"), batched="problems_compact")
+    b = _engine_jit(_static_opts(4000, True, False, 50, None, False,
+                                 "compact"), batched="problems_compact")
+    assert a is b
+
+    # layer 2: a repeated same-shape call leaves every trace count alone
+    Xb = np.stack([d.X for d in batch_sets])
+    yb = np.stack([d.y for d in batch_sets])
+    kw = dict(n_lambdas=4, lam_min_ratio=0.25, reduce="compact",
+              tol=1e-9, max_iters=4000)
+    svm_path_batched(Xb, yb, **kw)
+    before = engine_cache_info()
+    if any(v < 0 for v in before.values()):
+        pytest.skip("running jax exposes no _cache_size probe")
+    svm_path_batched(Xb, yb, **kw)
+    after = engine_cache_info()
+    assert after == before, (before, after)

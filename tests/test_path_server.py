@@ -1,0 +1,114 @@
+"""Path server: continuous batching over the batched scan step — served
+results vs sequential svm_path, bucket padding invariants, and the warm
+program cache (hits/misses/retraces)."""
+
+import numpy as np
+import pytest
+
+from repro.core import svm_path
+from repro.launch.path_server import PathJob, PathServer, demo_jobs
+
+SOLVE = dict(tol=1e-10, max_iters=8000)
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One ragged 6-job workload through a 3-slot compact-mode server."""
+    jobs = demo_jobs(6, m=300, n=120, seed=3)  # ragged T in [4, 10)
+    server = PathServer(slots=3, reduce="compact", **SOLVE)
+    results = server.serve(jobs, log=lambda *a, **k: None)
+    return jobs, server, results
+
+
+def test_server_matches_sequential_paths(served):
+    """Every served job must reproduce its sequential svm_path solution
+    (scan engine, same grid): objectives to solver resolution — the padded
+    slot solves the true problem through its sample mask."""
+    jobs, _, results = served
+    for job, r in zip(jobs, results):
+        seq = svm_path(job.X, job.y, lambdas=job.lambdas, engine="scan",
+                       reduce="compact", **SOLVE)
+        rel = np.max(np.abs(r.objectives - seq.objectives)
+                     / np.maximum(np.abs(seq.objectives), 1.0))
+        assert rel < 1e-6, (job.jid, rel)
+        np.testing.assert_allclose(r.weights, seq.weights, atol=5e-3)
+        assert r.extras["jid"] == job.jid
+        assert r.extras["engine"] == "serve"
+
+
+def test_server_results_trimmed_to_true_shape(served):
+    """Bucket padding must never leak: results carry the job's true (T, m)
+    shapes, padded feature rows are screened to exact zeros, and the
+    reported caps never exceed the true m."""
+    jobs, _, results = served
+    for job, r in zip(jobs, results):
+        T, m = len(job.lambdas), job.X.shape[0]
+        assert r.weights.shape == (T, m)
+        assert r.extras["keep_masks"].shape == (T, m)
+        assert np.all(r.weights[~r.extras["keep_masks"]] == 0.0)
+        assert np.all(r.extras["caps"] <= m)
+        assert np.all(r.kept <= m)
+
+
+def test_server_cache_warm_and_no_retrace(served):
+    """The explicit program cache must actually get reused (more hits than
+    misses on a multi-job workload) and never retrace a compiled program."""
+    _, server, _ = served
+    st = server.cache_stats()
+    assert st["programs"] == st["misses"]
+    assert st["hits"] > st["misses"], st
+    assert st["retraces"] == 0, st
+
+
+def test_server_occupancy_and_latency(served):
+    """Continuous batching keeps slots busy across ragged grid lengths."""
+    _, server, _ = served
+    s = server.last_serve
+    assert s["jobs"] == 6
+    assert s["slot_occupancy"] > 0.5
+    assert s["latency_p95_s"] >= s["latency_p50_s"] > 0.0
+    assert s["jobs_per_s"] > 0.0
+
+
+def test_server_second_workload_bounded_compiles():
+    """A second same-bucket workload on a warm server compiles at most the
+    remaining rungs of the cap ladder — the cache key space for one group
+    is (|caps| + 1) programs, never per-job or per-grid-length."""
+    from repro.core.path_scan import compact_caps
+
+    server = PathServer(slots=2, reduce="compact", tol=1e-9, max_iters=4000)
+    server.serve(demo_jobs(3, m=100, n=60, seed=1), log=lambda *a: None)
+    server.serve(demo_jobs(3, m=100, n=60, seed=9), log=lambda *a: None)
+    st = server.cache_stats()
+    assert st["programs"] <= len(compact_caps(128)) + 1  # m_b = bucket(100)
+    assert st["retraces"] == 0
+
+
+def test_server_mixed_buckets_and_rules():
+    """Jobs from different shape buckets and rule configs drain group by
+    group through the same server, each against its own sequential path."""
+    a = demo_jobs(2, m=100, n=60, seed=21)
+    b = demo_jobs(2, m=40, n=24, seed=22)
+    for j in b:
+        j.jid += 10
+    b[1].rules = "none"  # separate group: screening is in the group key
+    server = PathServer(slots=2, reduce="compact", tol=1e-9, max_iters=4000)
+    results = server.serve(a + b, log=lambda *a, **k: None)
+    assert [r.extras["jid"] for r in results] == [0, 1, 10, 11]
+    for job, r in zip(a + b, results):
+        seq = svm_path(job.X, job.y, lambdas=job.lambdas, engine="scan",
+                       reduce="compact", screening=job.screening,
+                       tol=1e-9, max_iters=4000)
+        rel = np.max(np.abs(r.objectives - seq.objectives)
+                     / np.maximum(np.abs(seq.objectives), 1.0))
+        assert rel < 1e-6, (job.jid, rel)
+        assert r.screened == job.screening
+
+
+def test_server_rejects_unknown_rules():
+    job = PathJob(jid=0, X=np.eye(8, dtype=np.float32),
+                  y=np.ones(8, np.float32), rules="sample_vi")
+    with pytest.raises(ValueError, match="feature rule only"):
+        job.group_key()
+    with pytest.raises(ValueError, match="mask' or 'compact"):
+        PathServer(reduce="gather")
