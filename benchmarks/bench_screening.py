@@ -50,7 +50,8 @@ from repro.core.dual import safe_theta_and_delta
 from repro.data import make_sparse_classification
 
 RATIOS = (0.95, 0.9, 0.8, 0.7, 0.5, 0.3, 0.1)
-RULE_SPECS = ("feature_vi", "sample_vi", "composite", "dvi", None)
+RULE_SPECS = ("feature_vi", "sample_vi", "composite", "dvi", "edpp",
+              "sifs", "auto", None)
 TRAJECTORY_PATH = Path(__file__).resolve().parent.parent / "BENCH_screening.json"
 
 
@@ -148,6 +149,7 @@ def _rule_sweep(rows, log, m=2000, n=400, n_lambdas=10, lam_min_ratio=0.05):
             "verify_resolves": int(r.verify_rounds.sum()),
             "max_obj": float(np.max(np.abs(r.objectives))),
         })
+    _rules_sweep(rows, log, traj, m=m, n=n, n_lambdas=n_lambdas)
     _dynamic_sweep(rows, log, traj, m=m, n=n, n_lambdas=n_lambdas,
                    lam_min_ratio=lam_min_ratio)
     _engine_sweep(rows, log, traj, m=m, n=n, n_lambdas=n_lambdas,
@@ -157,6 +159,121 @@ def _rule_sweep(rows, log, m=2000, n=400, n_lambdas=10, lam_min_ratio=0.05):
     _serve_sweep(rows, log, traj)
     TRAJECTORY_PATH.write_text(json.dumps(traj, indent=2))
     log(f"wrote trajectory file: {TRAJECTORY_PATH}")
+
+
+def _rules_sweep(rows, log, traj, m=2000, n=400, n_lambdas=10,
+                 lam_min_ratio=0.3, tol=1e-9, check=False):
+    """Rule-*stack* sweep over the jit-threaded rule programs.
+
+    Drives the host :class:`PathDriver` (for the per-rule telemetry and the
+    screen/solve wall split) with each program-backed stack on a
+    screen-effective planted instance and records ``traj["rules"]``:
+    per-rule kept counts and mean bounds per step, total path wall, and the
+    two headline comparisons — EDPP vs the feature VI sphere (EDPP must
+    screen strictly more on this instance) and ``rules="auto"`` overhead vs
+    the best single rule.  The ``["feature_vi", "edpp"]`` stack run gives a
+    same-region per-step dominance check: both rules are evaluated from the
+    identical anchor, so ``kept_edpp <= kept_vi`` must hold step by step.
+    ``check=True`` (the ``--smoke`` CI lane) asserts equivalence and
+    dominance on a tiny instance; strictness and the auto-overhead ratio
+    are only meaningful on the full-size instance.
+    """
+    ds = make_sparse_classification(m=m, n=n, k_active=10, noise=0.1,
+                                   seed=11)
+    log(f"\n# rule-stack sweep (m={m}, n={n}, {n_lambdas} lambdas, "
+        f"lam_min_ratio={lam_min_ratio})")
+    log("rules,path_s,screen_s,total_kept")
+    specs = ("none", "feature_vi", "dvi", "edpp", "auto",
+             ["feature_vi", "edpp"])
+    out = {"instance": {"m": m, "n": n, "n_lambdas": n_lambdas,
+                        "lam_min_ratio": lam_min_ratio, "k_active": 10,
+                        "seed": 11},
+           "runs": {}}
+    objs = {}
+    for spec in specs:
+        name = spec if isinstance(spec, str) else "+".join(spec)
+        driver = PathDriver(rules=None if spec == "none" else spec, tol=tol)
+        driver.run(ds.X, ds.y, n_lambdas=n_lambdas,
+                   lam_min_ratio=lam_min_ratio)  # warm jit caches
+        # Per-step wall is dominated by kept-independent work (dual-point
+        # and objective evaluation), so rule-to-rule deltas are a few
+        # percent -- min-of-5 keeps scheduler noise out of the ratios.
+        dt = float("inf")
+        for _ in range(1 if check else 5):
+            t0 = time.perf_counter()
+            r = driver.run(ds.X, ds.y, n_lambdas=n_lambdas,
+                           lam_min_ratio=lam_min_ratio)
+            dt = min(dt, time.perf_counter() - t0)
+        per_rule_kept, per_rule_bound = {}, {}
+        for step in r.extras.get("rule_telemetry", []):
+            for rn, st in step.items():
+                per_rule_kept.setdefault(rn, []).append(st["kept"])
+                per_rule_bound.setdefault(rn, []).append(st["bound_mean"])
+        screen_s = float(r.screen_times.sum())
+        total_kept = int(r.kept[1:].sum())  # step 0 is the lam_max seed
+        log(f"{name},{dt:.3f},{screen_s:.3f},{total_kept}")
+        rows.append((f"rules_{name}", dt * 1e6,
+                     f"kept_total={total_kept}"))
+        out["runs"][name] = {
+            "path_seconds": dt,
+            "screen_seconds": screen_s,
+            "solve_seconds": max(dt - screen_s, 0.0),
+            "kept_features": [int(v) for v in r.kept],
+            "total_kept": total_kept,
+            "per_rule_kept": per_rule_kept,
+            "per_rule_bound_mean": per_rule_bound,
+            "max_obj": float(np.max(np.abs(r.objectives))),
+        }
+        objs[name] = np.asarray(r.objectives)
+
+    # Safety: every stack must reach the same path objectives (screening is
+    # a-priori safe -- it can only drop provably-inactive features).
+    ref = objs["none"]
+    scale = max(float(np.max(np.abs(ref))), 1e-12)
+    for name, ob in objs.items():
+        rel = float(np.max(np.abs(ob - ref))) / scale
+        out["runs"][name]["relobj_vs_unscreened"] = rel
+        assert rel < 1e-4, f"rules={name} diverged from unscreened: {rel}"
+
+    # Same-region dominance: in the stacked run both rules see the same
+    # anchor; EDPP is the tighter bound, so kept_edpp <= kept_vi holds
+    # exactly, step by step.
+    stack = out["runs"]["feature_vi+edpp"]
+    vi_kept = stack["per_rule_kept"].get("feature_vi", [])
+    ed_kept = stack["per_rule_kept"].get("edpp", [])
+    assert len(vi_kept) == len(ed_kept) and vi_kept, "telemetry missing"
+    assert all(e <= v for e, v in zip(ed_kept, vi_kept)), (
+        "EDPP kept more than VI from the same anchor: "
+        f"{ed_kept} vs {vi_kept}")
+    out["edpp_dominates_vi_per_step"] = True
+
+    vi_total = out["runs"]["feature_vi"]["total_kept"]
+    ed_total = out["runs"]["edpp"]["total_kept"]
+    out["edpp_total_kept"] = ed_total
+    out["feature_vi_total_kept"] = vi_total
+    out["edpp_strictly_tighter"] = ed_total < vi_total
+    singles = {k: out["runs"][k]["path_seconds"]
+               for k in ("feature_vi", "dvi", "edpp")}
+    best = min(singles, key=singles.get)
+    ratio = out["runs"]["auto"]["path_seconds"] / singles[best]
+    out["auto_vs_best_single"] = {"best_single": best,
+                                  "best_seconds": singles[best],
+                                  "auto_seconds":
+                                      out["runs"]["auto"]["path_seconds"],
+                                  "ratio": ratio}
+    log(f"edpp_total={ed_total} vi_total={vi_total} "
+        f"auto/best({best})={ratio:.3f}")
+    if not check:
+        # Full-size acceptance: EDPP must screen strictly more than the VI
+        # sphere on this planted instance, and the telemetry-driven auto
+        # stack must stay within 10% of the best single rule.
+        assert ed_total < vi_total, (
+            f"EDPP did not tighten VI on the bench instance: "
+            f"{ed_total} vs {vi_total}")
+        assert ratio <= 1.10, (
+            f"rules='auto' slower than best single rule by >10%: {ratio}")
+    traj["rules"] = out
+    return out
 
 
 def _dynamic_sweep(rows, log, traj, m, n, n_lambdas, lam_min_ratio,
@@ -722,6 +839,8 @@ def run(log=print, smoke=False):
                        tol=1e-10, max_iters=8000, check=True)
         _serve_sweep(rows, log, {}, n_jobs=4, m=120, n=60, slots=2,
                      tol=1e-10, max_iters=8000, check=True)
+        _rules_sweep(rows, log, {}, m=300, n=120, n_lambdas=5,
+                     lam_min_ratio=0.2, tol=1e-10, check=True)
         return rows
     _rate_tables(rows, log)
     _rule_sweep(rows, log)

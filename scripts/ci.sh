@@ -22,13 +22,22 @@
 #                                #          batching, bucket padding, warm
 #                                #          program cache) + the --serve
 #                                #          launcher smoke
+#   ./scripts/ci.sh rules        # rules:   the screening-rule zoo — rule
+#                                #          programs on every engine
+#                                #          (tests/test_rule_programs.py:
+#                                #          host-vs-scan equivalence matrix,
+#                                #          EDPP-tightens-VI, dvi history
+#                                #          carry, composite round-trip,
+#                                #          dispatch rejections) + the host
+#                                #          rule-protocol suite
 #   ./scripts/ci.sh bench        # bench:   engine + storage equivalence smoke
 #                                #          (bench_screening --smoke): catches
 #                                #          host/scan/compact/pallas/chunked,
 #                                #          batched-compact, server-vs-
 #                                #          sequential and sharded-scan-bitwise
 #                                #          regressions in seconds
-#   ./scripts/ci.sh all          # kernels + x64 + stream + serve + bench,
+#   ./scripts/ci.sh all          # kernels + x64 + stream + serve + rules
+#                                # + bench,
 #                                # then full
 #
 # Extra pytest args pass through after the lane name (a leading '-' arg is
@@ -42,9 +51,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 lane="${1:-full}"
 case "$lane" in
-  full|fast|kernels|x64|stream|serve|bench|all) shift || true ;;
+  full|fast|kernels|x64|stream|serve|rules|bench|all) shift || true ;;
   -*) lane="full" ;;  # bare pytest args => full lane (legacy invocation)
-  *) echo "unknown lane '$lane' (full|fast|kernels|x64|stream|serve|bench|all)" >&2; exit 2 ;;
+  *) echo "unknown lane '$lane' (full|fast|kernels|x64|stream|serve|rules|bench|all)" >&2; exit 2 ;;
 esac
 
 # suites whose numerics are dtype-parametric: the safe-screening bound
@@ -80,6 +89,9 @@ run_lane() {
       python -m repro.launch.train_svm --serve --serve-jobs 4 \
         --serve-slots 2 --m 120 --n 60 --reduce compact
       ;;
+    rules)
+      python -m pytest -x -q tests/test_rule_programs.py tests/test_rules.py "$@"
+      ;;
     bench)
       python -m benchmarks.bench_screening --smoke
       ;;
@@ -93,6 +105,7 @@ if [ "$lane" = "all" ]; then
   run_lane x64 "$@"
   run_lane stream "$@"
   run_lane serve "$@"
+  run_lane rules "$@"
   run_lane bench
   run_lane full "$@"
 else

@@ -12,13 +12,19 @@ from .dual import (  # noqa: F401
 )
 from .screening import (  # noqa: F401
     SAFE_TAU,
+    AnchorStats,
     FeatureReductions,
+    FixedStats,
     ScreenShared,
+    anchor_stats,
     feature_reductions,
+    finalize_from_anchor,
+    fixed_stats,
     screen,
     screen_bounds,
     screen_bounds_from_reductions,
     shared_scalars,
+    shared_scalars_from_anchor,
     shared_scalars_from_stats,
 )
 from .solver import (  # noqa: F401
@@ -42,13 +48,19 @@ from .path_scan import (  # noqa: F401
     svm_path_scan_sharded,
 )
 from .rules import (  # noqa: F401
+    PROGRAMS,
+    AutoRule,
     CompositeRule,
     ConvexRegion,
     DVIRule,
+    EDPPRule,
     FeatureVIRule,
+    RuleProgram,
     SampleVIRule,
     ScreeningRule,
+    SIFSRule,
     available_rules,
     get_rule,
     make_rules,
+    resolve_programs,
 )

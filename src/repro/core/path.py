@@ -298,6 +298,12 @@ class PathDriver:
         sample_masks: dict[int, np.ndarray] = {}  # accepted per-step masks
 
         dyn_log: dict[int, dict] = {}  # per-step in-solver screening telemetry
+        # per-step, per-feature-rule screen telemetry: kept count and bound
+        # spread for every rule *individually* (the masks are intersected,
+        # so per-rule keeps are not recoverable from the final mask). Feeds
+        # extras["rule_telemetry"], the bench rules sweep, and AutoRule's
+        # cost model. Entry 0 is the unscreened closed-form/cold step.
+        rule_log: list[dict[str, dict]] = [{}]
         lam_prev = float(lambdas[0])
         w_host = np.zeros((m,), dtype=np.float64)
         if lambdas[0] >= lam_max_val * (1.0 - 1e-9):
@@ -358,6 +364,7 @@ class PathDriver:
             st0 = time.perf_counter()
             f_mask = np.ones((m,), dtype=bool)
             s_mask = np.ones((n,), dtype=bool)
+            step_rules: dict[str, dict] = {}
             if self.rules:
                 region = ConvexRegion.build(
                     y, lam_prev, lam, theta_prev, delta=delta_prev,
@@ -365,10 +372,18 @@ class PathDriver:
                     dw=dw_pred, db=db_pred,
                 )
                 for rule in feature_rules:
-                    f_mask &= np.asarray(rule.keep(rule.bounds(X, y, region)))
+                    rb = rule.bounds(X, y, region)
+                    rk = np.asarray(rule.keep(rb))
+                    f_mask &= rk
+                    rb_np = np.asarray(rb, np.float64)
+                    step_rules[rule.name] = {
+                        "kept": int(rk.sum()),
+                        "bound_mean": float(rb_np.mean()) if rb_np.size else 0.0,
+                    }
                 for rule in sample_rules:
                     s_mask &= np.asarray(rule.keep(rule.bounds(X, y, region)))
             s_times[k] = time.perf_counter() - st0
+            rule_log.append(step_rules)
 
             f_idx = np.nonzero(f_mask)[0]
             kept[k] = len(f_idx)
@@ -446,6 +461,14 @@ class PathDriver:
             jax.block_until_ready((theta_prev, delta_prev))
             wall[k] = time.perf_counter() - t0
 
+            # telemetry hand-back: rules exposing ``observe`` (AutoRule's
+            # cost model) learn this step's solve wall per kept feature
+            solve_s = max(wall[k] - s_times[k], 0.0)
+            for rule in feature_rules:
+                obs = getattr(rule, "observe", None)
+                if obs is not None:
+                    obs(solve_seconds=solve_s, kept=int(kept[k]))
+
         kept_s[0] = 0
         return PathResult(
             lambdas=lambdas, weights=weights, biases=biases, objectives=objectives,
@@ -454,7 +477,7 @@ class PathDriver:
             kept_samples=kept_s, verify_rounds=vrounds,
             rules=tuple(r.name for r in self.rules),
             extras={"lam_max": lam_max_val, "sample_masks": sample_masks,
-                    "dynamic": dyn_log},
+                    "dynamic": dyn_log, "rule_telemetry": rule_log},
         )
 
     # -- one reduced solve -------------------------------------------------
@@ -516,18 +539,26 @@ class PathDriver:
         dense chunks), gather-mode reduction materializes only the rows
         that survive screening (``O(chunk + kept)`` peak device memory),
         and anchor certification streams the correlation sweeps
-        (``sparse.gap_theta_delta_stream``). Supports the a-priori-safe
-        feature rule only (sample rules and the in-solver dynamic screen
-        need in-core X; use ``reduce='gather'``, the storage's whole
-        point).
+        (``sparse.gap_theta_delta_stream``). Supports a-priori-safe
+        feature rules only — any program-backed stack (``feature_vi``,
+        ``edpp``, ``dvi``, ``auto``): sample rules and the in-solver
+        dynamic screen need in-core X; use ``reduce='gather'``, the
+        storage's whole point. The pure-VI stack routes through the legacy
+        :func:`~repro.sparse.screen_stream` sweep (bitwise vs the in-core
+        bound, Pallas chunk kernel eligible); every other stack evaluates
+        via :func:`~repro.sparse.screen_stack_stream` (XLA route, same
+        T + 1 streams of X per path).
         """
         from repro.sparse import (  # lazy: repro.sparse imports core.solver
             fista_solve_chunked,
             gap_theta_delta_stream,
             lambda_max_stream,
             lipschitz_estimate_stream,
+            screen_stack_stream,
             screen_stream,
+            stream_anchor_stats,
         )
+        from .rules.programs import PROGRAMS
 
         if self.reduce != "gather":
             raise ValueError(
@@ -540,13 +571,17 @@ class PathDriver:
                 "dynamic in-solver screening needs in-core X; run chunked "
                 "paths with dynamic=False"
             )
-        bad = [r.name for r in self.rules if not isinstance(r, FeatureVIRule)]
+        bad = [r.name for r in self.rules
+               if getattr(r, "program", None) not in PROGRAMS]
         if bad:
             raise ValueError(
-                f"chunked storage supports the a-priori-safe feature rule "
-                f"only (sample rules sweep the transposed axis in-core), "
-                f"got {bad}"
+                f"chunked storage supports a-priori-safe feature rule only "
+                f"specs (program-backed: {tuple(sorted(PROGRAMS))}; sample "
+                f"rules sweep the transposed axis in-core), got {bad}"
             )
+        progs = tuple(dict.fromkeys(r.program for r in self.rules))
+        needs_hist = any(PROGRAMS[p].n_anchors > 1 for p in progs)
+        anchor_old = None  # streamed AnchorStats of the step-before-last
 
         y = jnp.asarray(y)
         y_np = np.asarray(y)
@@ -610,11 +645,25 @@ class PathDriver:
             t0 = time.perf_counter()
 
             st0 = time.perf_counter()
-            if self.rules:
+            if self.rules and progs == ("feature_vi",):
+                # pure-VI fast path: the legacy streamed sweep is bitwise
+                # the in-core bound on dense chunks and Pallas-eligible
                 keep_m, _ = screen_stream(
                     fc, y, lam_prev, lam, theta_prev, tau=tau,
                     delta=delta_prev, use_pallas=self.use_pallas,
                 )
+                f_mask = np.asarray(keep_m)
+            elif self.rules:
+                a1 = stream_anchor_stats(fc, y, lam_prev, theta_prev,
+                                         delta=delta_prev)
+                anchors = (a1,)
+                if needs_hist:
+                    # last step's a1 is this step's old anchor — free
+                    anchors = (anchor_old if anchor_old is not None
+                               else a1,) + anchors
+                    anchor_old = a1
+                keep_m, _ = screen_stack_stream(fc, y, lam, anchors, progs,
+                                                tau=tau)
                 f_mask = np.asarray(keep_m)
             else:
                 f_mask = np.ones((m,), dtype=bool)
@@ -706,14 +755,18 @@ def svm_path(
     * ``"host"`` — this driver: per-step host orchestration, gather/mask
       reduction on both axes, any rule mix, sample-rule verification;
     * ``"scan"`` — ``core/path_scan.py``: the whole path as one jitted
-      ``lax.scan`` program (feature rule only, mask or compact reduction,
-      zero host round trips). See that module for the trade-off discussion.
+      ``lax.scan`` program (a-priori-safe feature rules only — any
+      program-backed stack such as ``"feature_vi"``, ``"edpp"``, ``"dvi"``
+      or a list of them; mask or compact reduction, zero host round
+      trips). Sample rules raise at dispatch. See that module for the
+      trade-off discussion.
     * ``"batched"`` — ``path_scan.svm_path_batched``: B paths as one
       program (``X (B, m, n)`` independent problems, or ``X (m, n)`` with
-      ``lambdas (B, T)`` grids). Feature rule only; returns a *list* of
-      ``PathResult``. Compact reduction composes with batching through the
-      shared-cap schedule. For ragged many-job workloads prefer
-      ``launch/path_server.py`` (continuous batching over these programs).
+      ``lambdas (B, T)`` grids). Same program-backed feature-rule stacks
+      as ``"scan"``; returns a *list* of ``PathResult``. Compact reduction
+      composes with batching through the shared-cap schedule. For ragged
+      many-job workloads prefer ``launch/path_server.py`` (continuous
+      batching over these programs).
 
     ``reduce`` defaults per engine (host: ``"gather"``, scan/batched:
     ``"mask"``). Rule of thumb — **gather** (host) for multiplicative
@@ -733,12 +786,9 @@ def svm_path(
                 "storage runs on the host engine (engine='host', the "
                 "default when X is a FeatureChunked)"
             )
-        if rules is not None:
-            raise ValueError(
-                "engine='scan' supports the built-in feature rule only "
-                "(screening=True/False, tau=...); use engine='host' for "
-                f"custom rule mixes, got rules={rules!r}"
-            )
+        # rule-spec lowerability is validated at dispatch by
+        # path_scan._static_opts -> rules/programs.resolve_programs:
+        # sample rules / verification-needing specs raise there
         return svm_path_scan(
             X, y, lambdas=lambdas, n_lambdas=n_lambdas,
             lam_min_ratio=lam_min_ratio, screening=screening, tau=tau,
@@ -746,6 +796,7 @@ def svm_path(
             screen_every=screen_every, use_pallas=use_pallas,
             exact_lipschitz=exact_lipschitz,
             reduce="mask" if reduce is None else reduce,
+            rules=rules,
         )
     if engine == "batched":
         from .path_scan import svm_path_batched  # deferred: imports us
@@ -755,12 +806,6 @@ def svm_path(
                 "engine='batched' jit-compiles over in-core arrays; chunked "
                 "storage runs on the host engine"
             )
-        if rules is not None:
-            raise ValueError(
-                "engine='batched' supports the built-in feature rule only "
-                "(screening=True/False, tau=...); use engine='host' for "
-                f"custom rule mixes, got rules={rules!r}"
-            )
         return svm_path_batched(
             X, y, lambdas=lambdas, n_lambdas=n_lambdas,
             lam_min_ratio=lam_min_ratio, screening=screening, tau=tau,
@@ -768,6 +813,7 @@ def svm_path(
             screen_every=screen_every, use_pallas=use_pallas,
             exact_lipschitz=exact_lipschitz,
             reduce="mask" if reduce is None else reduce,
+            rules=rules,
         )
     if engine != "host":
         raise ValueError(

@@ -20,9 +20,10 @@ iterations. This module is the engine for that regime (``engine="scan"``):
   ``(w, b, theta, delta, lam_prev, keep_mask)`` — XLA aliases the carry
   buffers in place (donated, no copies), and nothing syncs to the host until
   the final stacked ``PathResult`` is pulled once at the end;
-* each scan step rebuilds the paper's VI region from the carried anchor
-  (``screening.shared_scalars_from_stats``), evaluates the feature bounds
-  with the theta-independent reductions hoisted out of the loop (one sweep
+* each scan step rebuilds the rule stack's screening region(s) from the
+  carried anchor (``screening.AnchorStats`` + the pure rule programs of
+  ``rules/programs.py``), evaluates the feature bounds with the
+  theta-independent reductions hoisted out of the loop (one sweep
   per step, paper Sec. 6.4), solves with the fused two-sweep FISTA body
   (``solver.fista_run``, optionally Pallas-backed and/or dynamic), and
   gap-certifies the solution (``solver.gap_theta_delta``, reusing the
@@ -79,10 +80,18 @@ run-every-branch select (``_batched_path_scan_program``; one overflowing
 element demotes that step to mask for the whole sub-batch). Measure with
 ``benchmarks/bench_screening.py`` (``BENCH_screening.json["engines"]``).
 
-The scan engine deliberately supports the *feature*-axis reduction only
-(the paper's a-priori-safe rule, plus the in-solver dynamic refresh).
-Sample rules need the a-posteriori verification loop, which is host
-control flow — use ``engine="host"`` for those.
+Rule stacks inside the jitted step (``rules=``)
+-----------------------------------------------
+The scan engines accept any stack of a-priori-safe *feature* rules that
+ship a jittable :class:`~repro.core.rules.programs.RuleProgram` —
+``"feature_vi"`` (the paper's rule), ``"edpp"`` (projection-enhanced,
+strictly tighter at equal sweep cost), ``"dvi"`` (two-anchor min
+composition; the scan carry grows the step-before-last anchor), or a list
+of them (bounds AND-ed elementwise inside the step). The spec is resolved
+at dispatch (``rules/programs.resolve_programs``) so unlowerable specs
+fail loudly before tracing. Sample rules need the a-posteriori
+verification loop, which is host control flow — use ``engine="host"`` for
+those (including ``"sifs"``).
 """
 
 from __future__ import annotations
@@ -100,11 +109,16 @@ from .dual import bias_at_lambda_max, lambda_max, theta_at_lambda_max
 # applied to one engine must never leave the other accepting what the
 # first rejects
 from .path import PathResult, _validate_grid, default_lambda_grid
+from .rules.programs import (
+    PROGRAMS,
+    resolve_programs,
+    stack_bounds,
+    stack_needs_history,
+)
 from .screening import (
     SAFE_TAU,
-    FeatureReductions,
-    screen_bounds_from_reductions,
-    shared_scalars_from_stats,
+    AnchorStats,
+    FixedStats,
 )
 from .solver import (
     LOCAL,
@@ -216,6 +230,7 @@ def _batched_path_step(
     screen_every: int,
     use_pallas: bool,
     exact_lipschitz: bool,
+    rules: tuple = ("feature_vi",),
     n_feas_iters: int = 8,
 ):
     """One batched lambda step: screen -> shared-cap solve -> certify.
@@ -241,20 +256,39 @@ def _batched_path_step(
     dt = X.dtype
     B = lam.shape[0]
     ax = None if shared_x else 0
-    w, b, theta, delta, lam_prev, fmask_prev = carry
+    progs = tuple(PROGRAMS[nm] for nm in rules) if screening else ()
+    needs_hist = stack_needs_history(progs)
+    if needs_hist:
+        (w, b, theta, delta, lam_prev, fmask_prev,
+         lam_old, theta_old, delta_old) = carry
+    else:
+        w, b, theta, delta, lam_prev, fmask_prev = carry
 
-    def screen_one(Xe, ye, st, th, de, lp, la):
+    def screen_one(Xe, ye, st, th, de, lp, la, *hist):
         d_one, d_y, d_sq, one_y, n_tot = st
-        sh = shared_scalars_from_stats(
-            lp, la, one_y=one_y, theta_dot_one=jnp.sum(th),
-            theta_dot_y=th @ ye, theta_sq=th @ th, n_tot=n_tot, delta=de,
-        )
-        red = FeatureReductions(
-            d_theta=Xe @ (ye * th), d_one=d_one, d_y=d_y, d_sq=d_sq)
-        return screen_bounds_from_reductions(red, sh) >= tau
+        fixed = FixedStats(d_one=d_one, d_y=d_y, d_sq=d_sq, one_y=one_y,
+                           n_tot=n_tot)
+
+        def anchor(lam_a, th_a, de_a):
+            return AnchorStats(
+                lam=lam_a, delta=de_a, theta_dot_one=jnp.sum(th_a),
+                theta_dot_y=th_a @ ye, theta_sq=th_a @ th_a,
+                d_theta=Xe @ (ye * th_a),
+            )
+
+        anchors = (anchor(lp, th, de),)
+        if hist:
+            l0, th0, de0 = hist
+            anchors = (anchor(l0, th0, de0),) + anchors
+        return stack_bounds(progs, la, anchors, fixed) >= tau
 
     with jax.named_scope("svm_path_batched/screen"):
-        if screening:
+        if screening and needs_hist:
+            keep = jax.vmap(
+                screen_one, in_axes=(ax, ax, ax, 0, 0, 0, 0, 0, 0, 0))(
+                X, y, statics, theta, delta, lam_prev, lam,
+                lam_old, theta_old, delta_old)
+        elif screening:
             keep = jax.vmap(screen_one, in_axes=(ax, ax, ax, 0, 0, 0, 0))(
                 X, y, statics, theta, delta, lam_prev, lam)
         else:
@@ -344,7 +378,11 @@ def _batched_path_step(
         n_iters=n_it, converged=conv, gap=gap, delta=delta2,
         fmask=keep, cap=cap_used, resurrected=resurrected,
     )
-    return (w2, b2, theta2, delta2, lam, fmask), out
+    new_carry = (w2, b2, theta2, delta2, lam, fmask)
+    if needs_hist:
+        # two-anchor programs (dvi) carry the step-before-last anchor too
+        new_carry = new_carry + (lam_prev, theta, delta)
+    return new_carry, out
 
 
 def _batched_path_scan_program(
@@ -368,6 +406,7 @@ def _batched_path_scan_program(
     use_pallas: bool,
     exact_lipschitz: bool,
     reduce: str = "compact",
+    rules: tuple = ("feature_vi",),
     shared_x: bool = False,
     n_feas_iters: int = 8,
 ) -> ScanPathOutputs:
@@ -408,7 +447,7 @@ def _batched_path_scan_program(
         caps=caps, shared_x=shared_x, max_iters=max_iters,
         screening=screening, dynamic=dynamic, screen_every=screen_every,
         use_pallas=use_pallas, exact_lipschitz=exact_lipschitz,
-        n_feas_iters=n_feas_iters,
+        rules=rules, n_feas_iters=n_feas_iters,
     )
 
     def step(carry, lam):
@@ -423,6 +462,12 @@ def _batched_path_scan_program(
         jnp.broadcast_to(jnp.asarray(lam0, dt), (B,)),
         jnp.ones((B, m), dt),
     )
+    progs = tuple(PROGRAMS[nm] for nm in rules) if screening else ()
+    if stack_needs_history(progs):
+        # old anchor seeded as a copy of the initial anchor: step 1's
+        # two-anchor bound degenerates to the single-anchor bound, matching
+        # the host DVIRule which starts with no stored anchor
+        carry0 = carry0 + (carry0[4], carry0[2], carry0[3])
     _, outs = jax.lax.scan(step, carry0, jnp.swapaxes(lambdas, 0, 1))
     # scan stacks along T; callers want per-element (B, T, ...) blocks
     return jax.tree_util.tree_map(lambda a: jnp.swapaxes(a, 0, 1), outs)
@@ -448,6 +493,7 @@ def _path_scan_program(
     use_pallas: bool,
     exact_lipschitz: bool,
     reduce: str = "mask",
+    rules: tuple = ("feature_vi",),
     col: Collectives = LOCAL,
     n_feas_iters: int = 8,
 ) -> ScanPathOutputs:
@@ -490,8 +536,28 @@ def _path_scan_program(
     n_tot = col.psum_data(jnp.asarray(float(n), dt))
     m_tot = col.psum_model(jnp.asarray(float(m), dt)).astype(jnp.int32)
 
+    progs = tuple(PROGRAMS[nm] for nm in rules) if screening else ()
+    needs_hist = stack_needs_history(progs)
+    fixed = FixedStats(d_one=d_one, d_y=d_y, d_sq=d_sq, one_y=one_y,
+                       n_tot=n_tot)
+
+    def anchor_from(lam_a, theta_a, delta_a):
+        # psummed anchor scalars + the per-step O(mn) sweep — every program
+        # in the stack shares these; a two-anchor stack pays one extra sweep
+        return AnchorStats(
+            lam=lam_a, delta=delta_a,
+            theta_dot_one=col.psum_data(jnp.sum(theta_a)),
+            theta_dot_y=col.psum_data(theta_a @ y),
+            theta_sq=col.psum_data(theta_a @ theta_a),
+            d_theta=col.psum_data(X @ (y * theta_a)),
+        )
+
     def step(carry, lam):
-        w, b, theta, delta, lam_prev, fmask_prev = carry
+        if needs_hist:
+            (w, b, theta, delta, lam_prev, fmask_prev,
+             lam_old, theta_old, delta_old) = carry
+        else:
+            w, b, theta, delta, lam_prev, fmask_prev = carry
 
         def solve(Xs, ws, bs, fms, inv_Ls, vm):
             """Fused-FISTA (or dynamic segmented) solve on one reduction."""
@@ -506,21 +572,14 @@ def _path_scan_program(
                 max_iters, tol, use_pallas, col=col, valid_m=vm,
             )
 
-        # -- sequential screen from the carried anchor ---------------------
+        # -- sequential screen from the carried anchor(s) ------------------
         with jax.named_scope("svm_path/screen"):
             if screening:
-                sh = shared_scalars_from_stats(
-                    lam_prev, lam, one_y=one_y,
-                    theta_dot_one=col.psum_data(jnp.sum(theta)),
-                    theta_dot_y=col.psum_data(theta @ y),
-                    theta_sq=col.psum_data(theta @ theta),
-                    n_tot=n_tot, delta=delta,
-                )
-                red = FeatureReductions(
-                    d_theta=col.psum_data(X @ (y * theta)),
-                    d_one=d_one, d_y=d_y, d_sq=d_sq,
-                )
-                bounds = screen_bounds_from_reductions(red, sh)
+                anchors = (anchor_from(lam_prev, theta, delta),)
+                if needs_hist:
+                    anchors = (anchor_from(lam_old, theta_old, delta_old),
+                               ) + anchors
+                bounds = stack_bounds(progs, lam, anchors, fixed)
                 keep = bounds >= tau
             else:
                 keep = jnp.ones((m,), bool)
@@ -609,10 +668,20 @@ def _path_scan_program(
             gap=gap, delta=delta2,
             fmask=keep, cap=cap_used, resurrected=resurrected,
         )
-        return (w2, b2, theta2, delta2, lam, fmask), out
+        new_carry = (w2, b2, theta2, delta2, lam, fmask)
+        if needs_hist:
+            # two-anchor programs (dvi) also carry the previous anchor
+            new_carry = new_carry + (lam_prev, theta, delta)
+        return new_carry, out
 
     carry0 = (w0, jnp.asarray(b0, dt), theta0, jnp.asarray(delta0, dt),
               jnp.asarray(lam0, dt), jnp.ones((m,), dt))
+    if needs_hist:
+        # seed the old anchor with the initial anchor: step 1's two-anchor
+        # bound degenerates to the single-anchor bound, matching the host
+        # DVIRule which starts with no stored anchor
+        carry0 = carry0 + (jnp.asarray(lam0, dt), theta0,
+                           jnp.asarray(delta0, dt))
     _, outs = jax.lax.scan(step, carry0, lambdas)
     return outs
 
@@ -693,21 +762,31 @@ def _validate_reduce(reduce: str) -> str:
 
 
 def _static_opts(max_iters, screening, dynamic, screen_every, use_pallas,
-                 exact_lipschitz, reduce="mask") -> tuple:
+                 exact_lipschitz, reduce="mask", rules=None) -> tuple:
+    # the rule spec is resolved HERE — at dispatch, not inside the trace —
+    # so unlowerable specs (sample rules, containers holding them) fail
+    # with resolve_programs' error before any engine is built, and the
+    # resolved program tuple becomes part of the engine-cache key. The
+    # screening flag is re-derived from the resolved stack: rules="none"
+    # turns screening off, rules=None keeps the legacy screening=bool.
+    progs = resolve_programs(rules, screening=bool(screening))
     return (
         ("max_iters", int(max_iters)),
-        ("screening", bool(screening)),
+        ("screening", bool(progs)),
         ("dynamic", bool(dynamic)),
         ("screen_every", max(int(screen_every), 1)),
         ("use_pallas", _resolve_pallas(use_pallas)),
         ("exact_lipschitz", bool(exact_lipschitz)),
         ("reduce", _validate_reduce(reduce)),
+        ("rules", progs),
     )
 
 
 def _to_path_result(lambdas, outs: ScanPathOutputs, lam_max_val, wall_s,
                     screening, static_kw) -> PathResult:
     T = len(lambdas)
+    opts = dict(static_kw)
+    screened = bool(opts.get("screening", screening))
     per_step = np.full((T,), wall_s / max(T, 1), dtype=np.float64)
     return PathResult(
         lambdas=np.asarray(lambdas, np.float64),
@@ -722,10 +801,10 @@ def _to_path_result(lambdas, outs: ScanPathOutputs, lam_max_val, wall_s,
         # keep the exact total in extras.
         wall_times=per_step,
         screen_times=np.zeros((T,), np.float64),
-        screened=bool(screening),
+        screened=screened,
         kept_samples=np.zeros((T,), np.int64),
         verify_rounds=np.zeros((T,), np.int64),
-        rules=("feature_vi",) if screening else (),
+        rules=opts.get("rules", ("feature_vi",) if screened else ()),
         extras={
             "engine": "scan",
             "lam_max": float(lam_max_val),
@@ -757,6 +836,7 @@ def svm_path_scan(
     use_pallas: Optional[bool] = None,
     exact_lipschitz: bool = False,
     reduce: str = "mask",
+    rules=None,
 ) -> PathResult:
     """Solve the feature-screened path as ONE jitted XLA program.
 
@@ -765,6 +845,15 @@ def svm_path_scan(
     the certified keep set to ``tol``, and certifies its own anchor — but
     with zero host involvement between the first dispatch and the final
     transfer. See the module docstring for when to prefer which engine.
+
+    ``rules`` picks the screening-rule stack evaluated inside the jitted
+    step: any spec of a-priori-safe feature rules that ship a
+    :class:`~repro.core.rules.programs.RuleProgram` (``"feature_vi"``,
+    ``"edpp"``, ``"dvi"``, ``"auto"``, or a list of them — the bounds are
+    AND-ed elementwise). ``None`` keeps the legacy default
+    (``feature_vi`` when ``screening=True``); ``"none"`` disables
+    screening. Sample rules and verification-needing specs raise at
+    dispatch — use ``engine="host"`` for those.
 
     ``reduce="compact"`` turns the keep mask into a physically gathered
     fixed-capacity active set inside the step (``jnp.cumsum`` compaction,
@@ -795,7 +884,7 @@ def svm_path_scan(
     delta0 = jnp.asarray(0.0, X.dtype)
 
     static_kw = _static_opts(max_iters, screening, dynamic, screen_every,
-                             use_pallas, exact_lipschitz, reduce)
+                             use_pallas, exact_lipschitz, reduce, rules)
     engine = _engine_jit(static_kw, batched=None)
     t0 = time.perf_counter()
     outs = engine(X, y, jnp.asarray(lambdas, X.dtype), w0, b0, theta0,
@@ -819,7 +908,9 @@ def svm_path_scan_sharded(
     tau: float = SAFE_TAU,
     tol: float = 1e-9,
     max_iters: int = 4000,
+    dynamic: bool = False,
     exact_lipschitz: bool = False,
+    rules=None,
     data_axes=("data",),
 ) -> PathResult:
     """The scan engine as ONE ``shard_map``'d program on the ``svm_mesh``.
@@ -849,6 +940,17 @@ def svm_path_scan_sharded(
     from .distributed import mesh_collectives, shard_map  # lazy: no cycle
     from jax.sharding import PartitionSpec as P
 
+    if dynamic:
+        # validate at dispatch — previously this only surfaced as a
+        # NotImplementedError from deep inside the traced program
+        raise ValueError(
+            "dynamic in-solver screening is not supported on the sharded "
+            "scan engine: _dynamic_run has no collectives seam, so shard "
+            "blocks would compute unreduced partial sums. Use "
+            "svm_path_scan(dynamic=True) on a single device, or the host "
+            "engine (svm_path(engine='host', dynamic=True))."
+        )
+
     X = jnp.asarray(X)
     y = jnp.asarray(y)
     m, n = X.shape
@@ -864,7 +966,7 @@ def svm_path_scan_sharded(
     delta0 = jnp.asarray(0.0, X.dtype)
 
     static_kw = _static_opts(max_iters, screening, False, 1, False,
-                             exact_lipschitz, "mask")
+                             exact_lipschitz, "mask", rules)
     col = mesh_collectives(mesh, data_axes)
 
     def local_fn(Xb, yb, lams, w0b, b0b, th0b, d0b, lam0b, taub, tolb):
@@ -912,6 +1014,7 @@ def svm_path_batched(
     use_pallas: Optional[bool] = None,
     exact_lipschitz: bool = False,
     reduce: str = "mask",
+    rules=None,
 ) -> list[PathResult]:
     """``vmap`` of the scan engine over a batch of problems or grids.
 
@@ -952,7 +1055,7 @@ def svm_path_batched(
     X = jnp.asarray(X)
     y = jnp.asarray(y)
     static_kw = _static_opts(max_iters, screening, dynamic, screen_every,
-                             use_pallas, exact_lipschitz, reduce)
+                             use_pallas, exact_lipschitz, reduce, rules)
     compact = dict(static_kw)["reduce"] == "compact"
     if X.ndim == 2:
         # one problem, B grids — X/y/anchors stay unbatched (vmap broadcasts)

@@ -22,9 +22,23 @@ Architecture
   multiply (``kept_m * kept_n`` solver cost).
 * :mod:`.dvi` — feature screening from the elementwise-min of the latest and
   step-before-last anchors' VI bounds (Liu et al.-style DVI composition).
+* :mod:`.edpp` — Wang et al.'s enhanced-DPP projection region (the dual is
+  a polytope projection, so the normal-cone direction at the previous
+  anchor shrinks the certificate ball). Same sweep cost as ``feature_vi``,
+  strictly tighter keeps.
+* :mod:`.sifs` — Zhang et al.-style simultaneous feature + sample
+  reduction: EDPP feature half + verified sample half, alternated through
+  the driver's verification loop.
+* :mod:`.auto` — telemetry-driven stack selection: EDPP always (free), the
+  DVI old-anchor sweep only while its measured payoff covers its cost.
+* :mod:`.programs` — the jittable functional core: every a-priori-safe
+  feature rule above also ships a pure :class:`~.programs.RuleProgram`
+  (region pytree -> bounds) that the fast engines (``scan`` / ``compact`` /
+  ``batched`` / ``sharded`` / streamed) AND together inside their jitted
+  steps. See the :mod:`.base` docstring for the lowerability contract.
 
 Registered rules: ``"feature_vi"``, ``"sample_vi"``, ``"composite"``,
-``"dvi"``.
+``"dvi"``, ``"edpp"``, ``"sifs"``, ``"auto"``.
 
 Dynamic screening: every rule additionally exposes ``refresh(X, y, w, b,
 lam)`` — rebuild its region from the current solver iterate (gap-certified);
@@ -60,6 +74,16 @@ from .feature_vi import FeatureVIRule  # noqa: F401
 from .sample_vi import SampleVIRule, sample_margin_surplus, sample_slack_caps  # noqa: F401
 from .composite import CompositeRule  # noqa: F401
 from .dvi import DVIRule  # noqa: F401
+from .edpp import EDPPRule  # noqa: F401
+from .sifs import SIFSRule  # noqa: F401
+from .auto import AutoRule  # noqa: F401
+from .programs import (  # noqa: F401
+    PROGRAMS,
+    RuleProgram,
+    resolve_programs,
+    stack_bounds,
+    stack_needs_history,
+)
 
 __all__ = [
     "AXIS_FEATURES",
@@ -70,10 +94,18 @@ __all__ = [
     "SampleVIRule",
     "CompositeRule",
     "DVIRule",
+    "EDPPRule",
+    "SIFSRule",
+    "AutoRule",
+    "PROGRAMS",
+    "RuleProgram",
     "available_rules",
     "get_rule",
     "make_rules",
     "register_rule",
+    "resolve_programs",
     "sample_margin_surplus",
     "sample_slack_caps",
+    "stack_bounds",
+    "stack_needs_history",
 ]

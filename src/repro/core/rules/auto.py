@@ -1,0 +1,129 @@
+"""``rules="auto"``: telemetry-driven per-step rule-stack selection.
+
+The ROADMAP's closing-the-loop item: bounds are cheap relative to solves,
+so running *several* rules and intersecting pays exactly when the predicted
+solver-FLOP saving exceeds the extra sweep's cost. This rule implements
+that policy with the telemetry the driver already observes per step (kept
+counts, screen/solve wall split):
+
+* The EDPP bound is always evaluated — it shares every reduction with the
+  VI sweep (zero extra data passes) and its region is min-composed with
+  VI's, so it dominates ``feature_vi`` at identical cost. This is the
+  "free" floor of the stack.
+* The one genuinely *optional* sweep in the zoo is the DVI old-anchor bound
+  (one extra ``X @ (y * theta0)`` pass). Its payoff is measured, not
+  assumed: every ``probe_every`` steps the sweep runs and we record how
+  many extra features it screened and what it cost; between probes it keeps
+  running only while
+
+      (extra features screened) x (EMA solve-seconds per kept feature)
+          > (EMA sweep seconds)
+
+  i.e. while the predicted solve saving pays for the sweep. The driver
+  feeds solve walls in through :meth:`observe` after each step.
+
+Safety is unconditional — every candidate bound is individually safe, so
+any intersection is; the policy only decides *spend*, never correctness.
+
+On one-shot engines (``engine="scan"`` etc.) there is no per-step host in
+the loop to observe telemetry, so ``"auto"`` resolves statically to the
+dominant free stack ``("edpp",)`` via ``program = "edpp"``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..screening import (
+    SAFE_TAU,
+    anchor_stats,
+    feature_reductions,
+    fixed_stats,
+    row_dot,
+)
+from .base import ConvexRegion, register_rule
+from .feature_vi import FeatureVIRule
+from .programs import stack_bounds_jit
+
+__all__ = ["AutoRule"]
+
+
+@register_rule("auto")
+class AutoRule(FeatureVIRule):
+    """Auto-tuned feature-rule stack: EDPP always, the DVI old-anchor sweep
+    when its measured payoff covers its measured cost."""
+
+    program = "edpp"  # static resolution on engines with no host in the loop
+
+    def __init__(self, tau: float = SAFE_TAU, probe_every: int = 3):
+        super().__init__(tau=tau)
+        self.probe_every = int(probe_every)
+        self._anchor: Optional[tuple] = None   # (lam0, theta0, delta0)
+        self._solve_per_feat: Optional[float] = None  # EMA sec / kept feature
+        self._use_extra = False
+        self._since_probe = 0
+        self.telemetry: list[dict] = []
+
+    def prepare(self, X: jax.Array, y: jax.Array) -> None:
+        super().prepare(X, y)
+        self._anchor = None
+        self._use_extra = False
+        self._since_probe = 0
+        self.telemetry = []
+
+    # -- the driver's per-step telemetry hook ------------------------------
+    def observe(self, *, solve_seconds: float, kept: int, **_) -> None:
+        """Fold one step's solve wall into the cost model (EMA)."""
+        per = float(solve_seconds) / max(int(kept), 1)
+        self._solve_per_feat = (per if self._solve_per_feat is None
+                                else 0.5 * self._solve_per_feat + 0.5 * per)
+
+    # -- bounds ------------------------------------------------------------
+    def _stats(self, X, y, region):
+        d_theta = row_dot(X, y * region.theta1)
+        if self._static is not None:
+            d_one, d_y, d_sq = self._static
+        else:
+            red = feature_reductions(X, y, region.theta1)
+            d_one, d_y, d_sq = red.d_one, red.d_y, red.d_sq
+        fixed = fixed_stats(y, d_one, d_y, d_sq)
+        a1 = anchor_stats(y, region.lam1, region.theta1, region.delta, d_theta)
+        return fixed, a1
+
+    def bounds(self, X: jax.Array, y: jax.Array, region: ConvexRegion) -> jax.Array:
+        fixed, a1 = self._stats(X, y, region)
+        lam2 = jnp.asarray(region.lam2, a1.d_theta.dtype)
+        b = stack_bounds_jit(("edpp",), lam2, (a1,), fixed)
+
+        anchor = self._anchor
+        probe = self._since_probe >= self.probe_every
+        step_info = dict(extra_swept=False, extra_screened=0, sweep_s=0.0)
+        if anchor is not None and anchor[0] > region.lam2 and (
+                self._use_extra or probe):
+            lam0, theta0, delta0 = anchor
+            t0 = time.perf_counter()
+            a0 = anchor_stats(y, lam0, theta0, delta0,
+                              row_dot(X, y * theta0))
+            b0 = stack_bounds_jit(("feature_vi",), lam2, (a0,), fixed)
+            b_np = np.asarray(b)
+            b0_np = np.asarray(b0)  # forces the sweep; honest wall
+            sweep_s = time.perf_counter() - t0
+            extra = int(np.sum(b_np >= self.tau)
+                        - np.sum(np.minimum(b_np, b0_np) >= self.tau))
+            saving = extra * (self._solve_per_feat or 0.0)
+            self._use_extra = saving > sweep_s
+            self._since_probe = 0
+            b = jnp.minimum(b, b0)
+            step_info = dict(extra_swept=True, extra_screened=extra,
+                             sweep_s=sweep_s)
+        else:
+            self._since_probe += 1
+        self._anchor = (region.lam1, region.theta1, region.delta)
+        self.telemetry.append(dict(lam2=float(region.lam2),
+                                   use_extra=self._use_extra, **step_info))
+        return b

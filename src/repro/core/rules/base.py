@@ -31,6 +31,35 @@ Registry: implementations self-register under a short name
 be configured with strings — ``make_rules("composite")`` — without importing
 concrete classes.
 
+The functional rule-program contract (scan lowerability)
+--------------------------------------------------------
+The OO protocol above is host-side: ``bounds`` may allocate, branch on
+Python state, or keep history on ``self`` — none of which can run inside
+the jitted engines (``svm_path(engine="scan"|"batched")``, the sharded scan,
+the path server's batched step, the chunk-streamed screen). A rule becomes
+engine-generic by *also* shipping a pure functional twin, a
+:class:`~repro.core.rules.programs.RuleProgram`, and linking to it via the
+class attribute ``program = "<name>"``. The program must provide:
+
+* ``n_anchors`` — how much certified-anchor history the bound consumes
+  (1 = the latest anchor; 2 = latest + step-before-last, which the scan
+  engines then carry through the ``lax.scan`` carry);
+* ``bounds(lam2, anchors, fixed)`` — a pure, collective-free, traceable
+  function from the region pytree
+  (:class:`~repro.core.screening.AnchorStats` anchors, oldest-to-latest,
+  plus the hoisted :class:`~repro.core.screening.FixedStats`) to per-feature
+  upper bounds on ``|fhat_j^T theta*(lam2)|``. Every cross-sample reduction
+  must already be inside those stats — the *engine* computes them with its
+  own collectives (psum on a mesh, chunk accumulation out of core), so one
+  program serves local, sharded, batched, and streamed execution unchanged.
+
+Only a-priori-safe *feature* rules qualify (``axis == "features"``,
+``needs_verification == False``): sample rules need the a-posteriori KKT
+loop, which is inherently host-side. ``programs.resolve_programs`` turns
+any user spec into a static program-name stack and raises for rules that
+don't satisfy this contract; host-only rules (``program = None``) keep
+working through :class:`~repro.core.path.PathDriver` exactly as before.
+
 Dynamic (in-solver) screening
 -----------------------------
 A :class:`ConvexRegion` built *between* lambda steps is frozen for the whole
@@ -146,6 +175,11 @@ class ScreeningRule:
     #: ``needs_verification=True`` must be checked via :meth:`verify` at the
     #: solved point before the step is accepted.
     needs_verification: bool = False
+    #: name of this rule's jittable functional twin in
+    #: ``rules/programs.PROGRAMS`` (the scan-lowerable "rule program"), or
+    #: ``None`` for host-only rules. See the module docstring for the
+    #: contract a program must satisfy.
+    program: Optional[str] = None
 
     # -- region -----------------------------------------------------------
     @staticmethod

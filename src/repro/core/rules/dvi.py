@@ -46,7 +46,15 @@ __all__ = ["DVIRule"]
 @register_rule("dvi")
 class DVIRule(FeatureVIRule):
     """Feature screening from the min of the last and step-before-last
-    anchors' VI bounds. A-priori safe (each constituent bound is)."""
+    anchors' VI bounds. A-priori safe (each constituent bound is).
+
+    Scan-lowerable via ``PROGRAMS["dvi"]`` (``n_anchors = 2``): the scan
+    engines carry the step-before-last anchor in the scan carry instead of
+    on this object, seeding it with a copy of the initial anchor so step 1
+    degenerates to plain VI exactly like the host path does.
+    """
+
+    program = "dvi"
 
     def __init__(self, tau: float = SAFE_TAU):
         super().__init__(tau=tau)

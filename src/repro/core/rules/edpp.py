@@ -1,0 +1,69 @@
+"""EDPP rule: Wang et al.'s enhanced-DPP projection region for the SVM dual.
+
+The squared-hinge L1-SVM dual is a projection problem:
+``theta*(lam) = P_Theta((1/lam) 1)`` with ``Theta`` the feasible polytope
+(see ``core/dual.py``). That is exactly the structure EDPP ("Scaling SVM and
+Least Absolute Deviations via Exact Data Reduction", and the lasso original
+"Lasso Screening Rules via Dual Polytope Projection") exploits: with
+``o_k = (1/lam_k) 1``,
+
+    v1 = o1 - theta*(lam1)        in the normal cone N_Theta(theta*(lam1)),
+    v2 = o2 - theta*(lam1),
+    v2perp = v2 - (<v1, v2>/||v1||^2) v1,
+
+the firm-nonexpansiveness of projections pins ``theta*(lam2)`` inside
+
+    Ball(theta*(lam1) + v2perp/2,  ||v2perp|| / 2).
+
+The plain DPP ball (``v2perp -> v2``) is the paper's VI ball; projecting out
+the known normal-cone direction shrinks the radius — on geometric grids
+substantially — so EDPP screens strictly more in practice at *identical*
+sweep cost (the bound needs the same four per-feature reductions the VI
+sweep already computes; see ``rules/programs.py`` for the full bound math,
+the inexact-anchor inflation, and the degenerate-``v1`` fallback).
+
+This class is the thin host-driver wrapper over ``PROGRAMS["edpp"]``; the
+program min-composes with the VI bound from the same anchor, so EDPP keeps
+are provably a subset of VI keeps at equal anchors (the safe-intersection
+relaxation, same principle as the DVI composition).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..screening import (
+    SAFE_TAU,
+    anchor_stats,
+    feature_reductions,
+    fixed_stats,
+    row_dot,
+)
+from .base import ConvexRegion, register_rule
+from .feature_vi import FeatureVIRule
+from .programs import stack_bounds_jit
+
+__all__ = ["EDPPRule"]
+
+
+@register_rule("edpp")
+class EDPPRule(FeatureVIRule):
+    """A-priori-safe feature screening from the EDPP projection region
+    (min-composed with the VI bound). Drop-in wherever ``feature_vi`` runs:
+    host driver, every scan engine, the path server, and chunked storage."""
+
+    program = "edpp"
+
+    def bounds(self, X: jax.Array, y: jax.Array, region: ConvexRegion) -> jax.Array:
+        d_theta = row_dot(X, y * region.theta1)
+        if self._static is not None:
+            d_one, d_y, d_sq = self._static
+        else:
+            red = feature_reductions(X, y, region.theta1)
+            d_one, d_y, d_sq = red.d_one, red.d_y, red.d_sq
+        fixed = fixed_stats(y, d_one, d_y, d_sq)
+        a1 = anchor_stats(y, region.lam1, region.theta1, region.delta, d_theta)
+        return stack_bounds_jit(("edpp",),
+                                jnp.asarray(region.lam2, d_theta.dtype),
+                                (a1,), fixed)

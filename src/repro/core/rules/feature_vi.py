@@ -35,10 +35,16 @@ class FeatureVIRule(ScreeningRule):
     A-priori safe: a discarded feature provably has ``w_j*(lam2) = 0`` (given
     ``||theta1 - theta*(lam1)|| <= region.delta``), so no verification pass is
     needed.
+
+    ``program`` links this class to its jittable functional twin
+    (``rules/programs.py``): the fast engines evaluate
+    ``PROGRAMS["feature_vi"]`` over engine-computed anchor stats; this class
+    is the host-driver wrapper around the same ``core/screening.py`` math.
     """
 
     axis = AXIS_FEATURES
     needs_verification = False
+    program = "feature_vi"
 
     def __init__(self, tau: float = SAFE_TAU):
         self.tau = float(tau)

@@ -1,0 +1,279 @@
+"""Jittable functional core of the screening-rule zoo: *rule programs*.
+
+The OO :class:`~repro.core.rules.base.ScreeningRule` protocol is the host
+driver's configuration surface; the fast engines (``scan`` / ``compact`` /
+``batched`` / ``sharded`` / streamed) cannot call host objects from inside a
+jitted step. This module is the seam between the two worlds: each
+a-priori-safe *feature* rule is lowered to a :class:`RuleProgram` — a pure
+function from a region pytree (:class:`~repro.core.screening.AnchorStats`
+anchors + :class:`~repro.core.screening.FixedStats` statics) to per-feature
+bound scores — and the engines evaluate a static *stack* of programs by
+ANDing their keeps (equivalently: taking the elementwise min of their
+bounds) inside the step.
+
+Contract (what makes a rule scan-lowerable)
+-------------------------------------------
+* ``n_anchors`` declares how much anchor history the program consumes: 1 =
+  the latest certified anchor only; 2 = latest plus the step-before-last
+  (the scan engines extend their carry with the older anchor exactly when
+  some program in the stack asks for it).
+* ``bounds(lam2, anchors, fixed)`` must be pure, collective-free, and
+  traceable — every cross-sample reduction it needs must already be inside
+  the :class:`AnchorStats`/:class:`FixedStats` inputs, which the *engine*
+  computes with its own collectives (psum on a mesh, chunk accumulation out
+  of core). ``anchors`` is oldest-to-latest, length ``n_anchors``.
+* The score convention is the VI rule's: an upper bound on
+  ``|fhat_j^T theta*(lam2)|``; features with ``bounds < tau`` are safely
+  dropped. Programs for regions that are not supersets of the VI set must
+  still return a *valid* upper bound (min-composition with other programs
+  is then automatically safe).
+
+Programs
+--------
+``feature_vi``
+    The paper's VI region (Ball ∩ Halfspace ∩ Hyperplane), one anchor.
+``dvi``
+    Elementwise min of the latest and step-before-last anchors' VI bounds
+    (Liu et al.-style composition), two anchors. Degenerates to plain VI
+    when the older anchor duplicates the latest (how scan seeds step 1).
+``edpp``
+    Wang et al.'s enhanced-DPP projection region, one anchor. The dual path
+    optimum is the projection ``theta*(lam) = P_Theta((1/lam) 1)``, so
+    ``v1 = o1 - theta1`` (with ``o1 = (1/lam1) 1``) lies in the normal cone
+    at ``theta1`` and Wang et al.'s Thm. 19 confines ``theta*(lam2)`` to
+
+        || theta2 - (theta1 + v2perp/2) || <= ||v2perp|| / 2,
+        v2 = o2 - theta1,  v2perp = v2 - (<v1,v2>/||v1||^2) v1.
+
+    All scalar geometry falls out of the same four reductions the VI sweep
+    already computes — EDPP costs *zero extra data passes*. The ball is
+    intersected with the ``y^T theta = 0`` hyperplane (dual feasibility)
+    and, for the subset guarantee the engines advertise, min-composed with
+    the VI bound from the same anchor: EDPP keeps are provably a subset of
+    VI keeps at equal anchors. Inexact anchors (``delta > 0``) inflate the
+    projection radius by the normal-cone perturbation bound (see
+    ``_edpp_bounds``); near-degenerate ``v1`` (balanced classes at
+    ``lam_max``, or ``||v1|| ~ delta``) falls back to the plain DPP ball =
+    the VI ball.
+
+Stacks
+------
+:func:`resolve_programs` normalizes any user-facing rules spec (string
+name, iterable, rule instances, composite containers — everything
+:func:`~repro.core.rules.base.make_rules` accepts) into a static tuple of
+program names, raising ``ValueError`` for rules that cannot be lowered
+(sample rules need verification; the engines support the a-priori-safe
+feature rule only specs). ``"auto"`` resolves to ``("edpp",)`` on one-shot
+engines: EDPP dominates VI at identical sweep cost, and the telemetry that
+could justify extra sweeps only exists on the host driver (see
+``core/rules/auto.py``).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..screening import (
+    _EPS,
+    AnchorStats,
+    FixedStats,
+    finalize_from_anchor,
+)
+
+__all__ = [
+    "RuleProgram",
+    "PROGRAMS",
+    "resolve_programs",
+    "stack_bounds",
+    "stack_bounds_jit",
+    "stack_needs_history",
+    "max_anchors",
+]
+
+
+class RuleProgram(NamedTuple):
+    """A scan-lowerable screening rule: pure bounds over precomputed stats."""
+
+    name: str
+    n_anchors: int
+    bounds: Callable[..., jax.Array]  # (lam2, anchors, fixed) -> (m,)
+
+
+def _vi_bounds(lam2, anchors: Tuple[AnchorStats, ...],
+               fixed: FixedStats) -> jax.Array:
+    """Paper VI region from the latest anchor (identical arithmetic to the
+    pre-refactor engine code paths)."""
+    return finalize_from_anchor(anchors[-1], lam2, fixed)
+
+
+def _dvi_bounds(lam2, anchors: Tuple[AnchorStats, ...],
+                fixed: FixedStats) -> jax.Array:
+    """Min of latest and step-before-last VI bounds. The older anchor only
+    contributes while its ``lam`` still exceeds ``lam2`` (always true on a
+    decreasing grid, but cheap to guard for custom grids)."""
+    b = finalize_from_anchor(anchors[-1], lam2, fixed)
+    if len(anchors) >= 2:
+        a0 = anchors[0]
+        b0 = finalize_from_anchor(a0, lam2, fixed)
+        b = jnp.where(a0.lam > jnp.asarray(lam2, b.dtype), jnp.minimum(b, b0), b)
+    return b
+
+
+def _edpp_bounds(lam2, anchors: Tuple[AnchorStats, ...],
+                 fixed: FixedStats) -> jax.Array:
+    """EDPP projection ball ∩ hyperplane, min-composed with the VI bound.
+
+    Geometry (everything from the anchor's scalars; o_k = (1/lam_k) 1):
+
+        v1 = o1 - theta1          (normal-cone direction at theta1)
+        v2 = o2 - theta1          (DPP ball diameter; ||v2||/2 = VI radius)
+        v2perp = v2 - mu v1,  mu = <v1, v2>/||v1||^2
+        theta2 in Ball(theta1 + v2perp/2, ||v2perp||/2)
+
+    Inexact anchor (||theta1 - theta1*|| <= delta): v1 and v2 each move by
+    at most delta, and the rank-1 projector along v1 moves by at most
+    2 delta / (||v1|| - delta), so the true ball sits inside ours after
+    inflating the radius by  2 delta + 2 delta (||v2|| + delta) /
+    max(||v1|| - delta, eps). When ||v1|| is itself at noise scale the
+    projection direction is meaningless: fall back to mu = 0, which is the
+    plain DPP ball = the VI ball with the standard delta inflation.
+    """
+    a = anchors[-1]
+    lam2 = jnp.asarray(lam2, a.d_theta.dtype)
+    inv1 = 1.0 / a.lam
+    inv2 = 1.0 / lam2
+    ysq = fixed.n_tot
+
+    # scalar geometry of v1, v2
+    v1_sq = a.theta_sq - 2.0 * inv1 * a.theta_dot_one + inv1 * inv1 * fixed.n_tot
+    v2_sq = a.theta_sq - 2.0 * inv2 * a.theta_dot_one + inv2 * inv2 * fixed.n_tot
+    v1v2 = (inv1 * inv2 * fixed.n_tot
+            - (inv1 + inv2) * a.theta_dot_one + a.theta_sq)
+    v1_norm = jnp.sqrt(jnp.maximum(v1_sq, 0.0))
+    v2_norm = jnp.sqrt(jnp.maximum(v2_sq, 0.0))
+
+    # degenerate normal-cone direction: theta1 ~ o1 analytically (balanced
+    # classes at lam_max) or ||v1|| drowned by the inexactness radius
+    scale = jnp.sqrt(a.theta_sq + inv1 * inv1 * fixed.n_tot)
+    degenerate = v1_norm <= jnp.maximum(10.0 * a.delta, 1e-6 * scale)
+    mu = jnp.where(degenerate, 0.0, v1v2 / jnp.maximum(v1_sq, _EPS))
+
+    # projection ball: center theta1 + v2perp/2, radius ||v2perp||/2
+    vperp_sq = jnp.maximum(v2_sq - 2.0 * mu * v1v2 + mu * mu * v1_sq, 0.0)
+    r = 0.5 * jnp.sqrt(vperp_sq)
+    infl = jnp.where(
+        degenerate, a.delta,
+        2.0 * a.delta + 2.0 * a.delta * (v2_norm + a.delta)
+        / jnp.maximum(v1_norm - a.delta, _EPS))
+    r_infl = r + infl
+
+    # intersect with the dual-feasibility hyperplane y^T theta = 0
+    y_v1 = inv1 * fixed.one_y - a.theta_dot_y
+    y_v2 = inv2 * fixed.one_y - a.theta_dot_y
+    yc = a.theta_dot_y + 0.5 * (y_v2 - mu * y_v1)     # y^T center
+    r_h_sq = r_infl * r_infl - yc * yc / ysq
+
+    # per-feature terms, v = fhat_j
+    v_v1 = inv1 * fixed.d_one - a.d_theta
+    v_v2 = inv2 * fixed.d_one - a.d_theta
+    v_c = a.d_theta + 0.5 * (v_v2 - mu * v_v1)        # fhat^T center
+    v_ch = v_c - (yc / ysq) * fixed.d_y
+    qv_sq = jnp.maximum(fixed.d_sq - fixed.d_y * fixed.d_y / ysq, 0.0)
+    ball = (jnp.abs(v_ch)
+            + jnp.sqrt(jnp.maximum(r_h_sq, 0.0)) * jnp.sqrt(qv_sq))
+
+    # min-compose with the VI bound from the same anchor: valid (both
+    # regions contain theta2, so the min of the maxes is an upper bound on
+    # the max over their intersection) and it guarantees EDPP keeps are a
+    # subset of VI keeps at equal anchors.
+    return jnp.minimum(ball, _vi_bounds(lam2, anchors, fixed))
+
+
+PROGRAMS = {
+    "feature_vi": RuleProgram("feature_vi", 1, _vi_bounds),
+    "dvi": RuleProgram("dvi", 2, _dvi_bounds),
+    "edpp": RuleProgram("edpp", 1, _edpp_bounds),
+}
+
+
+def max_anchors(programs: Sequence[RuleProgram]) -> int:
+    return max((p.n_anchors for p in programs), default=1)
+
+
+def stack_needs_history(programs: Sequence[RuleProgram]) -> bool:
+    """Does this stack need the step-before-last anchor carried?"""
+    return max_anchors(programs) > 1
+
+
+def stack_bounds(programs: Sequence[RuleProgram], lam2,
+                 anchors: Tuple[AnchorStats, ...],
+                 fixed: FixedStats) -> jax.Array:
+    """Elementwise-min bound of a rule stack (AND of the keeps).
+
+    ``anchors`` is oldest-to-latest; each program sees the most recent
+    ``n_anchors`` of them. Valid because every program's bound is an upper
+    bound on the same quantity — intersection of safe regions is safe.
+    """
+    b = None
+    for p in programs:
+        pb = p.bounds(lam2, anchors[-p.n_anchors:], fixed)
+        b = pb if b is None else jnp.minimum(b, pb)
+    return b
+
+
+@partial(jax.jit, static_argnames=("names",))
+def stack_bounds_jit(names: tuple, lam2, anchors: Tuple[AnchorStats, ...],
+                     fixed: FixedStats) -> jax.Array:
+    """Jitted :func:`stack_bounds`, keyed by program *names* (static).
+
+    The host-driver rule wrappers (EDPP, auto) go through this instead of
+    the eager composition: a stack bound is dozens of small elementwise
+    ops, and per-step eager dispatch costs more than the sweep itself on
+    mid-size instances. One compile per stack shape; anchors/fixed are
+    pytrees so the cache keys only on names + dtypes/shapes.
+    """
+    return stack_bounds(tuple(PROGRAMS[nm] for nm in names), lam2, anchors,
+                        fixed)
+
+
+def resolve_programs(spec, screening: bool = True) -> tuple:
+    """Normalize a user rules spec into a static tuple of program names.
+
+    ``None`` defers to the legacy ``screening`` flag (the VI rule, or no
+    screening); ``"none"``/empty specs disable screening. Anything else is
+    flattened through :func:`~repro.core.rules.base.make_rules` (so strings,
+    instances, composites, and mixes all work) and each flattened rule must
+    link to a registered :class:`RuleProgram` via its ``program`` attribute.
+    Raises ``ValueError`` naming the offending rules otherwise — on-device
+    engines must reject, not silently ignore, specs they can't lower.
+    """
+    if spec is None:
+        return ("feature_vi",) if screening else ()
+    if isinstance(spec, str) and spec.lower() in ("none", ""):
+        return ()
+    from .base import AXIS_FEATURES, make_rules
+
+    rules = make_rules(spec)
+    if not rules:
+        return ()
+    names, bad = [], []
+    for r in rules:
+        prog = getattr(r, "program", None)
+        if (prog is None or prog not in PROGRAMS
+                or r.axis != AXIS_FEATURES or r.needs_verification):
+            bad.append(r.name)
+        else:
+            names.append(prog)
+    if bad:
+        raise ValueError(
+            "on-device engines support a-priori-safe feature rule only "
+            f"specs (scan-lowerable programs: {tuple(sorted(PROGRAMS))}); "
+            f"cannot lower rule(s) {bad!r} — use engine='host' for rules "
+            "that need verification or the sample axis"
+        )
+    # dedupe preserving order: evaluating a program twice is pure waste
+    return tuple(dict.fromkeys(names))

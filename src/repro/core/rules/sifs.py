@@ -1,0 +1,61 @@
+"""SIFS rule: simultaneous feature + sample reduction, alternating per step.
+
+Zhang et al. ("Scaling Up Sparse SVM by Simultaneous Feature and Sample
+Reduction") interleave an *inactive feature* screen with an *inactive
+sample* screen, each round tightening the other's region, until neither
+shrinks. This repo's transplant of that scheme to the squared-hinge + pure
+L1 dual keeps the shape but swaps the halves for what is provable here:
+
+* feature half — the EDPP projection region (:mod:`.edpp`), the strongest
+  a-priori-safe feature rule in the zoo;
+* sample half — the margin-certified sample screen with a-posteriori KKT
+  verification (:mod:`.sample_vi`). A-priori-safe sample screening is
+  provably impossible for this loss (every sample's subgradient support is
+  unbounded — see the honest derivation in ``sample_vi.py``), so the
+  alternating refinement happens through the driver's existing
+  ``solve_with_verification`` loop: feature mask -> sample mask -> reduced
+  solve -> KKT check re-admits violators -> re-solve. Each verification
+  round *is* one SIFS alternation, with the certificate exact at
+  termination instead of a-priori.
+
+Like :class:`~repro.core.rules.composite.CompositeRule` this is a container:
+``make_rules("sifs")`` flattens it to ``[EDPPRule, SampleVIRule]`` and the
+driver applies one per axis. Host engine only (the sample half needs
+verification); on the scan engines use ``rules="edpp"`` for the feature
+half alone.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from ..screening import SAFE_TAU
+from .base import ScreeningRule, register_rule
+from .edpp import EDPPRule
+from .sample_vi import SampleVIRule
+
+__all__ = ["SIFSRule"]
+
+
+@register_rule("sifs")
+class SIFSRule(ScreeningRule):
+    """Container: EDPP feature screen + verified sample screen, alternated
+    through the driver's verification loop."""
+
+    axis = "both"
+
+    def __init__(self, tau: float = SAFE_TAU,
+                 rules: Optional[Sequence[ScreeningRule]] = None):
+        self.rules: list[ScreeningRule] = (
+            list(rules) if rules is not None
+            else [EDPPRule(tau=tau), SampleVIRule()]
+        )
+
+    def subrules(self) -> list[ScreeningRule]:
+        return list(self.rules)
+
+    def bounds(self, X, y, region):  # pragma: no cover - container only
+        raise NotImplementedError(
+            "SIFSRule is a container; flatten with make_rules() and apply "
+            "each constituent per axis"
+        )

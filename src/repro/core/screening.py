@@ -333,6 +333,87 @@ def screen_bounds_from_reductions(
 _finalize_bounds = jax.jit(screen_bounds_from_reductions)
 
 
+class AnchorStats(NamedTuple):
+    """A dual anchor ``theta1`` at ``lam``, as the scalars + one reduction
+    every screening-rule program consumes (the anchor half of a rule's
+    *region pytree*).
+
+    Engines own the sweeps that produce these (psum-reduced on a mesh,
+    chunk-accumulated out of core, plain reductions in core), so a rule
+    program evaluated on :class:`AnchorStats` is pure and collective-free —
+    the property that makes it lowerable into ``lax.scan``/``vmap``/
+    ``shard_map`` bodies unchanged.
+    """
+
+    lam: jax.Array            # anchor regularization (lam1)
+    delta: jax.Array          # ||theta1 - theta*(lam)|| inexactness radius
+    theta_dot_one: jax.Array  # theta1^T 1
+    theta_dot_y: jax.Array    # theta1^T y
+    theta_sq: jax.Array       # ||theta1||^2
+    d_theta: jax.Array        # (m,) fhat_j^T theta1 = f_j^T (y * theta1)
+
+
+class FixedStats(NamedTuple):
+    """Theta-independent statics shared by every anchor and every rule
+    (the fixed half of the region pytree; hoisted once per path)."""
+
+    d_one: jax.Array   # (m,) fhat_j^T 1
+    d_y: jax.Array     # (m,) fhat_j^T y
+    d_sq: jax.Array    # (m,) ||fhat_j||^2
+    one_y: jax.Array   # y^T 1
+    n_tot: jax.Array   # ||y||^2 = #live samples
+
+
+def anchor_stats(y: jax.Array, lam, theta1: jax.Array, delta,
+                 d_theta: jax.Array) -> AnchorStats:
+    """Build :class:`AnchorStats` from an in-core anchor (caller supplies the
+    one O(mn) reduction ``d_theta``). Scalar arithmetic matches
+    :func:`shared_scalars` exactly so anchor-based and legacy entry points
+    produce bitwise-identical :class:`ScreenShared` values."""
+    dtype = theta1.dtype
+    return AnchorStats(
+        lam=jnp.asarray(lam, dtype),
+        delta=jnp.asarray(delta, dtype),
+        theta_dot_one=jnp.sum(theta1),
+        theta_dot_y=theta1 @ y,
+        theta_sq=theta1 @ theta1,
+        d_theta=d_theta,
+    )
+
+
+def fixed_stats(y: jax.Array, d_one: jax.Array, d_y: jax.Array,
+                d_sq: jax.Array) -> FixedStats:
+    """Build :class:`FixedStats` from an in-core ``y`` and the three hoisted
+    per-feature reductions."""
+    n = y.shape[0]
+    return FixedStats(d_one=d_one, d_y=d_y, d_sq=d_sq, one_y=jnp.sum(y),
+                      n_tot=jnp.asarray(float(n), y.dtype))
+
+
+def shared_scalars_from_anchor(anchor: AnchorStats, lam2,
+                               fixed: FixedStats) -> ScreenShared:
+    """:class:`ScreenShared` for the VI set anchored at ``anchor``,
+    targeting ``lam2`` — the region-pytree face of
+    :func:`shared_scalars_from_stats`."""
+    return shared_scalars_from_stats(
+        anchor.lam, lam2, one_y=fixed.one_y,
+        theta_dot_one=anchor.theta_dot_one, theta_dot_y=anchor.theta_dot_y,
+        theta_sq=anchor.theta_sq, n_tot=fixed.n_tot, delta=anchor.delta,
+    )
+
+
+def finalize_from_anchor(anchor: AnchorStats, lam2,
+                         fixed: FixedStats) -> jax.Array:
+    """The VI bound finalizer over the region pytree: per-feature upper
+    bounds on ``|fhat_j^T theta*(lam2)|`` from one anchor's stats. Inlines
+    :func:`screen_bounds_from_reductions` (no nested jit) so engine traces
+    that embed it lower exactly as the pre-pytree code did."""
+    sh = shared_scalars_from_anchor(anchor, lam2, fixed)
+    red = FeatureReductions(d_theta=anchor.d_theta, d_one=fixed.d_one,
+                            d_y=fixed.d_y, d_sq=fixed.d_sq)
+    return screen_bounds_from_reductions(red, sh)
+
+
 def screen_bounds(
     X: jax.Array,
     y: jax.Array,

@@ -28,7 +28,11 @@ construction*, not cosmetic:
   problem to solver resolution.
 
 Slots in one batch share a bucket, so a serve group is keyed by
-``(m_b, n_b, screening, dynamic)``; the queue drains group by group
+``(m_b, n_b, rule_stack, dynamic)`` — ``rule_stack`` the job's rule spec
+resolved to a scan-lowerable program tuple (any single-anchor stack:
+``feature_vi``, ``edpp``, ``auto``, lists; ``()`` = screening off; ``dvi``
+is rejected because anchor *history* cannot ride a slot carry that jobs
+splice in and out of); the queue drains group by group
 (a job from a different bucket waits for the current group's slots to
 empty rather than forcing a recompile mid-group).
 
@@ -81,6 +85,7 @@ from repro.core.path_scan import (
     _to_path_result,
     compact_caps_batched,
 )
+from repro.core.rules.programs import PROGRAMS, resolve_programs
 from repro.core.screening import SAFE_TAU
 from repro.core.solver import lipschitz_estimate
 
@@ -95,7 +100,7 @@ class PathJob:
     lambdas: Optional[np.ndarray] = None  # explicit decreasing grid, else:
     n_lambdas: int = 10
     lam_min_ratio: float = 0.1
-    rules: str = "feature_vi"           # "feature_vi" | "none"
+    rules: str = "feature_vi"           # any single-anchor program stack
     dynamic: bool = False               # in-solver re-screen segments
 
     # -- server-owned runtime state (streamed results) ---------------------
@@ -107,18 +112,34 @@ class PathJob:
     t_done: float = field(default=0.0, repr=False)
 
     @property
-    def screening(self) -> bool:
-        if self.rules not in ("feature_vi", "none", None):
+    def rule_stack(self) -> tuple:
+        """The job's rule spec resolved to a scan-lowerable program tuple.
+
+        Raises for sample rules / verification-needing specs (the server
+        runs the batched scan step — same lowerability contract as
+        ``engine="scan"``) and for two-anchor programs like ``dvi``: the
+        slot carry holds exactly one anchor, and jobs splice in and out of
+        slots mid-path, so anchor *history* cannot ride the batch carry.
+        """
+        progs = resolve_programs(self.rules, screening=True)
+        deep = [nm for nm in progs if PROGRAMS[nm].n_anchors > 1]
+        if deep:
             raise ValueError(
-                "the path server runs the scan engine: built-in feature "
-                f"rule only ('feature_vi' | 'none'), got {self.rules!r}"
+                f"the path server's slot carry holds a single anchor; "
+                f"rules needing anchor history {deep} are not servable — "
+                f"run {self.rules!r} through engine='scan' or the host "
+                f"driver instead"
             )
-        return self.rules == "feature_vi"
+        return progs
+
+    @property
+    def screening(self) -> bool:
+        return bool(self.rule_stack)
 
     def group_key(self) -> tuple:
         """Jobs sharing this key can occupy slots of the same batch."""
         m, n = self.X.shape
-        return (_bucket(m), _bucket(n), self.screening, bool(self.dynamic))
+        return (_bucket(m), _bucket(n), self.rule_stack, bool(self.dynamic))
 
 
 class PathServer:
@@ -184,12 +205,15 @@ class PathServer:
 
     def _alloc_group(self, group: tuple):
         """(Re)allocate device slot state for a new bucket group."""
-        m_b, n_b, screening, dynamic = group
+        m_b, n_b, rule_stack, dynamic = group
         B, dt = self.slots, self.dtype
         self._group = group
-        self._cfg = _static_opts(self.max_iters, screening, dynamic,
+        # the resolved program tuple re-resolves identically (names are
+        # canonical), so it feeds _static_opts as the rules spec directly
+        self._cfg = _static_opts(self.max_iters, bool(rule_stack), dynamic,
                                  self.screen_every, self.use_pallas,
-                                 False, self.reduce)
+                                 False, self.reduce,
+                                 list(rule_stack) if rule_stack else "none")
         # _batched_path_step takes the option subset without `reduce` —
         # the reduction is carried by the caps tuple in the program key
         self._step_cfg = tuple(kv for kv in self._cfg if kv[0] != "reduce")

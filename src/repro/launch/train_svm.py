@@ -95,11 +95,10 @@ def run_path_scan(
     """
     from repro.core import svm_path_scan, svm_path_scan_sharded
 
-    if rules not in (None, "none", "feature_vi"):
-        raise ValueError(
-            "--engine scan supports the built-in feature rule only "
-            f"(got --rules {rules!r}); use --engine host for other rules"
-        )
+    # lowerability of the rule spec is validated by the engines at dispatch
+    # (rules/programs.resolve_programs): any a-priori-safe feature-rule
+    # stack (feature_vi / edpp / dvi / auto / lists) runs in the jitted
+    # step; sample rules and sifs raise with a pointer to --engine host
     screening = rules != "none"
     if model * data > 1:
         if reduce == "compact":
@@ -118,14 +117,16 @@ def run_path_scan(
         r = svm_path_scan_sharded(mesh, X, y, n_lambdas=n_lambdas,
                                   lam_min_ratio=lam_min_ratio, tol=tol,
                                   max_iters=max_iters, screening=screening,
-                                  exact_lipschitz=exact_lipschitz)
+                                  exact_lipschitz=exact_lipschitz,
+                                  rules=rules)
     else:
         r = svm_path_scan(X, y, n_lambdas=n_lambdas,
                           lam_min_ratio=lam_min_ratio, tol=tol,
                           max_iters=max_iters, reduce=reduce,
                           screening=screening, dynamic=dynamic,
                           screen_every=screen_every,
-                          exact_lipschitz=exact_lipschitz)
+                          exact_lipschitz=exact_lipschitz,
+                          rules=rules)
     m = X.shape[0]
     results = []
     for k in range(len(r.lambdas)):
@@ -319,15 +320,10 @@ def run_path_chunked(
     from repro.core import PathDriver
     from repro.sparse import FeatureChunked
 
-    if rules in (None, "none"):
-        rule_spec = []
-    elif rules == "feature_vi":
-        rule_spec = "feature_vi"
-    else:
-        raise ValueError(
-            f"--storage {storage} supports the built-in feature rule only "
-            f"(got --rules {rules!r}); sample rules need in-core X"
-        )
+    # any program-backed feature-rule stack streams (feature_vi / edpp /
+    # dvi / auto); the chunked driver lane validates lowerability itself
+    # and raises for sample rules, which need in-core X
+    rule_spec = [] if rules in (None, "none") else rules
     if storage == "csr":
         if csr is None:
             raise ValueError(
@@ -379,12 +375,14 @@ def main():
     ap.add_argument("--chunk-m", type=int, default=512,
                     help="feature rows per chunk for --storage chunked|csr")
     ap.add_argument("--rules", default="feature_vi",
-                    help="screening rules: feature_vi|sample_vi|composite|dvi|"
-                         "none (comma-separated for a custom mix)")
+                    help="screening rules: feature_vi|sample_vi|composite|"
+                         "dvi|edpp|sifs|auto|none (comma-separated for a "
+                         "custom mix; scan engine and chunked storage take "
+                         "a-priori-safe feature-rule stacks only)")
     ap.add_argument("--engine", choices=("host", "scan"), default="host",
                     help="host: per-step sharded loop with checkpointing; "
                          "scan: the whole path as one (shard_map'd) XLA "
-                         "program (feature rule only)")
+                         "program (a-priori-safe feature-rule stacks only)")
     ap.add_argument("--reduce", choices=("mask", "compact"), default="mask",
                     help="scan engine: mask-mode solve vs on-device "
                          "active-set compaction (single-device mesh only)")

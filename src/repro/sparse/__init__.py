@@ -19,7 +19,9 @@ from .screen_stream import (  # noqa: F401
     fixed_reductions,
     lambda_max_stream,
     screen_bounds_stream,
+    screen_stack_stream,
     screen_stream,
+    stream_anchor_stats,
     stream_feature_reductions,
 )
 from .solver_stream import (  # noqa: F401

@@ -38,11 +38,15 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.rules.programs import PROGRAMS, stack_bounds
 from repro.core.screening import (
     SAFE_TAU,
+    AnchorStats,
     FeatureReductions,
     _finalize_bounds,
     _row_stable_reductions,
+    anchor_stats,
+    fixed_stats,
     row_dot,
     shared_scalars,
 )
@@ -52,8 +56,10 @@ from .chunked import FeatureChunked
 __all__ = [
     "fixed_reductions",
     "stream_feature_reductions",
+    "stream_anchor_stats",
     "screen_bounds_stream",
     "screen_stream",
+    "screen_stack_stream",
     "lambda_max_stream",
 ]
 
@@ -170,6 +176,51 @@ def screen_stream(
     """Safe screening over chunked storage: ``(keep_mask, bounds)``."""
     bounds = screen_bounds_stream(fc, y, lam1, lam2, theta1, delta=delta,
                                   use_pallas=use_pallas)
+    return bounds >= tau, bounds
+
+
+def stream_anchor_stats(fc: FeatureChunked, y, lam1, theta1,
+                        delta=0.0) -> AnchorStats:
+    """:class:`~repro.core.screening.AnchorStats` from ONE stream of X.
+
+    The only chunk-streamed component is the per-feature ``d_theta`` sweep
+    (same row-stable kernel as :func:`stream_feature_reductions`); the
+    anchor scalars are in-core reductions of ``theta1``/``y``. Callers that
+    evaluate multi-anchor stacks (dvi) should hold on to the returned
+    pytree — re-using last step's anchor costs zero extra streams.
+    """
+    y = jnp.asarray(y, fc.dtype)
+    theta1 = jnp.asarray(theta1, fc.dtype)
+    yt = y * theta1
+    parts = [row_dot(dev, yt) if isinstance(dev, jnp.ndarray) else dev @ yt
+             for (_, _), dev in fc.stream()]
+    return anchor_stats(y, lam1, theta1, delta, jnp.concatenate(parts))
+
+
+def screen_stack_stream(
+    fc: FeatureChunked,
+    y,
+    lam2,
+    anchors,
+    rules,
+    tau: float = SAFE_TAU,
+) -> tuple[jax.Array, jax.Array]:
+    """Rule-program stack screening over chunked storage.
+
+    Generalizes :func:`screen_stream` from the hard-coded VI bound to any
+    stack of scan-lowerable rule programs (``rules`` is a tuple of names in
+    :data:`~repro.core.rules.programs.PROGRAMS`): the theta-independent
+    reductions come from the memoized :func:`fixed_reductions`, ``anchors``
+    are :func:`stream_anchor_stats` pytrees (oldest first — a two-anchor
+    program consumes the last two), and the bound finalizers are pure
+    per-feature arithmetic, so nothing here streams X again. XLA route
+    only; the fused Pallas chunk kernel stays VI-only (``screen_stream``),
+    which the host driver uses for the pure-VI fast path anyway.
+    """
+    progs = tuple(PROGRAMS[nm] for nm in rules)
+    d_one, d_y, d_sq = fixed_reductions(fc, y)
+    fixed = fixed_stats(jnp.asarray(y, fc.dtype), d_one, d_y, d_sq)
+    bounds = stack_bounds(progs, lam2, anchors, fixed)
     return bounds >= tau, bounds
 
 

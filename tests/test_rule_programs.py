@@ -1,0 +1,284 @@
+"""Rule-program zoo: host-vs-scan equivalence matrix, EDPP dominance,
+engine error paths, and composite round-trips.
+
+The tentpole contract under test: every a-priori-safe feature rule is ONE
+implementation — a pure rule program (``core/rules/programs.py``) — whether
+it runs through the host driver's OO protocol, the jitted scan/compact/
+batched engines, the path server, or chunked storage. So the matrix here
+asserts *objective* equality at tight tolerance across engines for every
+registered program-backed rule, not just the paper's VI rule.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.dual import lambda_max
+from repro.core.path import PathDriver, svm_path
+from repro.core.rules import (
+    PROGRAMS,
+    CompositeRule,
+    EDPPRule,
+    FeatureVIRule,
+    available_rules,
+    get_rule,
+    make_rules,
+    resolve_programs,
+)
+from repro.core.rules.base import AXIS_FEATURES
+from repro.core.screening import anchor_stats, fixed_stats, screen_bounds
+
+TOL = 1e-9
+
+
+def _problem(m=150, n=90, seed=0, planted=0):
+    rng = np.random.default_rng(seed)
+    X = (rng.normal(size=(m, n)) / np.sqrt(n)).astype(np.float64)
+    if planted:
+        w = np.zeros(m)
+        w[:planted] = rng.normal(size=planted) * 3
+        y = np.sign(X.T @ w + 0.1 * rng.normal(size=n))
+    else:
+        y = np.sign(rng.normal(size=n))
+        y[y == 0] = 1.0
+    return jnp.asarray(X), jnp.asarray(y)
+
+
+def _rel(a, b):
+    return np.max(np.abs(np.asarray(a) - np.asarray(b))
+                  / np.maximum(np.abs(np.asarray(b)), 1.0))
+
+
+def _program_rule_names():
+    """Every registered a-priori-safe feature rule that ships a program."""
+    names = []
+    for nm in available_rules():
+        cls = get_rule(nm)
+        if (getattr(cls, "program", None) in PROGRAMS
+                and getattr(cls, "axis", None) == AXIS_FEATURES
+                and not getattr(cls, "needs_verification", False)):
+            names.append(nm)
+    return sorted(names)
+
+
+def test_program_registry_covers_the_zoo():
+    names = _program_rule_names()
+    assert {"feature_vi", "edpp", "dvi", "auto"} <= set(names)
+    # containers and sample rules must NOT claim lowerability
+    assert getattr(get_rule("sample_vi"), "program", None) not in PROGRAMS
+    assert getattr(get_rule("composite"), "program", None) not in PROGRAMS
+    assert getattr(get_rule("sifs"), "program", None) not in PROGRAMS
+
+
+# -- the host-vs-scan equivalence matrix ---------------------------------
+
+
+@pytest.mark.parametrize("rule_name", _program_rule_names())
+@pytest.mark.parametrize("reduce", ["mask", "compact"])
+def test_host_vs_scan_equivalence(rule_name, reduce):
+    """Each program-backed rule solves the same path on host and scan
+    engines (mask AND compact reductions) to matching objectives."""
+    X, y = _problem(seed=3)
+    host = svm_path(X, y, n_lambdas=6, lam_min_ratio=0.3, rules=rule_name,
+                    engine="host", tol=TOL)
+    scan = svm_path(X, y, n_lambdas=6, lam_min_ratio=0.3, rules=rule_name,
+                    engine="scan", reduce=reduce, tol=TOL)
+    assert _rel(scan.objectives, host.objectives) < 1e-6, rule_name
+    assert scan.screened and host.screened
+    # resolved program stack is reported (auto statically resolves to edpp)
+    expected = resolve_programs(rule_name)
+    assert tuple(scan.rules) == expected
+
+
+@pytest.mark.parametrize("rule_name", _program_rule_names())
+def test_batched_grids_equivalence(rule_name):
+    """The batched engine (B grids, one problem) matches the single-path
+    scan engine per element for every program-backed rule."""
+    X, y = _problem(seed=5)
+    lmax = float(lambda_max(X, y))
+    grids = np.stack([np.geomspace(1.0, 0.3, 5),
+                      np.geomspace(1.0, 0.5, 5)]) * lmax
+    batched = svm_path(X, y, lambdas=grids, rules=rule_name,
+                       engine="batched", tol=TOL)
+    for i in range(2):
+        seq = svm_path(X, y, lambdas=grids[i], rules=rule_name,
+                       engine="scan", tol=TOL)
+        assert _rel(batched[i].objectives, seq.objectives) < 1e-6, rule_name
+
+
+# -- EDPP dominance -------------------------------------------------------
+
+
+def test_edpp_bound_dominates_vi_same_region():
+    """Unit level: on the SAME anchor, the EDPP program's bound is
+    everywhere <= the VI program's (guaranteed by min-composition), so its
+    keep set is a subset at any tau."""
+    X, y = _problem(seed=7)
+    lam1 = float(lambda_max(X, y))
+    lam2 = 0.5 * lam1
+    from repro.core.dual import theta_at_lambda_max
+    theta1 = theta_at_lambda_max(y, jnp.asarray(lam1, X.dtype))
+    d_theta = X @ (y * theta1)
+    red_one = X @ y
+    red_y = X @ jnp.ones_like(y)
+    red_sq = jnp.sum(X * X, axis=1)
+    fixed = fixed_stats(y, red_one, red_y, red_sq)
+    a1 = anchor_stats(y, lam1, theta1, 0.0, d_theta)
+    b_vi = PROGRAMS["feature_vi"].bounds(jnp.asarray(lam2), (a1,), fixed)
+    b_edpp = PROGRAMS["edpp"].bounds(jnp.asarray(lam2), (a1,), fixed)
+    assert bool(jnp.all(b_edpp <= b_vi + 1e-12))
+    # and the VI program reproduces the reference bound (same math; the
+    # reference route is jitted, so equality is to ulp-level tolerance)
+    ref = screen_bounds(X, y, lam1, lam2, theta1, delta=0.0)
+    np.testing.assert_allclose(np.asarray(b_vi), np.asarray(ref), rtol=1e-6)
+
+
+def test_edpp_tightens_vi_on_path():
+    """Path level: on a screen-effective instance EDPP keeps a strict
+    subset of VI's keeps at every step (strictly fewer in total), while
+    both paths solve to identical objectives."""
+    X, y = _problem(m=600, n=200, seed=0, planted=10)
+    vi = svm_path(X, y, engine="scan", n_lambdas=10, lam_min_ratio=0.3,
+                  rules="feature_vi", tol=TOL)
+    ed = svm_path(X, y, engine="scan", n_lambdas=10, lam_min_ratio=0.3,
+                  rules="edpp", tol=TOL)
+    mv = vi.extras["keep_masks"]
+    me = ed.extras["keep_masks"]
+    for t in range(len(vi.lambdas)):
+        assert bool(np.all(me[t] <= mv[t])), f"step {t}: EDPP kept ⊄ VI kept"
+    assert int(ed.kept.sum()) < int(vi.kept.sum())
+    assert _rel(ed.objectives, vi.objectives) < 1e-9
+
+
+def test_dvi_scan_matches_host_with_history():
+    """The dvi carry (old anchor riding the scan carry) reproduces the
+    host DVIRule's stateful anchor pair: same keeps, same objectives."""
+    X, y = _problem(m=300, n=120, seed=11, planted=8)
+    host = svm_path(X, y, n_lambdas=8, lam_min_ratio=0.3, rules="dvi",
+                    engine="host", tol=TOL)
+    scan = svm_path(X, y, n_lambdas=8, lam_min_ratio=0.3, rules="dvi",
+                    engine="scan", tol=TOL)
+    assert _rel(scan.objectives, host.objectives) < 1e-6
+    np.testing.assert_array_equal(scan.kept[1:], host.kept[1:])
+
+
+# -- composite round-trip (satellite: container-only bounds error) --------
+
+
+def test_composite_feature_stack_roundtrips_host_and_scan():
+    """A composite of *feature* rules flattens through make_rules() at
+    every call site — neither engine ever calls the container's bounds —
+    and the identical spec solves identically on host and scan."""
+    spec = CompositeRule([FeatureVIRule(), EDPPRule()])
+    assert resolve_programs(spec) == ("feature_vi", "edpp")
+    X, y = _problem(seed=13)
+    host = svm_path(X, y, n_lambdas=6, lam_min_ratio=0.3, rules=[spec],
+                    engine="host", tol=TOL)
+    scan = svm_path(X, y, n_lambdas=6, lam_min_ratio=0.3, rules=[spec],
+                    engine="scan", tol=TOL)
+    # the container spec and its hand-flattened list resolve to the SAME
+    # static options, hence the same cached engine: bitwise identical
+    flat = svm_path(X, y, n_lambdas=6, lam_min_ratio=0.3,
+                    rules=["feature_vi", "edpp"], engine="scan", tol=TOL)
+    np.testing.assert_array_equal(np.asarray(scan.objectives),
+                                  np.asarray(flat.objectives))
+    np.testing.assert_array_equal(scan.kept, flat.kept)
+    # host and scan agree to (fp32 gather- vs mask-mode) solver tolerance;
+    # kept counts may flip marginal features between the two float paths
+    assert _rel(scan.objectives, host.objectives) < 1e-4
+    assert tuple(scan.rules) == ("feature_vi", "edpp")
+    assert tuple(host.rules) == ("feature_vi", "edpp")
+    # the container itself still refuses direct bounds evaluation
+    with pytest.raises(NotImplementedError, match="container"):
+        spec.bounds(X, y, None)
+    # and flattening is what both engines actually consumed
+    assert [r.name for r in make_rules([spec])] == ["feature_vi", "edpp"]
+
+
+# -- error paths: unsupported configs fail at dispatch --------------------
+
+
+def test_scan_rejects_sample_rules_at_dispatch():
+    X, y = _problem(m=40, n=24, seed=1)
+    with pytest.raises(ValueError, match="feature rule only"):
+        svm_path(X, y, n_lambdas=3, engine="scan", rules="sample_vi")
+    with pytest.raises(ValueError, match="feature rule only"):
+        svm_path(X, y, n_lambdas=3, engine="scan", rules="sifs")
+    with pytest.raises(ValueError, match="feature rule only"):
+        svm_path(X, y, n_lambdas=3, engine="batched",
+                 lambdas=np.array([[1.0, 0.5]]), rules="composite")
+
+
+def test_sharded_rejects_dynamic_at_dispatch():
+    from repro.core.distributed import svm_mesh
+    from repro.core.path_scan import svm_path_scan_sharded
+
+    X, y = _problem(m=40, n=24, seed=1)
+    with pytest.raises(ValueError, match="sharded"):
+        svm_path_scan_sharded(svm_mesh(1, 1), X, y, n_lambdas=3,
+                              dynamic=True)
+
+
+def test_server_rejects_anchor_history_rules():
+    from repro.launch.path_server import PathJob
+
+    job = PathJob(jid=0, X=np.eye(8, dtype=np.float32),
+                  y=np.ones(8, np.float32), rules="dvi")
+    with pytest.raises(ValueError, match="anchor history"):
+        job.group_key()
+
+
+def test_chunked_rejects_sample_rules():
+    from repro.sparse import FeatureChunked
+
+    X, y = _problem(m=60, n=40, seed=2)
+    fc = FeatureChunked.from_dense(np.asarray(X), chunk_m=32)
+    with pytest.raises(ValueError, match="feature rule only"):
+        PathDriver(rules="composite").run(fc, np.asarray(y), n_lambdas=3)
+
+
+# -- chunked storage runs the program stacks ------------------------------
+
+
+@pytest.mark.parametrize("rule_name", ["edpp", "dvi"])
+def test_chunked_stack_matches_dense_host(rule_name):
+    from repro.sparse import FeatureChunked
+
+    X, y = _problem(m=120, n=80, seed=17)
+    X_np, y_np = np.asarray(X), np.asarray(y)
+    fc = FeatureChunked.from_dense(X_np, chunk_m=48)
+    chunked = PathDriver(rules=rule_name, tol=TOL).run(
+        fc, y_np, n_lambdas=5, lam_min_ratio=0.3)
+    dense = PathDriver(rules=rule_name, tol=TOL).run(
+        X, y, n_lambdas=5, lam_min_ratio=0.3)
+    assert _rel(chunked.objectives, dense.objectives) < 1e-5
+    np.testing.assert_array_equal(chunked.kept[1:], dense.kept[1:])
+
+
+# -- auto rule: telemetry-driven stacks -----------------------------------
+
+
+def test_auto_rule_telemetry_and_equivalence():
+    """rules='auto' on the host driver records per-step telemetry, feeds
+    the driver's observe hook, and solves the same path as feature_vi."""
+    from repro.core.rules import AutoRule
+
+    X, y = _problem(m=300, n=120, seed=19, planted=8)
+    rule = AutoRule(probe_every=2)
+    auto = PathDriver(rules=[rule], tol=TOL).run(
+        X, y, n_lambdas=8, lam_min_ratio=0.3)
+    ref = PathDriver(rules="feature_vi", tol=TOL).run(
+        X, y, n_lambdas=8, lam_min_ratio=0.3)
+    assert _rel(auto.objectives, ref.objectives) < 1e-6
+    # auto's keeps are never looser than VI's (EDPP floor dominates)
+    assert int(auto.kept[1:].sum()) <= int(ref.kept[1:].sum())
+    # telemetry: one record per screened step, observe() fed the EMA
+    assert len(rule.telemetry) == len(auto.lambdas) - 1
+    assert rule._solve_per_feat is not None and rule._solve_per_feat > 0
+    # the driver surfaced per-rule stats too
+    tele = auto.extras["rule_telemetry"]
+    assert len(tele) == len(auto.lambdas)
+    assert all("auto" in t for t in tele[1:])
+    assert all(t["auto"]["kept"] == int(k)
+               for t, k in zip(tele[1:], auto.kept[1:]))
