@@ -645,15 +645,18 @@ def _storage_sweep(rows, log, traj, m=2000, n=400, n_lambdas=10,
     def reset_stats(fc):
         # the recorded counters must describe exactly ONE measured path run,
         # not the jit warm-up that preceded it
-        fc.stats.update(puts=0, max_put_rows=0, bcoo_puts=0)
+        fc.stats.update(puts=0, max_put_rows=0, bcoo_puts=0,
+                        chunks_streamed=0, chunks_skipped=0, bytes_put=0)
 
     host, t_dense = timed(PathDriver(**kw).run, ds.X, ds.y, **grid)
 
+    # chunk_skip=False keeps this row the pure full-stream storage baseline;
+    # the gated lane is measured separately below on a planted instance
     fc_d = FeatureChunked.from_dense(ds.X, chunk_m=chunk_m)
-    PathDriver(**kw).run(fc_d, ds.y, **grid)  # warm jit caches
+    PathDriver(chunk_skip=False, **kw).run(fc_d, ds.y, **grid)  # warm jit
     reset_stats(fc_d)
     t0 = time.perf_counter()
-    chunked = PathDriver(**kw).run(fc_d, ds.y, **grid)
+    chunked = PathDriver(chunk_skip=False, **kw).run(fc_d, ds.y, **grid)
     t_chunk = time.perf_counter() - t0
     chunked_stats = dict(fc_d.stats)
     cdiff = float(np.max(np.abs(chunked.objectives - host.objectives)
@@ -678,6 +681,39 @@ def _storage_sweep(rows, log, traj, m=2000, n=400, n_lambdas=10,
     odiff = float(np.max(np.abs(own.objectives - host.objectives)
                          / np.maximum(np.abs(host.objectives), 1.0)))
 
+    # -- chunk-skipping lane: planted low-density instance -----------------
+    # weak noise tail (tiny feature norms past the head block) so whole
+    # tail chunks screen out early and *stay* dead — the geometry chunk
+    # gating is built for. Skip vs full-stream twin on identical data:
+    # the path must be bitwise equal while transferring strictly fewer
+    # chunks, and the per-step live set must shrink below T * n_chunks.
+    Xp = np.array(ds.X, copy=True)
+    head = max(chunk_m, m // 5)
+    Xp[head:] *= 0.05
+    Lp = lipschitz_estimate(jnp.asarray(Xp))
+    kwp = dict(rules="feature_vi", tol=tol, max_iters=max_iters, L=Lp)
+
+    fc_skip = FeatureChunked.from_dense(Xp, chunk_m=chunk_m)
+    PathDriver(chunk_skip=True, **kwp).run(fc_skip, ds.y, **grid)  # warm jit
+    reset_stats(fc_skip)
+    t0 = time.perf_counter()
+    skip = PathDriver(chunk_skip=True, **kwp).run(fc_skip, ds.y, **grid)
+    t_skip = time.perf_counter() - t0
+    skip_stats = dict(fc_skip.stats)
+
+    fc_fullp = FeatureChunked.from_dense(Xp, chunk_m=chunk_m)
+    PathDriver(chunk_skip=False, **kwp).run(fc_fullp, ds.y, **grid)
+    reset_stats(fc_fullp)
+    t0 = time.perf_counter()
+    fullp = PathDriver(chunk_skip=False, **kwp).run(fc_fullp, ds.y, **grid)
+    t_fullp = time.perf_counter() - t0
+    fullp_stats = dict(fc_fullp.stats)
+    skip_bitwise = bool(
+        np.array_equal(skip.objectives, fullp.objectives)
+        and np.array_equal(skip.weights, fullp.weights))
+    live_total = int(np.sum(skip.extras["live_chunks"]))
+    live_cap = len(skip.lambdas) * fc_skip.n_chunks
+
     log(f"dense_s={t_dense:.3f} chunked_s={t_chunk:.3f} csr_s={t_csr:.3f}")
     log(f"obj_diff chunked={cdiff:.2e} csr={sdiff:.2e} "
         f"self_L_chunked={odiff:.2e} "
@@ -685,16 +721,29 @@ def _storage_sweep(rows, log, traj, m=2000, n=400, n_lambdas=10,
     log(f"max_device_rows: chunked={chunked_stats['max_put_rows']} "
         f"csr={csr_stats['max_put_rows']} (m={m}) "
         f"bcoo_transfers={csr_stats['bcoo_puts']}")
+    log(f"chunk_skip (planted): streamed={skip_stats['chunks_streamed']} "
+        f"skipped={skip_stats['chunks_skipped']} "
+        f"vs full={fullp_stats['chunks_streamed']} "
+        f"live={live_total}/{live_cap} bitwise={skip_bitwise} "
+        f"({t_skip:.3f}s vs {t_fullp:.3f}s)")
     if check:
         assert cdiff < 1e-6, f"chunked/host mismatch: {cdiff:.3e}"
         assert sdiff < 1e-5, f"csr/host mismatch: {sdiff:.3e}"
         assert odiff < 1e-5, f"self-L chunked/host mismatch: {odiff:.3e}"
         assert chunked_stats["max_put_rows"] <= chunk_m
+        assert skip_stats["chunks_skipped"] > 0, skip_stats
+        assert (skip_stats["chunks_streamed"]
+                < fullp_stats["chunks_streamed"]), (skip_stats, fullp_stats)
+        assert live_total < live_cap, (live_total, live_cap)
+        assert skip_bitwise, "chunk-skip diverged from its full-stream twin"
     rows.append(("path_storage_dense", t_dense * 1e6, f"density={density}"))
     rows.append(("path_storage_chunked", t_chunk * 1e6,
                  f"obj_diff={cdiff:.1e} chunk_m={chunk_m}"))
     rows.append(("path_storage_csr", t_csr * 1e6,
                  f"obj_diff={sdiff:.1e} bcoo_puts={csr_stats['bcoo_puts']}"))
+    rows.append(("path_storage_chunked_skip", t_skip * 1e6,
+                 f"skipped={skip_stats['chunks_skipped']} "
+                 f"live={live_total}/{live_cap}"))
     traj["storage"] = {
         "instance": {"m": m, "n": n, "n_lambdas": n_lambdas,
                      "lam_min_ratio": lam_min_ratio, "density": density,
@@ -712,10 +761,24 @@ def _storage_sweep(rows, log, traj, m=2000, n=400, n_lambdas=10,
         "kept_csr": [int(v) for v in csr.kept],
         "chunked_stream_stats": chunked_stats,
         "csr_stream_stats": csr_stats,
+        "chunk_skip": {
+            "planted_head_rows": int(head),
+            "seconds": t_skip,
+            "full_stream_seconds": t_fullp,
+            "stream_stats": skip_stats,
+            "full_stream_stats": fullp_stats,
+            "live_chunks": [int(v) for v in skip.extras["live_chunks"]],
+            "live_total": live_total,
+            "live_cap_T_x_nchunks": live_cap,
+            "bitwise_vs_full_stream": skip_bitwise,
+        },
         "note": ("chunked max_put_rows == chunk_m is the out-of-core "
                  "contract: the device never held more than one feature "
                  "chunk of X (plus the gathered active set); the CSR lane "
-                 "streams BCOO chunks so screening FLOPs track nnz"),
+                 "streams BCOO chunks so screening FLOPs track nnz; the "
+                 "chunk_skip block is the gated lane on the planted "
+                 "weak-tail instance — bitwise equal to its full-stream "
+                 "twin with strictly fewer transfers"),
     }
     return traj["storage"]
 

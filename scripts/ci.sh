@@ -17,7 +17,12 @@
 #                                #          a small forced chunk size
 #                                #          (REPRO_STREAM_CHUNK_M=48): bitwise
 #                                #          chunked bound sweep, solver seam,
-#                                #          BCOO, memory-shape property
+#                                #          BCOO, memory-shape property,
+#                                #          chunk-skip twin; plus the
+#                                #          disk-resident smoke
+#                                #          (scripts/stream_smoke.py: libsvm ->
+#                                #          mmap store -> gated path with
+#                                #          chunks_skipped > 0)
 #   ./scripts/ci.sh serve        # serve:   path-server suite (continuous
 #                                #          batching, bucket padding, warm
 #                                #          program cache) + the --serve
@@ -83,6 +88,9 @@ run_lane() {
       # partial — the shapes the out-of-core paths must be invariant to
       REPRO_STREAM_CHUNK_M=48 python -m pytest -x -q \
         tests/test_sparse_stream.py "$@"
+      # disk-resident + chunk-skip smoke: libsvm -> mmap store in a tmpdir,
+      # gated path must actually skip transfers (chunks_skipped > 0)
+      python scripts/stream_smoke.py
       ;;
     serve)
       python -m pytest -x -q tests/test_path_server.py "$@"

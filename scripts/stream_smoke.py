@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""CI smoke for the disk-resident chunk-skipping data plane.
+
+End to end in a tmpdir: write a planted libsvm file, build the mmap-backed
+store with ``FeatureChunked.from_libsvm_cached``, run the gated screened
+path, and assert that chunk-level gating actually skipped transfers
+(``chunks_skipped > 0``) while matching the full-stream twin bitwise.
+
+The instance plants an informative head block and a weak noise tail
+(features past the head have tiny norms), so whole tail chunks screen out
+early and stay dead — the geometry chunk gating exists for. Kept separate
+from pytest so the lane exercises the real CLI-adjacent workflow (text
+file on disk -> store -> path) rather than in-memory containers.
+"""
+
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.path import PathDriver  # noqa: E402
+from repro.data import make_sparse_classification  # noqa: E402
+from repro.sparse import FeatureChunked  # noqa: E402
+
+
+def planted_instance():
+    ds = make_sparse_classification(m=320, n=120, k_active=8, seed=7)
+    X = np.array(ds.X, copy=True)
+    X[64:] *= 0.05  # weak noise tail -> persistently dead tail chunks
+    return X, np.asarray(ds.y)
+
+
+def write_libsvm(path, X, y):
+    m, n = X.shape
+    with open(path, "w") as f:
+        for i in range(n):
+            nz = np.nonzero(X[:, i])[0]
+            # 9 significant digits round-trip any float32 exactly
+            feats = " ".join(f"{j + 1}:{float(X[j, i]):.9g}" for j in nz)
+            f.write(f"{int(y[i]):+d} {feats}\n")
+
+
+def main():
+    X, y = planted_instance()
+    kw = dict(rules="feature_vi", tol=1e-9, max_iters=8000)
+    grid = dict(n_lambdas=8, lam_min_ratio=0.05)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        text = os.path.join(tmp, "planted.svm")
+        write_libsvm(text, X, y)
+        fc, y_store = FeatureChunked.from_libsvm_cached(
+            text, store_dir=os.path.join(tmp, "store"), chunk_m=32)
+        assert fc.shape == X.shape, (fc.shape, X.shape)
+        np.testing.assert_allclose(np.asarray(fc.as_dense()), X, atol=1e-6)
+
+        res = PathDriver(chunk_skip=True, **kw).run(fc, y_store, **grid)
+        st = res.extras["stream_stats"]
+        assert st["chunks_skipped"] > 0, st
+
+        fc_full = FeatureChunked.from_libsvm_cached(
+            text, store_dir=os.path.join(tmp, "store"), chunk_m=32)[0]
+        ref = PathDriver(chunk_skip=False, **kw).run(fc_full, y_store, **grid)
+        st_full = fc_full.stats
+        assert st["chunks_streamed"] < st_full["chunks_streamed"], (
+            st, dict(st_full))
+        np.testing.assert_array_equal(res.objectives, ref.objectives)
+        np.testing.assert_array_equal(res.weights, ref.weights)
+
+        print(f"stream smoke OK: {st['chunks_streamed']} streamed, "
+              f"{st['chunks_skipped']} skipped "
+              f"(full twin: {st_full['chunks_streamed']} streamed), "
+              f"bytes_put {st['bytes_put']} < {st_full['bytes_put']}")
+
+
+if __name__ == "__main__":
+    main()

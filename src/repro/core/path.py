@@ -73,7 +73,7 @@ from .rules import (
     make_rules,
 )
 from .rules.base import dynamic_tau, solve_with_verification
-from .screening import SAFE_TAU
+from .screening import SAFE_TAU, anchor_stats
 from .solver import (
     DynamicFistaResult,
     fista_solve,
@@ -170,6 +170,7 @@ class PathDriver:
         exact_lipschitz: bool = False,
         use_pallas: Optional[bool] = None,
         L=None,
+        chunk_skip: bool = True,
     ):
         """``dynamic=True`` swaps every solve for the segmented
         ``solver.fista_solve_dynamic``: the step's sequential screen seeds a
@@ -191,7 +192,15 @@ class PathDriver:
         CSR) gives them floating-point-identical step sizes and keeps
         their trajectories comparable to solver tolerance (the streamed
         estimator reassociates its reductions, and near fp32 plateau ties
-        even 1-ulp step-size differences move the stopping point)."""
+        even 1-ulp step-size differences move the stopping point).
+
+        ``chunk_skip`` (chunked storage only): certify whole feature-row
+        chunks dead from their cached stale-anchor bounds *before* the
+        ``device_put`` and skip their transfers entirely (see
+        ``sparse/screen_stream.ChunkScreenCache``). ``False`` runs the
+        full-stream twin — identical screening decisions and path, every
+        chunk transferred — the equivalence/bench baseline. No effect on
+        in-core storage."""
         if reduce not in ("gather", "mask"):
             raise ValueError(
                 f"host-driver reduce must be 'gather' or 'mask', got "
@@ -213,6 +222,7 @@ class PathDriver:
                              "exact_lipschitz=True (per-solve estimates), "
                              "not both")
         self.L = L
+        self.chunk_skip = bool(chunk_skip)
 
     # -- reduction helpers -------------------------------------------------
 
@@ -535,30 +545,50 @@ class PathDriver:
 
         Same sequential-screening recurrence as :meth:`run`, restructured
         around the device-memory contract: the bound sweep streams X chunk
-        by chunk (``sparse.screen_stream`` — bitwise the in-core sweep on
-        dense chunks), gather-mode reduction materializes only the rows
-        that survive screening (``O(chunk + kept)`` peak device memory),
-        and anchor certification streams the correlation sweeps
-        (``sparse.gap_theta_delta_stream``). Supports a-priori-safe
-        feature rules only — any program-backed stack (``feature_vi``,
-        ``edpp``, ``dvi``, ``auto``): sample rules and the in-solver
-        dynamic screen need in-core X; use ``reduce='gather'``, the
-        storage's whole point. The pure-VI stack routes through the legacy
-        :func:`~repro.sparse.screen_stream` sweep (bitwise vs the in-core
-        bound, Pallas chunk kernel eligible); every other stack evaluates
-        via :func:`~repro.sparse.screen_stack_stream` (XLA route, same
-        T + 1 streams of X per path).
+        by chunk, gather-mode reduction materializes only the rows that
+        survive screening (``O(chunk + kept)`` peak device memory), and
+        anchor certification streams the correlation sweeps
+        (``sparse.gap_theta_delta_stream``).
+
+        Feature screening goes through
+        :func:`~repro.sparse.screen_step_stream`: chunk-level gating skips
+        the transfer of chunks whose cached stale-anchor bounds certify
+        every feature dead (``chunk_skip=True``, the default — see
+        :class:`~repro.sparse.ChunkScreenCache`), the pure-VI stack rides
+        the bitwise/Pallas-eligible sweep, and any other program-backed
+        stack (``edpp``, ``dvi``, ``auto``) evaluates from the same
+        streamed anchors (dvi carries history and disables the skip).
+        Feature rules without a rule program cannot be streamed and raise.
+
+        Sample rules (:class:`~repro.core.rules.sample_vi.SampleVIRule`,
+        alone or inside ``composite``/``sifs`` stacks) run out-of-core via
+        the transposed sweep: the margins ``u1 = X^T w1 + b1`` are the
+        previous accepted solve's carried ``res.u`` (exact — padded gather
+        rows are zero) and ``||x_i||^2`` is the memoized
+        :meth:`~repro.sparse.FeatureChunked.col_sq`, so screening costs
+        zero extra streams; KKT verification re-checks screened samples
+        from the reduced solve's own carried margins (again no stream) and
+        re-admits violators exactly like :meth:`run`. The sample axis is
+        mask-reduced on the gathered solve (gathering it too would force a
+        re-gather per verification round).
+
+        ``dynamic=True`` swaps the gathered in-core solve for the streamed
+        segmented :func:`~repro.sparse.fista_solve_chunked`: the step's
+        screen seeds the live feature/chunk masks and the solver keeps
+        shrinking both every ``screen_every`` iterations from the live
+        duality gap — mid-solve transfer volume tracks the certified
+        support. Per-step telemetry lands in ``extras["dynamic"]``.
         """
         from repro.sparse import (  # lazy: repro.sparse imports core.solver
+            ChunkScreenCache,
             fista_solve_chunked,
             gap_theta_delta_stream,
             lambda_max_stream,
             lipschitz_estimate_stream,
-            screen_stack_stream,
-            screen_stream,
-            stream_anchor_stats,
+            screen_step_stream,
         )
         from .rules.programs import PROGRAMS
+        from .rules.sample_vi import margin_surplus_core, violators_from_margins
 
         if self.reduce != "gather":
             raise ValueError(
@@ -566,27 +596,38 @@ class PathDriver:
                 f"would build the full (m, n) device matrix), got "
                 f"reduce={self.reduce!r}"
             )
-        if self.dynamic:
-            raise ValueError(
-                "dynamic in-solver screening needs in-core X; run chunked "
-                "paths with dynamic=False"
-            )
-        bad = [r.name for r in self.rules
+        feature_rules = [r for r in self.rules if r.axis == AXIS_FEATURES]
+        sample_rules = [r for r in self.rules if r.axis == AXIS_SAMPLES]
+        bad = [r.name for r in feature_rules
                if getattr(r, "program", None) not in PROGRAMS]
         if bad:
             raise ValueError(
-                f"chunked storage supports a-priori-safe feature rule only "
-                f"specs (program-backed: {tuple(sorted(PROGRAMS))}; sample "
-                f"rules sweep the transposed axis in-core), got {bad}"
+                f"chunked storage streams program-backed feature rule "
+                f"bounds only ({tuple(sorted(PROGRAMS))}); feature rule(s) "
+                f"{bad} have no rule program — use in-core storage"
             )
-        progs = tuple(dict.fromkeys(r.program for r in self.rules))
+        bad_s = [r.name for r in sample_rules
+                 if not isinstance(r, SampleVIRule)]
+        if bad_s:
+            raise ValueError(
+                f"chunked storage verifies sample rules from the solver's "
+                f"carried margins; only SampleVIRule(-derived) rules "
+                f"qualify, got {bad_s}"
+            )
+        progs = tuple(dict.fromkeys(r.program for r in feature_rules))
         needs_hist = any(PROGRAMS[p].n_anchors > 1 for p in progs)
         anchor_old = None  # streamed AnchorStats of the step-before-last
+        cache = ChunkScreenCache(fc)
 
         y = jnp.asarray(y)
         y_np = np.asarray(y)
+        yd = jnp.asarray(y, fc.dtype)
         m, n = fc.shape
-        tau = min((r.tau for r in self.rules), default=SAFE_TAU)
+        tau = min((r.tau for r in feature_rules if hasattr(r, "tau")),
+                  default=SAFE_TAU)
+        dyn_kw = (dict(screen_every=self.screen_every,
+                       screen_tau=dynamic_tau(self.rules))
+                  if self.dynamic else {})
 
         if self.L is not None:
             L_path = jnp.asarray(self.L, fc.dtype)
@@ -603,10 +644,25 @@ class PathDriver:
         biases = np.zeros((T,), dtype=np.float64)
         objectives = np.zeros((T,), dtype=np.float64)
         kept = np.zeros((T,), dtype=np.int64)
+        kept_s = np.zeros((T,), dtype=np.int64)
+        vrounds = np.zeros((T,), dtype=np.int64)
         active = np.zeros((T,), dtype=np.int64)
         iters = np.zeros((T,), dtype=np.int64)
         wall = np.zeros((T,), dtype=np.float64)
         s_times = np.zeros((T,), dtype=np.float64)
+        live_log = np.full((T,), fc.n_chunks, dtype=np.int64)
+        sample_masks: dict[int, np.ndarray] = {}
+        dyn_log: dict[int, dict] = {}
+
+        if sample_rules:
+            x_sq = fc.col_sq()  # transposed sweep, once per container
+            for rule in sample_rules:
+                rule._u_prev = None  # prepare() needs in-core X; reset here
+        # trust-region movement state + carried margins of the accepted
+        # solution (X^T w, bias excluded) for the sample rules' u1
+        dw_pred = float("inf")
+        db_pred = float("inf")
+        u_carry = np.zeros((n,), dtype=np.float64)
 
         lam_prev = float(lambdas[0])
         w_host = np.zeros((m,), dtype=np.float64)
@@ -621,9 +677,11 @@ class PathDriver:
             # grid starts below lambda_max: streamed unscreened solve, then
             # gap-certify (the closed form does not hold — cf. run())
             t0 = time.perf_counter()
+            rep0: dict = {}
             res0 = fista_solve_chunked(
                 fc, y, float(lambdas[0]), max_iters=self.max_iters,
                 tol=self.tol, L=L_path,
+                report=rep0 if self.dynamic else None, **dyn_kw,
             )
             jax.block_until_ready(res0.w)
             wall[0] = time.perf_counter() - t0
@@ -635,67 +693,144 @@ class PathDriver:
             kept[0] = m
             active[0] = int(np.sum(np.abs(w_host) > 1e-10))
             iters[0] = int(res0.n_iters)
-            theta_prev, delta_prev = gap_theta_delta_stream(
+            u_carry = np.asarray(res0.u, dtype=np.float64)
+            if self.dynamic:
+                dyn_log[0] = rep0
+            theta_prev, delta_prev, d_th0 = gap_theta_delta_stream(
                 fc, y, jnp.asarray(w_host, fc.dtype), res0.b,
-                jnp.asarray(float(lambdas[0])), u=res0.u,
+                jnp.asarray(float(lambdas[0])), u=res0.u, want_corr=True,
             )
+            if feature_rules:
+                cache.refresh(anchor_stats(
+                    yd, float(lambdas[0]), theta_prev, delta_prev, d_th0))
 
         for k in range(1, T):
             lam = float(lambdas[k])
             t0 = time.perf_counter()
 
             st0 = time.perf_counter()
-            if self.rules and progs == ("feature_vi",):
-                # pure-VI fast path: the legacy streamed sweep is bitwise
-                # the in-core bound on dense chunks and Pallas-eligible
-                keep_m, _ = screen_stream(
-                    fc, y, lam_prev, lam, theta_prev, tau=tau,
-                    delta=delta_prev, use_pallas=self.use_pallas,
+            s_mask = np.ones((n,), dtype=bool)
+            live = np.ones((fc.n_chunks,), dtype=bool)
+            if feature_rules:
+                keep_m, _, anchor, live = screen_step_stream(
+                    fc, y, lam_prev, lam, theta_prev, delta=delta_prev,
+                    rules=progs, tau=tau, cache=cache,
+                    anchor_old=anchor_old, skip=self.chunk_skip,
+                    use_pallas=self.use_pallas,
                 )
-                f_mask = np.asarray(keep_m)
-            elif self.rules:
-                a1 = stream_anchor_stats(fc, y, lam_prev, theta_prev,
-                                         delta=delta_prev)
-                anchors = (a1,)
                 if needs_hist:
-                    # last step's a1 is this step's old anchor — free
-                    anchors = (anchor_old if anchor_old is not None
-                               else a1,) + anchors
-                    anchor_old = a1
-                keep_m, _ = screen_stack_stream(fc, y, lam, anchors, progs,
-                                                tau=tau)
+                    # last step's fresh anchor is this step's old — free
+                    anchor_old = anchor
                 f_mask = np.asarray(keep_m)
+                live_log[k] = int(live.sum())
             else:
                 f_mask = np.ones((m,), dtype=bool)
+            if sample_rules:
+                # transposed sweep: margins + column norms, zero streams
+                u1 = (jnp.asarray(u_carry, fc.dtype)
+                      + jnp.asarray(b_host, fc.dtype))
+                for rule in sample_rules:
+                    surplus = margin_surplus_core(
+                        u1, yd, x_sq, dw_pred, db_pred,
+                        u_prev=rule._u_prev,
+                        shrink_factor=rule.shrink_factor,
+                        margin_floor=rule.margin_floor,
+                    )
+                    rule._u_prev = u1  # secant anchor for the next step
+                    s_mask &= np.asarray(surplus < 0.0)
             s_times[k] = time.perf_counter() - st0
 
             f_idx = np.nonzero(f_mask)[0]
             kept[k] = len(f_idx)
 
-            # gather ONLY the surviving rows (bucket-padded): the device
-            # holds a (kept_padded, n) block, never the full matrix
-            sel_f, valid_f = self._feature_select(None, f_idx, m)
-            Xr = jnp.asarray(fc.gather_rows(sel_f)
-                             * valid_f[:, None].astype(fc.dtype))
-            w0 = jnp.asarray((w_host[sel_f] * valid_f).astype(fc.dtype))
-            res = fista_solve(
-                Xr, y, jnp.asarray(lam), w0=w0,
-                b0=jnp.asarray(b_host, fc.dtype),
-                max_iters=self.max_iters, tol=self.tol, L=L_path,
-                use_pallas=self.use_pallas,
-            )
-            w_full = np.zeros((m,), dtype=np.float64)
-            w_full[sel_f[: len(f_idx)]] = np.asarray(res.w, np.float64)[: len(f_idx)]
-            b_host = float(res.b)
+            # -- solve + sample verification (cf. solve_with_verification):
+            # the feature mask is a-priori safe and fixed for the step, so
+            # the gather happens once; only the sample mask changes per
+            # verification round, and the margin re-check rides the
+            # solve's own carried u — no extra stream either way.
+            if not self.dynamic:
+                sel_f, valid_f = self._feature_select(None, f_idx, m)
+                Xr = jnp.asarray(fc.gather_rows(sel_f)
+                                 * valid_f[:, None].astype(fc.dtype))
+            warm_w, warm_b = w_host, b_host
+            rounds = 0
+            while True:
+                smask_dev = (None if s_mask.all()
+                             else jnp.asarray(s_mask.astype(fc.dtype)))
+                if self.dynamic:
+                    rep: dict = {}
+                    res = fista_solve_chunked(
+                        fc, y, lam,
+                        w0=jnp.asarray((warm_w * f_mask).astype(fc.dtype)),
+                        b0=jnp.asarray(warm_b, fc.dtype),
+                        max_iters=self.max_iters, tol=self.tol, L=L_path,
+                        sample_mask=smask_dev, feature_mask=f_mask,
+                        report=rep, **dyn_kw,
+                    )
+                    w_full = np.asarray(res.w, dtype=np.float64)
+                    dyn_log[k] = rep
+                else:
+                    w0 = jnp.asarray((warm_w[sel_f] * valid_f).astype(fc.dtype))
+                    res = fista_solve(
+                        Xr, y, jnp.asarray(lam), w0=w0,
+                        b0=jnp.asarray(warm_b, fc.dtype),
+                        max_iters=self.max_iters, tol=self.tol, L=L_path,
+                        sample_mask=smask_dev, use_pallas=self.use_pallas,
+                    )
+                    w_full = np.zeros((m,), dtype=np.float64)
+                    w_full[sel_f[: len(f_idx)]] = (
+                        np.asarray(res.w, np.float64)[: len(f_idx)])
+                b_new = float(res.b)
+                warm_w, warm_b = w_full, b_new
+                if s_mask.all() or not sample_rules:
+                    break
+                scr = np.nonzero(~s_mask)[0]
+                u_np = np.asarray(res.u, dtype=np.float64)
+                viol = np.asarray(violators_from_margins(
+                    y_np, u_np[scr] + b_new, scr))
+                if len(viol) == 0:
+                    break
+                rounds += 1
+                if rounds >= self.max_verify_rounds:
+                    s_mask[:] = True  # give up screening: exact solve
+                else:
+                    s_mask[viol] = True
+
+            kept_s[k] = int(s_mask.sum())
+            vrounds[k] = rounds
+            if sample_rules:
+                sample_masks[k] = s_mask.copy()
+
+            # movement estimates for the next step's trust region
+            dw_pred = self.shrink_factor * float(
+                np.linalg.norm(w_full - weights[k - 1]))
+            db_pred = self.shrink_factor * abs(b_new - biases[k - 1])
+            b_host = b_new
             w_host = w_full
+            u_carry = np.asarray(res.u, dtype=np.float64)
 
             # certify the accepted point as the next anchor. The margin
             # sweep rides the solver's carried u (exact: padding rows are
-            # zero); only the correlation sweeps stream.
-            theta_prev, delta_prev = gap_theta_delta_stream(
+            # zero); the correlation sweeps stream only the gating-live
+            # chunks — every kept feature lives in one (dead chunks'
+            # stamped bounds are all < tau), so the reduced-problem
+            # feasibility max is exact — and the final sweep doubles as
+            # the fresh d_theta that re-anchors every live chunk's cache
+            # entry: next step's gating is exactly as sharp as its screen,
+            # at zero extra streams.
+            live_arg = None if live.all() else live
+            fm_cert = (None if f_mask.all()
+                       else jnp.asarray(f_mask.astype(fc.dtype)))
+            theta_prev, delta_prev, d_th = gap_theta_delta_stream(
                 fc, y, jnp.asarray(w_full, fc.dtype), res.b,
-                jnp.asarray(lam), u=res.u,
+                jnp.asarray(lam), u=res.u, live_chunks=live_arg,
+                feature_mask=fm_cert, want_corr=True,
             )
+            if feature_rules:
+                cache.refresh(
+                    anchor_stats(yd, lam, theta_prev, delta_prev, d_th),
+                    live=set(int(ci) for ci in np.nonzero(live)[0]),
+                )
             lam_prev = lam
 
             weights[k] = w_full
@@ -706,20 +841,24 @@ class PathDriver:
             jax.block_until_ready((theta_prev, delta_prev))
             wall[k] = time.perf_counter() - t0
 
-        # no sample screening on chunked storage: every solved step feeds
-        # all n samples (step 0's closed form feeds none — cf. run())
-        kept_samples = np.full((T,), n, dtype=np.int64)
-        kept_samples[0] = 0
+        kept_s[0] = 0
+        extras = {"lam_max": lam_max_val, "storage": "chunked",
+                  "n_chunks": fc.n_chunks, "chunk_skip": self.chunk_skip,
+                  "live_chunks": live_log,
+                  "stream_stats": dict(fc.stats)}
+        if sample_rules:
+            extras["sample_masks"] = sample_masks
+        if self.dynamic:
+            extras["dynamic"] = dyn_log
         return PathResult(
             lambdas=lambdas, weights=weights, biases=biases,
             objectives=objectives, kept=kept, active=active,
             solver_iters=iters, wall_times=wall, screen_times=s_times,
             screened=bool(self.rules),
-            kept_samples=kept_samples,
-            verify_rounds=np.zeros((T,), dtype=np.int64),
+            kept_samples=kept_s,
+            verify_rounds=vrounds,
             rules=tuple(r.name for r in self.rules),
-            extras={"lam_max": lam_max_val, "storage": "chunked",
-                    "n_chunks": fc.n_chunks, "stream_stats": dict(fc.stats)},
+            extras=extras,
         )
 
 
@@ -740,6 +879,7 @@ def svm_path(
     engine: str = "host",
     exact_lipschitz: bool = False,
     use_pallas: Optional[bool] = None,
+    chunk_skip: bool = True,
 ) -> PathResult:
     """Solve the L1-L2-SVM path with configurable screening rules.
 
@@ -748,7 +888,9 @@ def svm_path(
     (``"sample_vi"``, ``"composite"``, a list, or instances) to choose
     other reductions. ``screening=False`` (or ``rules=[]``) disables all.
     ``dynamic=True`` additionally re-screens inside each FISTA solve every
-    ``screen_every`` iterations (see :class:`PathDriver`).
+    ``screen_every`` iterations (see :class:`PathDriver`). ``chunk_skip``
+    (chunked storage only) gates whole feature-row chunks off the stream
+    from their cached stale-anchor bounds (see :class:`PathDriver`).
 
     ``engine`` selects the execution strategy:
 
@@ -824,6 +966,7 @@ def svm_path(
                         reduce="gather" if reduce is None else reduce,
                         tol=tol, max_iters=max_iters,
                         dynamic=dynamic, screen_every=screen_every,
-                        exact_lipschitz=exact_lipschitz, use_pallas=use_pallas)
+                        exact_lipschitz=exact_lipschitz, use_pallas=use_pallas,
+                        chunk_skip=chunk_skip)
     return driver.run(X, y, lambdas=lambdas, n_lambdas=n_lambdas,
                       lam_min_ratio=lam_min_ratio)

@@ -66,7 +66,7 @@ from ..screening import _EPS, _t_max
 from .base import AXIS_SAMPLES, ConvexRegion, ScreeningRule, register_rule
 
 __all__ = ["SampleVIRule", "sample_slack_caps", "sample_margin_surplus",
-           "margin_surplus_core"]
+           "margin_surplus_core", "violators_from_margins"]
 
 # stands in for the driver's "no movement bound yet" dw/db = inf inside the
 # arithmetic: inf would produce 0 * inf = NaN for zero-norm sample columns,
@@ -124,6 +124,19 @@ def margin_surplus_core(
         secant = shrink_factor * jnp.abs(u1 - u_prev) + margin_floor
         slack = jnp.minimum(slack, secant)
     return y * u1 - 1.0 - slack
+
+
+def violators_from_margins(y, margins, screened_idx):
+    """KKT check from precomputed margins: screened samples with slack > 0.
+
+    ``margins`` holds ``x_i^T w + b`` for the *screened* samples only
+    (``margins[j]`` belongs to sample ``screened_idx[j]``). This is the
+    verification arithmetic shared by :meth:`SampleVIRule.verify` (which
+    computes the margins from in-core X) and the chunked path driver (which
+    reads them off the solver's carried ``u = X^T w`` — zero extra
+    streams). Works on numpy and jax arrays alike.
+    """
+    return screened_idx[y[screened_idx] * margins < 1.0]
 
 
 def sample_margin_surplus(
@@ -201,4 +214,4 @@ class SampleVIRule(ScreeningRule):
     def verify(self, X, y, w, b, screened_idx) -> jax.Array:
         """Screened samples whose margin at ``(w, b)`` is actually < 1."""
         u = X[:, screened_idx].T @ w + b
-        return screened_idx[y[screened_idx] * u < 1.0]
+        return violators_from_margins(y, u, screened_idx)

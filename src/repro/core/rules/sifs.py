@@ -20,9 +20,12 @@ L1 dual keeps the shape but swaps the halves for what is provable here:
 
 Like :class:`~repro.core.rules.composite.CompositeRule` this is a container:
 ``make_rules("sifs")`` flattens it to ``[EDPPRule, SampleVIRule]`` and the
-driver applies one per axis. Host engine only (the sample half needs
-verification); on the scan engines use ``rules="edpp"`` for the feature
-half alone.
+driver applies one per axis. Runs on the host engine with in-core *or*
+chunked storage — out of core the feature half streams through its rule
+program and the sample half rides the transposed sweep
+(``sparse.stream_sample_stats`` inputs) with verification from the
+solver's carried margins. The jitted scan engines still can't host the
+verification loop; there use ``rules="edpp"`` for the feature half alone.
 """
 
 from __future__ import annotations

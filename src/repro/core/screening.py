@@ -72,6 +72,9 @@ __all__ = [
     "screen_bounds",
     "screen",
     "SAFE_TAU",
+    "anchor_slice",
+    "fixed_slice",
+    "finalize_from_anchor_jit",
 ]
 
 # Keep a feature unless its bound is provably below 1; the tau margin absorbs
@@ -412,6 +415,29 @@ def finalize_from_anchor(anchor: AnchorStats, lam2,
     red = FeatureReductions(d_theta=anchor.d_theta, d_one=fixed.d_one,
                             d_y=fixed.d_y, d_sq=fixed.d_sq)
     return screen_bounds_from_reductions(red, sh)
+
+
+#: Jitted :func:`finalize_from_anchor` for host-driven callers evaluating
+#: many small region pytrees eagerly (one compile per d_theta shape). The
+#: chunk-skip plane leans on a property of the VI region worth stating once:
+#: an anchor certified at ``lam1`` yields a *valid* safe region for ANY
+#: target ``lam2 < lam1`` — a stale anchor's bounds are merely looser, never
+#: unsafe. That is what lets a chunk's features be certified dead from the
+#: reductions cached at the chunk's last stream, without re-streaming it.
+finalize_from_anchor_jit = jax.jit(finalize_from_anchor)
+
+
+def anchor_slice(anchor: AnchorStats, lo: int, hi: int) -> AnchorStats:
+    """Restrict an anchor's per-feature reduction to rows ``[lo, hi)`` (the
+    scalars are feature-independent and pass through) — the region pytree a
+    single chunk's bound evaluation consumes."""
+    return anchor._replace(d_theta=anchor.d_theta[lo:hi])
+
+
+def fixed_slice(fixed: FixedStats, lo: int, hi: int) -> FixedStats:
+    """Restrict the fixed statics to feature rows ``[lo, hi)``."""
+    return fixed._replace(d_one=fixed.d_one[lo:hi], d_y=fixed.d_y[lo:hi],
+                          d_sq=fixed.d_sq[lo:hi])
 
 
 def screen_bounds(

@@ -11,12 +11,13 @@ loader for real datasets.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+import gzip
+from typing import Iterator, NamedTuple, Optional
 
 import numpy as np
 
 __all__ = ["SvmDataset", "CsrData", "make_sparse_classification",
-           "csr_from_dense", "load_libsvm"]
+           "csr_from_dense", "load_libsvm", "iter_libsvm"]
 
 
 class CsrData(NamedTuple):
@@ -113,6 +114,50 @@ def make_sparse_classification(
     return SvmDataset(X, y.astype(dtype), w_true.astype(dtype), csr)
 
 
+def _open_maybe_gzip(path):
+    """Text handle for a libsvm file, transparently gunzipping.
+
+    Detection is by content (gzip magic ``1f 8b``) rather than extension, so
+    ``foo.txt`` that is secretly gzipped and ``foo.gz`` both work.
+    """
+    with open(path, "rb") as probe:
+        magic = probe.read(2)
+    if magic == b"\x1f\x8b":
+        return gzip.open(path, "rt")
+    return open(path, "rt")
+
+
+def iter_libsvm(path, zero_based: bool = False) -> Iterator[tuple]:
+    """Stream ``(label, feature_indices, values)`` per sample from a libsvm
+    text file (plain or gzip).
+
+    This is the single parsing point shared by :func:`load_libsvm` (in-core)
+    and ``FeatureChunked.from_libsvm_cached`` (two-pass disk-store build):
+    memory is O(one line). Comment lines / trailing ``# comments`` are
+    stripped, blank lines and trailing whitespace tolerated; indices are
+    1-based unless ``zero_based``.
+    """
+    with _open_maybe_gzip(path) as fh:
+        for line in fh:
+            line = line.split("#", 1)[0].strip()
+            if not line:
+                continue
+            parts = line.split()
+            label = float(parts[0])
+            idx, vals = [], []
+            for tok in parts[1:]:
+                k, v = tok.split(":")
+                j = int(k) - (0 if zero_based else 1)
+                if j < 0:
+                    raise ValueError(
+                        f"feature index {k} in {path} is not "
+                        f"{'0' if zero_based else '1'}-based"
+                    )
+                idx.append(j)
+                vals.append(float(v))
+            yield label, idx, vals
+
+
 def load_libsvm(
     path,
     n_features: Optional[int] = None,
@@ -122,34 +167,24 @@ def load_libsvm(
     """Minimal libsvm/svmlight text loader, into the paper's (m, n) layout.
 
     Each line is ``<label> <index>:<value> ...``; indices are 1-based unless
-    ``zero_based``. Labels are mapped to {-1, +1} by sign (0/1 labels map to
-    -1/+1). Returns an :class:`SvmDataset` whose ``X`` is the dense
-    ``(n_features, n_samples)`` matrix and whose ``.csr`` is the exact CSR
-    triple over feature rows — feed the latter to
-    ``FeatureChunked.from_csr`` for out-of-core use (this loader itself is
-    minimal and materializes the dense host matrix; ``w_true`` is zeros).
-    Pure numpy — no scipy requirement.
+    ``zero_based``. Gzip-compressed files are detected by magic bytes and
+    decompressed on the fly; comment lines, trailing ``#`` comments, blank
+    lines, and stray whitespace are tolerated. Labels are mapped to {-1, +1}
+    by sign (0/1 labels map to -1/+1). Returns an :class:`SvmDataset` whose
+    ``X`` is the dense ``(n_features, n_samples)`` matrix (``dtype=``
+    selectable) and whose ``.csr`` is the exact CSR triple over feature rows
+    — feed the latter to ``FeatureChunked.from_csr`` for out-of-core use
+    (this loader materializes the dense host matrix; for data that must stay
+    off host RAM use ``FeatureChunked.from_libsvm_cached``; ``w_true`` is
+    zeros). Pure numpy — no scipy requirement.
     """
     feats, samples, vals, labels = [], [], [], []
-    with open(path) as fh:
-        for line in fh:
-            line = line.split("#", 1)[0].strip()
-            if not line:
-                continue
-            parts = line.split()
-            labels.append(float(parts[0]))
-            i = len(labels) - 1
-            for tok in parts[1:]:
-                k, v = tok.split(":")
-                j = int(k) - (0 if zero_based else 1)
-                if j < 0:
-                    raise ValueError(
-                        f"feature index {k} in {path} is not "
-                        f"{'0' if zero_based else '1'}-based"
-                    )
-                feats.append(j)
-                samples.append(i)
-                vals.append(float(v))
+    for label, idx, vv in iter_libsvm(path, zero_based=zero_based):
+        labels.append(label)
+        i = len(labels) - 1
+        feats.extend(idx)
+        samples.extend([i] * len(idx))
+        vals.extend(vv)
     n = len(labels)
     if n == 0:
         raise ValueError(f"no samples in {path}")

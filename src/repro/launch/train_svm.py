@@ -306,6 +306,11 @@ def run_path_chunked(
     rules: str = "feature_vi",
     storage: str = "chunked", chunk_m: int = 512,
     exact_lipschitz: bool = False,
+    chunk_skip: bool = True,
+    dynamic: bool = False,
+    screen_every: int = 50,
+    libsvm_path=None,
+    store_dir=None,
     log=print,
 ):
     """The launcher's out-of-core lane: stream the screened path over
@@ -313,18 +318,30 @@ def run_path_chunked(
 
     ``csr`` (a ``repro.data.CsrData``, e.g. from a sparse synthetic design
     or the libsvm loader) backs ``--storage csr``; low-density chunks sweep
-    as BCOO so screening FLOPs track nnz. Single-host by construction — the
-    whole point is that only one chunk (plus the screened active set) ever
-    sits on the device.
+    as BCOO so screening FLOPs track nnz. ``store_dir`` (with a libsvm
+    input) keeps the chunks disk-resident: the file is converted once into
+    an mmap-backed chunk store (``FeatureChunked.from_libsvm_cached``) and
+    subsequent runs open the store without re-parsing — host RAM holds no
+    copy of X either. Single-host by construction — the whole point is
+    that only one chunk (plus the screened active set) ever sits on the
+    device; ``chunk_skip`` additionally skips the *transfer* of chunks the
+    stale-anchor cache certifies dead (see ``PathDriver``).
     """
     from repro.core import PathDriver
     from repro.sparse import FeatureChunked
 
-    # any program-backed feature-rule stack streams (feature_vi / edpp /
-    # dvi / auto); the chunked driver lane validates lowerability itself
-    # and raises for sample rules, which need in-core X
+    # program-backed feature stacks stream (feature_vi / edpp / dvi /
+    # auto); sample rules (sample_vi / composite / sifs) ride the
+    # transposed sweep + carried-margin verification; the driver lane
+    # validates the spec itself
     rule_spec = [] if rules in (None, "none") else rules
-    if storage == "csr":
+    if storage == "mmap" or store_dir is not None:
+        if libsvm_path is None:
+            raise ValueError("--store-dir builds its mmap store from a "
+                             "libsvm file; add --libsvm FILE")
+        fc, y = FeatureChunked.from_libsvm_cached(
+            libsvm_path, store_dir=store_dir, chunk_m=chunk_m)
+    elif storage == "csr":
         if csr is None:
             raise ValueError(
                 "--storage csr needs a CSR-backed dataset: generate with "
@@ -334,22 +351,30 @@ def run_path_chunked(
     else:
         fc = FeatureChunked.from_dense(X, chunk_m=chunk_m)
     driver = PathDriver(rules=rule_spec, tol=tol, max_iters=max_iters,
-                        exact_lipschitz=exact_lipschitz)
+                        exact_lipschitz=exact_lipschitz,
+                        chunk_skip=chunk_skip, dynamic=dynamic,
+                        screen_every=screen_every)
     r = driver.run(fc, y, n_lambdas=n_lambdas, lam_min_ratio=lam_min_ratio)
-    m = fc.shape[0]
+    m, n = fc.shape
     results = []
     for k in range(len(r.lambdas)):
         row = {"lam": float(r.lambdas[k]), "kept": int(r.kept[k]),
+               "kept_samples": int(r.kept_samples[k]),
+               "live_chunks": int(r.extras["live_chunks"][k]),
                "nnz": int(r.active[k]), "obj": float(r.objectives[k]),
                "iters": int(r.solver_iters[k]),
                "wall_s": float(r.wall_times[k])}
         results.append(row)
         log(f"[svm] k={k} lam={row['lam']:.4f} kept={row['kept']}/{m} "
+            f"samples={row['kept_samples']}/{n} "
+            f"chunks={row['live_chunks']}/{r.extras['n_chunks']} "
             f"nnz={row['nnz']} obj={row['obj']:.5f} ({row['wall_s']:.2f}s)")
     st = r.extras["stream_stats"]
     log(f"[svm] storage={storage} chunks={r.extras['n_chunks']} "
         f"chunk_m={chunk_m} max_device_rows={st['max_put_rows']} "
-        f"transfers={st['puts']} bcoo_transfers={st['bcoo_puts']}")
+        f"transfers={st['puts']} bcoo_transfers={st['bcoo_puts']} "
+        f"streamed={st['chunks_streamed']} skipped={st['chunks_skipped']} "
+        f"bytes_put={st['bytes_put']}")
     return results
 
 
@@ -366,19 +391,31 @@ def main():
     ap.add_argument("--libsvm", default=None, metavar="FILE",
                     help="load a libsvm/svmlight text file instead of "
                          "generating synthetic data")
-    ap.add_argument("--storage", choices=("dense", "chunked", "csr"),
+    ap.add_argument("--storage", choices=("dense", "chunked", "csr", "mmap"),
                     default="dense",
                     help="dense: in-core (m, n) device matrix; chunked: "
                          "host-resident feature chunks streamed to device "
                          "(out-of-core); csr: chunked CSR, low-density "
-                         "chunks swept as BCOO")
+                         "chunks swept as BCOO; mmap: disk-resident chunk "
+                         "store built once from --libsvm (nothing in host "
+                         "RAM either)")
     ap.add_argument("--chunk-m", type=int, default=512,
-                    help="feature rows per chunk for --storage chunked|csr")
+                    help="feature rows per chunk for --storage "
+                         "chunked|csr|mmap")
+    ap.add_argument("--store-dir", default=None, metavar="DIR",
+                    help="mmap chunk-store directory for --storage mmap "
+                         "(default: <libsvm file>.store)")
+    ap.add_argument("--no-chunk-skip", dest="chunk_skip",
+                    action="store_false",
+                    help="chunked storage: stream every chunk every step "
+                         "instead of skipping chunks certified dead by the "
+                         "stale-anchor cache (the full-stream baseline)")
     ap.add_argument("--rules", default="feature_vi",
                     help="screening rules: feature_vi|sample_vi|composite|"
                          "dvi|edpp|sifs|auto|none (comma-separated for a "
-                         "custom mix; scan engine and chunked storage take "
-                         "a-priori-safe feature-rule stacks only)")
+                         "custom mix; the scan engine takes a-priori-safe "
+                         "feature-rule stacks only, chunked storage adds "
+                         "verified sample rules via the transposed sweep)")
     ap.add_argument("--engine", choices=("host", "scan"), default="host",
                     help="host: per-step sharded loop with checkpointing; "
                          "scan: the whole path as one (shard_map'd) XLA "
@@ -420,7 +457,13 @@ def main():
         return
 
     rules = args.rules if "," not in args.rules else args.rules.split(",")
-    if args.libsvm:
+    if args.storage == "mmap" and args.libsvm:
+        # the mmap store is built straight from the file by the chunked
+        # lane (from_libsvm_cached) — never materialize X in host RAM here
+        from repro.data import SvmDataset
+
+        ds = SvmDataset(X=None, y=None, w_true=None, csr=None)
+    elif args.libsvm:
         ds = load_libsvm(args.libsvm)
     else:
         ds = make_sparse_classification(m=args.m, n=args.n, seed=0,
@@ -445,18 +488,17 @@ def main():
             )
         if args.model * args.data > 1:
             raise SystemExit(
-                "--storage chunked|csr is single-host streaming (one chunk "
-                "on one device); use --storage dense for sharded meshes"
-            )
-        if args.dynamic:
-            raise SystemExit(
-                "--dynamic needs in-core X (the in-solver re-screen sweeps "
-                "the full matrix every segment); use --storage dense"
+                "--storage chunked|csr|mmap is single-host streaming (one "
+                "chunk on one device); use --storage dense for sharded "
+                "meshes"
             )
         results = run_path_chunked(
             ds.X, ds.y, csr=ds.csr, n_lambdas=args.n_lambdas,
             rules=args.rules, storage=args.storage, chunk_m=args.chunk_m,
-            exact_lipschitz=args.exact_lipschitz)
+            exact_lipschitz=args.exact_lipschitz,
+            chunk_skip=args.chunk_skip, dynamic=args.dynamic,
+            screen_every=args.screen_every,
+            libsvm_path=args.libsvm, store_dir=args.store_dir)
         Path("artifacts").mkdir(exist_ok=True)
         Path("artifacts/svm_path.json").write_text(json.dumps(results, indent=2))
         return

@@ -6,23 +6,33 @@ Entry points:
   (dense or CSR; low-density chunks sweep as BCOO on device);
 * :func:`screen_stream` / :func:`screen_bounds_stream` — the paper's safe
   screen, chunk-accumulated (bitwise vs the in-core sweep on dense chunks);
+* :func:`screen_step_stream` / :class:`ChunkScreenCache` — the chunk-skip
+  plane: per-chunk stale-anchor bounds certify whole chunks dead *before*
+  their ``device_put``, so a path step streams only the live chunks;
+* :func:`stream_sample_stats` — the transposed (sample-axis) sweep feeding
+  ``sample_vi``/``sifs`` screening out of core;
 * :func:`fista_solve_chunked` — streamed FISTA behind the
-  ``core/solver.fista_solve(operator=...)`` seam;
+  ``core/solver.fista_solve(operator=...)`` seam (``screen_every=`` adds
+  dynamic chunk-level re-screening between segments);
 * the chunked :class:`~repro.core.path.PathDriver` lane: pass a
   ``FeatureChunked`` to ``svm_path`` / ``PathDriver.run`` and the screened
   path gathers only the chunks that survive screening — peak device memory
-  ``O(chunk + kept)``.
+  ``O(chunk + kept)``. ``FeatureChunked.from_libsvm_cached`` /
+  ``from_store`` keep the chunks themselves disk-resident (memmap).
 """
 
 from .chunked import BCOO_DENSITY_THRESHOLD, CsrChunk, FeatureChunked  # noqa: F401
 from .screen_stream import (  # noqa: F401
+    ChunkScreenCache,
     fixed_reductions,
     lambda_max_stream,
     screen_bounds_stream,
     screen_stack_stream,
+    screen_step_stream,
     screen_stream,
     stream_anchor_stats,
     stream_feature_reductions,
+    stream_sample_stats,
 )
 from .solver_stream import (  # noqa: F401
     fista_solve_chunked,

@@ -25,19 +25,38 @@ provides the storage container the rest of the pipeline streams over:
   that *survive screening* — peak device memory is ``O(chunk + kept)``,
   never ``O(m * n)``.
 
+Chunk skipping (the chunk-level screening data plane): every streaming
+entry point takes ``live_chunks=`` — a boolean mask (or index list) over
+chunks — and chunks marked dead are never ``device_put`` at all.
+:meth:`matvec` fills their output rows with zeros (their weights are
+certified zero) and :meth:`rmatvec` simply omits their partials, so solver
+sweeps cost transfers proportional to the *live* data. The safe-bound
+machinery that certifies chunks dead lives in ``screen_stream.py``
+(:class:`~repro.sparse.screen_stream.ChunkScreenCache`).
+
+Disk residency: :meth:`save_store` / :meth:`from_store` round-trip the
+container through an ``np.memmap``-backed directory (one flat binary per
+array; chunks are memmap *views*, so host RSS stays O(touched pages), and
+the OS page cache is the disk→host stage of the double buffer), and
+:meth:`from_libsvm_cached` builds that store once from libsvm text in two
+streaming passes — the full ``(m, n)`` matrix is never host-RAM-resident.
+
 Device-memory contract: no method of this class ever places more than one
 chunk (plus ``O(m + n)`` vectors) on the device at a time; the property test
 in ``tests/test_sparse_stream.py`` walks the jaxprs of every per-chunk
 kernel and asserts no ``(m, n)``-sized intermediate exists. ``as_dense()``
 is the explicit escape hatch for in-core use and small tests.
 
-``stats`` counts transfers (``puts``) and the largest row block ever put on
-device (``max_put_rows``) so benchmarks and tests can observe the contract
-instead of trusting it.
+``stats`` counts transfers (``puts`` — and ``chunks_streamed`` /
+``chunks_skipped`` / ``bytes_put`` for the skip plane) and the largest row
+block ever put on device (``max_put_rows``) so benchmarks and tests can
+observe the contract instead of trusting it.
 """
 
 from __future__ import annotations
 
+import json
+import os
 from typing import NamedTuple, Optional, Sequence, Union
 
 import jax
@@ -129,7 +148,9 @@ class FeatureChunked:
                 rows.append(c.shape[0])
         self.offsets = np.concatenate([[0], np.cumsum(rows)]).astype(np.int64)
         self.m = int(self.offsets[-1])
-        self.stats = {"puts": 0, "max_put_rows": 0, "bcoo_puts": 0}
+        self.stats = {"puts": 0, "max_put_rows": 0, "bcoo_puts": 0,
+                      "chunks_streamed": 0, "chunks_skipped": 0,
+                      "bytes_put": 0}
 
     # -- constructors ------------------------------------------------------
 
@@ -211,48 +232,124 @@ class FeatureChunked:
         c = self.chunks[i]
         rows = c.rows if isinstance(c, CsrChunk) else c.shape[0]
         self.stats["puts"] += 1
+        self.stats["chunks_streamed"] += 1
         self.stats["max_put_rows"] = max(self.stats["max_put_rows"], rows)
         if isinstance(c, CsrChunk) and c.density <= self.bcoo_threshold:
             self.stats["bcoo_puts"] += 1
             row_idx = np.repeat(np.arange(c.rows, dtype=np.int32),
                                 np.diff(c.indptr))
             idx = np.stack([row_idx, c.indices.astype(np.int32)], axis=1)
+            data = c.data.astype(self.dtype)
+            self.stats["bytes_put"] += data.nbytes + idx.nbytes
             return jsparse.BCOO(
-                (jax.device_put(c.data.astype(self.dtype)),
-                 jax.device_put(idx)),
+                (jax.device_put(data), jax.device_put(idx)),
                 shape=(c.rows, self.n),
             )
-        dense = c.to_dense(self.dtype) if isinstance(c, CsrChunk) else c
-        return jax.device_put(np.asarray(dense, self.dtype))
+        dense = np.asarray(c.to_dense(self.dtype) if isinstance(c, CsrChunk)
+                           else c, self.dtype)
+        self.stats["bytes_put"] += dense.nbytes
+        return jax.device_put(dense)
 
-    def stream(self):
+    def live_order(self, live_chunks) -> list:
+        """Normalize a ``live_chunks`` spec (bool mask over chunks, or index
+        list) into an ascending chunk-index list; ``None`` means all live."""
+        if live_chunks is None:
+            return list(range(self.n_chunks))
+        lv = np.asarray(live_chunks)
+        if lv.dtype == bool:
+            if lv.shape != (self.n_chunks,):
+                raise ValueError(
+                    f"live_chunks mask shape {lv.shape} != ({self.n_chunks},)")
+            return [int(i) for i in np.nonzero(lv)[0]]
+        return sorted(int(i) for i in lv)
+
+    def stream(self, live_chunks=None):
         """Yield ``((start, stop), device_chunk)`` with one-chunk prefetch.
 
         ``jax.device_put`` is asynchronous: dispatching chunk ``i+1``'s
         transfer before yielding chunk ``i`` overlaps the next copy with the
         caller's compute on the current chunk (classic double buffering);
-        at most two chunks are in flight on the device at any moment.
+        at most two chunks are in flight on the device at any moment. For
+        memmap-backed chunks the host-side read of chunk ``i+1`` (OS page-in
+        inside ``_device_form``) also happens before the caller computes on
+        chunk ``i``, so disk→host overlaps device compute the same way.
+
+        ``live_chunks`` restricts the stream to the live subset: dead
+        chunks are *never* transferred (their ``device_put`` is skipped
+        entirely and counted in ``stats["chunks_skipped"]``). The prefetch
+        runs over the live subsequence, so skipping keeps the double buffer.
         """
-        nxt = self._device_form(0)
-        for i in range(self.n_chunks):
+        order = self.live_order(live_chunks)
+        self.stats["chunks_skipped"] += self.n_chunks - len(order)
+        if not order:
+            return
+        nxt = self._device_form(order[0])
+        for j, i in enumerate(order):
             cur = nxt
-            if i + 1 < self.n_chunks:
-                nxt = self._device_form(i + 1)
+            if j + 1 < len(order):
+                nxt = self._device_form(order[j + 1])
             yield self.chunk_bounds(i), cur
 
     # -- chunk-accumulated GEMV pair (the solver's two sweeps) -------------
 
-    def matvec(self, v) -> jax.Array:
-        """``X @ v`` — per-chunk rows, concatenated (the gradient sweep)."""
-        v = jnp.asarray(v, self.dtype)
-        return jnp.concatenate([_chunk_mv(dev, v) for _, dev in self.stream()])
+    def matvec(self, v, live_chunks=None) -> jax.Array:
+        """``X @ v`` — per-chunk rows, concatenated (the gradient sweep).
 
-    def rmatvec(self, w) -> jax.Array:
-        """``X^T w`` — per-chunk partials, accumulated (the margin sweep)."""
+        Dead chunks contribute exact zero rows without being transferred:
+        the screened solver only ever multiplies into weights certified zero
+        there, and the zero-fill keeps the output shape ``(m,)``.
+        """
+        v = jnp.asarray(v, self.dtype)
+        if live_chunks is None:
+            return jnp.concatenate(
+                [_chunk_mv(dev, v) for _, dev in self.stream()])
+        live = set(self.live_order(live_chunks))
+        it = self.stream(live_chunks=live_chunks)
+        parts = []
+        for i in range(self.n_chunks):
+            s, e = self.chunk_bounds(i)
+            if i in live:
+                parts.append(_chunk_mv(next(it)[1], v))
+            else:
+                parts.append(jnp.zeros((e - s,), self.dtype))
+        return jnp.concatenate(parts)
+
+    def rmatvec(self, w, live_chunks=None) -> jax.Array:
+        """``X^T w`` — per-chunk partials, accumulated (the margin sweep).
+
+        Dead chunks are skipped outright: their ``w`` slice is zero, so
+        their partial is an exact zero addend.
+        """
         w = jnp.asarray(w, self.dtype)
         acc = jnp.zeros((self.n,), self.dtype)
-        for (s, e), dev in self.stream():
+        for (s, e), dev in self.stream(live_chunks=live_chunks):
             acc = acc + _chunk_rmv(dev, w[s:e])
+        return acc
+
+    def col_sq(self) -> jax.Array:
+        """``||x_i||^2`` per *sample* (column) — the transposed reduction.
+
+        Chunk-accumulated sum over feature rows of ``X**2``; CSR chunks
+        scatter their squared data by column index on the host (no densify,
+        no transfer). Theta-independent, so the result is memoized on the
+        container — sample rules read it every path step for free. This is
+        what lets ``sifs``/``sample_vi`` run out-of-core instead of forcing
+        ``as_dense()``.
+        """
+        cached = getattr(self, "_col_sq_cache", None)
+        if cached is not None:
+            return cached
+        acc = jnp.zeros((self.n,), self.dtype)
+        for i, c in enumerate(self.chunks):
+            if isinstance(c, CsrChunk):
+                part = np.zeros((self.n,), dtype=self.dtype)
+                if c.nnz:
+                    np.add.at(part, c.indices,
+                              (c.data.astype(self.dtype)) ** 2)
+                acc = acc + jnp.asarray(part)
+            else:
+                acc = acc + _chunk_csq(self._device_form(i))
+        self._col_sq_cache = acc
         return acc
 
     def row_sq(self) -> jax.Array:
@@ -291,6 +388,158 @@ class FeatureChunked:
                 out[sel] = c[local]
         return out
 
+    # -- disk-resident store (np.memmap-backed chunks) ---------------------
+
+    def save_store(self, store_dir, y=None) -> str:
+        """Write this container to an mmap-able on-disk store.
+
+        Layout: ``meta.json`` plus one flat binary per array — ``X.bin``
+        (dense, row-major ``(m, n)``) or ``data.bin``/``indices.bin``/
+        ``indptr.bin`` (CSR over feature rows). Arrays are written chunk by
+        chunk, so saving never needs the full matrix in RAM either.
+        ``meta.json`` is written last and doubles as the build-complete
+        marker. Pass ``y`` to store labels alongside (``y.bin``).
+        """
+        os.makedirs(store_dir, exist_ok=True)
+        all_csr = all(isinstance(c, CsrChunk) for c in self.chunks)
+        if all_csr:
+            running = 0
+            indptr_parts = [np.zeros((1,), np.int64)]
+            with open(os.path.join(store_dir, "data.bin"), "wb") as fd, \
+                    open(os.path.join(store_dir, "indices.bin"), "wb") as fi:
+                for c in self.chunks:
+                    np.asarray(c.data, self.dtype).tofile(fd)
+                    np.asarray(c.indices, np.int32).tofile(fi)
+                    indptr_parts.append(
+                        np.asarray(c.indptr[1:], np.int64) + running)
+                    running += c.nnz
+            np.concatenate(indptr_parts).tofile(
+                os.path.join(store_dir, "indptr.bin"))
+            fmt = "csr"
+        else:
+            with open(os.path.join(store_dir, "X.bin"), "wb") as fx:
+                for c in self.chunks:
+                    dense = (c.to_dense(self.dtype) if isinstance(c, CsrChunk)
+                             else np.asarray(c, self.dtype))
+                    dense.tofile(fx)
+            fmt = "dense"
+        if y is not None:
+            np.asarray(y, self.dtype).tofile(os.path.join(store_dir, "y.bin"))
+        chunk_m = int(max(self.offsets[i + 1] - self.offsets[i]
+                          for i in range(self.n_chunks)))
+        meta = {"format": fmt, "m": self.m, "n": self.n,
+                "dtype": self.dtype.name, "chunk_m": chunk_m,
+                "has_y": y is not None}
+        with open(os.path.join(store_dir, "meta.json"), "w") as fm:
+            json.dump(meta, fm)
+        return str(store_dir)
+
+    @classmethod
+    def from_store(cls, store_dir, chunk_m: Optional[int] = None,
+                   **kw) -> "FeatureChunked":
+        """Open an on-disk store with ``np.memmap``-backed chunks.
+
+        Chunks are *views* into the memmaps, so nothing is read from disk
+        until a chunk is actually streamed — host RSS tracks the touched
+        pages (plus whatever the OS cares to cache), never the matrix.
+        ``chunk_m`` overrides the stored chunking (views are free to
+        re-slice). Labels saved alongside are exposed as ``.labels`` (or
+        ``None``).
+        """
+        with open(os.path.join(store_dir, "meta.json")) as fm:
+            meta = json.load(fm)
+        m, n = int(meta["m"]), int(meta["n"])
+        dtype = np.dtype(meta["dtype"])
+        chunk_m = int(chunk_m or meta["chunk_m"])
+        if meta["format"] == "csr":
+            data = np.memmap(os.path.join(store_dir, "data.bin"),
+                             dtype=dtype, mode="r")
+            indices = np.memmap(os.path.join(store_dir, "indices.bin"),
+                                dtype=np.int32, mode="r")
+            indptr = np.memmap(os.path.join(store_dir, "indptr.bin"),
+                               dtype=np.int64, mode="r", shape=(m + 1,))
+            fc = cls.from_csr((data, indices, indptr, (m, n)),
+                              chunk_m=chunk_m, **kw)
+        else:
+            X = np.memmap(os.path.join(store_dir, "X.bin"), dtype=dtype,
+                          mode="r", shape=(m, n))
+            fc = cls.from_dense(X, chunk_m=chunk_m, **kw)
+        y_path = os.path.join(store_dir, "y.bin")
+        fc.labels = (np.fromfile(y_path, dtype=dtype)
+                     if meta.get("has_y") and os.path.exists(y_path) else None)
+        return fc
+
+    @classmethod
+    def from_libsvm_cached(cls, path, store_dir=None, chunk_m: int = 512,
+                           dtype=np.float32, n_features: Optional[int] = None,
+                           zero_based: bool = False, rebuild: bool = False,
+                           **kw) -> tuple:
+        """Libsvm text → on-disk CSR store (built once) → memmap container.
+
+        Returns ``(FeatureChunked, y)``. The store is built in two streaming
+        passes over the text (pass 1 counts nnz per feature row, pass 2
+        scatters values into preallocated memmaps), transposing the
+        sample-major text into the paper's feature-row layout with memory
+        O(m + one line) — the dense ``(m, n)`` matrix never exists in host
+        RAM. Re-opens the existing store on subsequent calls (it sits next
+        to the text as ``<path>.store/`` unless ``store_dir`` is given);
+        ``rebuild=True`` forces a rebuild. Gzip input works transparently.
+        """
+        from ..data.svm import iter_libsvm
+
+        store_dir = str(store_dir or f"{path}.store")
+        if rebuild or not os.path.exists(os.path.join(store_dir, "meta.json")):
+            os.makedirs(store_dir, exist_ok=True)
+            # pass 1: samples, labels, nnz per feature row
+            counts = np.zeros((1024,), np.int64)
+            labels = []
+            for label, idx, _ in iter_libsvm(path, zero_based=zero_based):
+                labels.append(label)
+                if idx:
+                    top = max(idx)
+                    while top >= len(counts):
+                        counts = np.concatenate([counts, np.zeros_like(counts)])
+                    np.add.at(counts, idx, 1)
+            n = len(labels)
+            if n == 0:
+                raise ValueError(f"no samples in {path}")
+            seen_m = int(np.max(np.nonzero(counts)[0])) + 1 if counts.any() else 0
+            m = int(n_features) if n_features else seen_m
+            if seen_m > m:
+                raise ValueError(
+                    f"feature index {seen_m - 1} >= n_features={m}")
+            counts = counts[:m]
+            indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+            nnz = int(indptr[-1])
+            dt = np.dtype(dtype)
+            data = np.memmap(os.path.join(store_dir, "data.bin"), dtype=dt,
+                             mode="w+", shape=(max(nnz, 1),))
+            indices = np.memmap(os.path.join(store_dir, "indices.bin"),
+                                dtype=np.int32, mode="w+",
+                                shape=(max(nnz, 1),))
+            # pass 2: scatter each sample's entries at the rows' fill fronts
+            fill = indptr[:-1].copy()
+            for col, (_, idx, vals) in enumerate(
+                    iter_libsvm(path, zero_based=zero_based)):
+                if not idx:
+                    continue
+                jj = np.asarray(idx, np.int64)
+                pos = fill[jj]
+                data[pos] = np.asarray(vals, dt)
+                indices[pos] = col
+                fill[jj] += 1
+            data.flush()
+            indices.flush()
+            indptr.tofile(os.path.join(store_dir, "indptr.bin"))
+            y = np.where(np.asarray(labels) > 0, 1.0, -1.0).astype(dt)
+            y.tofile(os.path.join(store_dir, "y.bin"))
+            meta = {"format": "csr", "m": m, "n": n, "dtype": dt.name,
+                    "chunk_m": int(chunk_m), "has_y": True}
+            with open(os.path.join(store_dir, "meta.json"), "w") as fm:
+                json.dump(meta, fm)
+        fc = cls.from_store(store_dir, chunk_m=chunk_m, **kw)
+        return fc, fc.labels
+
 
 # --------------------------------------------------------------------------
 # per-chunk device kernels (jitted once per chunk shape / sparsity pattern)
@@ -316,3 +565,9 @@ def _chunk_rmv(Xc, wc):
 @jax.jit
 def _chunk_sq(Xc):
     return jnp.sum(Xc * Xc, axis=1)
+
+
+@jax.jit
+def _chunk_csq(Xc):
+    # transposed reduction: per-sample (column) partial of ||x_i||^2
+    return jnp.sum(Xc * Xc, axis=0)

@@ -25,6 +25,16 @@ screening bound sweep, see ``screen_stream.py``).
 ``dual.safe_theta_and_delta`` (same alternating feasibility projection,
 same 1-strong-concavity radius), so the chunked path driver can certify
 anchors without an in-core X.
+
+Dynamic chunk-level re-screening: ``screen_every`` turns the solve into
+segments. Between segments the live duality gap certifies an at-lambda
+region, the region's bounds AND into the live *feature* mask (certified
+features have ``w* = 0``, so the reduced problem shares the optimum —
+the standard dynamic-screening argument), and the live *chunk* set is
+whatever chunks still hold a live feature — every subsequent gradient /
+margin / certification sweep streams only those. Dead chunks' gradient
+rows are exact zeros (their weights are pinned 0 by the mask), so mid-
+solve transfer volume tracks the certified support, not ``m``.
 """
 
 from __future__ import annotations
@@ -33,7 +43,15 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.screening import (
+    SAFE_TAU,
+    FeatureReductions,
+    _finalize_bounds,
+    row_dot,
+    shared_scalars,
+)
 from repro.core.solver import FistaResult, soft_threshold
 
 from .chunked import FeatureChunked
@@ -86,6 +104,15 @@ def lipschitz_estimate_stream(fc: FeatureChunked, n_iters: int = 30,
     return norm(v)
 
 
+def _chunks_with_live_features(fc: FeatureChunked, fmask: np.ndarray) -> np.ndarray:
+    """Chunk live mask: a chunk stays live while any of its features does."""
+    live = np.zeros((fc.n_chunks,), dtype=bool)
+    for i in range(fc.n_chunks):
+        s, e = fc.chunk_bounds(i)
+        live[i] = bool(fmask[s:e].any())
+    return live
+
+
 def fista_solve_chunked(
     fc: FeatureChunked,
     y,
@@ -96,14 +123,26 @@ def fista_solve_chunked(
     tol: float = 1e-9,
     L: Optional[jax.Array] = None,
     sample_mask=None,
+    feature_mask=None,
+    screen_every: Optional[int] = None,
+    screen_tau: float = SAFE_TAU,
+    report: Optional[dict] = None,
 ) -> FistaResult:
     """Solve the primal over chunked storage (see module docstring).
 
     Same contract as ``solver.fista_solve`` (warm starts, path-shared ``L``,
     0/1 ``sample_mask`` dropping loss columns); device memory stays at one
     chunk plus ``O(m + n)`` vectors.
+
+    ``feature_mask`` (bool ``(m,)``) pins screened features to zero and
+    derives the live *chunk* set every sweep streams over — a chunk with no
+    live feature is never transferred. ``screen_every`` additionally
+    re-certifies from the live duality gap between segments (at-lambda VI
+    region), shrinking both masks mid-solve; ``report`` (a dict, mutated)
+    receives ``screens`` / ``live_chunks`` / ``kept`` telemetry.
     """
     m, n = fc.shape
+    y_key = y
     y = jnp.asarray(y, fc.dtype)
     lam = jnp.asarray(lam, fc.dtype)
     sm = (jnp.ones_like(y) if sample_mask is None
@@ -113,12 +152,29 @@ def fista_solve_chunked(
     L = jnp.maximum(jnp.asarray(L, fc.dtype) * 1.01, 1e-12)
     inv_L = 1.0 / L
 
+    dynamic = screen_every is not None and screen_every > 0
+    if feature_mask is not None:
+        fmask = np.asarray(feature_mask, bool).copy()
+    else:
+        fmask = np.ones((m,), dtype=bool)
+    masked = not fmask.all()
+    live = _chunks_with_live_features(fc, fmask) if (masked or dynamic) else None
+    live_arg = None if (live is None or live.all()) else live
+    fmask_dev = jnp.asarray(fmask, fc.dtype)
+
+    if dynamic:
+        from .screen_stream import fixed_reductions
+
+        d_one, d_y, d_sq = fixed_reductions(fc, y_key)
+
     if w0 is None:
         w = jnp.zeros((m,), fc.dtype)
         u = jnp.zeros((n,), fc.dtype)
     else:
         w = jnp.asarray(w0, fc.dtype)
-        u = fc.rmatvec(w)
+        if masked:
+            w = w * fmask_dev
+        u = fc.rmatvec(w, live_chunks=live_arg)
     b = jnp.asarray(jnp.mean(y) if b0 is None else b0, fc.dtype)
 
     xi = _slacks(u, b, y, sm)
@@ -129,15 +185,19 @@ def fista_solve_chunked(
     k = 0
     converged = False
     rel_prev = rel_prev2 = float("inf")
+    n_screens = 0
 
     def prox_from(w_a, b_a, u_a):
-        """One proximal step anchored at known margins: 2 streams of X."""
+        """One proximal step anchored at known margins: 2 streams of X
+        (live chunks only — dead rows are pinned zero by the mask)."""
         xi_a = _slacks(u_a, b_a, y, sm)
         gv = y * xi_a
-        gw = -fc.matvec(gv)
+        gw = -fc.matvec(gv, live_chunks=live_arg)
         gb = -jnp.sum(gv)
         w_new, b_new = _prox(w_a, b_a, gw, gb, inv_L, lam)
-        u_new = fc.rmatvec(w_new)
+        if masked:
+            w_new = w_new * fmask_dev
+        u_new = fc.rmatvec(w_new, live_chunks=live_arg)
         obj_new = _objective(_slacks(u_new, b_new, y, sm), w_new, lam)
         return w_new, b_new, u_new, obj_new
 
@@ -168,6 +228,46 @@ def fista_solve_chunked(
             break
         rel_prev, rel_prev2 = rel, rel_prev
 
+        if dynamic and k % int(screen_every) == 0 and k < max_iters:
+            # segment boundary: certify the reduced problem's gap, screen
+            # the at-lambda region, AND into the live masks
+            theta, delta = gap_theta_delta_stream(
+                fc, y, w, b, lam, u=u,
+                live_chunks=live_arg, feature_mask=fmask_dev)
+            yt = y * theta
+            parts = []
+            for i in range(fc.n_chunks):
+                s, e = fc.chunk_bounds(i)
+                parts.append(jnp.zeros((e - s,), fc.dtype))
+            for (s, e), dev in fc.stream(live_chunks=live_arg):
+                i = int(np.searchsorted(fc.offsets[1:], s, side="right"))
+                parts[i] = (row_dot(dev, yt) if isinstance(dev, jnp.ndarray)
+                            else dev @ yt)
+            red = FeatureReductions(d_theta=jnp.concatenate(parts),
+                                    d_one=d_one, d_y=d_y, d_sq=d_sq)
+            sh = shared_scalars(y, lam, lam, theta, delta=delta)
+            keep = np.asarray(_finalize_bounds(red, sh) >= screen_tau)
+            new_fmask = fmask & keep
+            n_screens += 1
+            if new_fmask.sum() < fmask.sum():
+                fmask = new_fmask
+                masked = True
+                fmask_dev = jnp.asarray(fmask, fc.dtype)
+                live = _chunks_with_live_features(fc, fmask)
+                live_arg = None if live.all() else live
+                w = w * fmask_dev
+                u = fc.rmatvec(w, live_chunks=live_arg)
+                obj = _objective(_slacks(u, b, y, sm), w, lam)
+                # mask change invalidates momentum: restart cleanly
+                w_prev, b_prev, u_prev, t = w, b, u, 1.0
+                rel_prev = rel_prev2 = float("inf")
+
+    if report is not None:
+        report.update(
+            screens=n_screens,
+            kept=int(fmask.sum()),
+            live_chunks=int(live.sum()) if live is not None else fc.n_chunks,
+        )
     return FistaResult(
         w=w, b=b, obj=obj, n_iters=jnp.asarray(k, jnp.int32),
         converged=jnp.asarray(converged), u=u,
@@ -182,36 +282,60 @@ def gap_theta_delta_stream(
     lam,
     n_feas_iters: int = 8,
     u: Optional[jax.Array] = None,
-) -> tuple[jax.Array, jax.Array]:
+    live_chunks=None,
+    feature_mask=None,
+    want_corr: bool = False,
+):
     """Streamed ``(theta1, delta)`` certificate — twin of
     ``dual.safe_theta_and_delta``.
 
-    Each feasibility iteration needs the full correlation sweep
-    ``X (y * alpha)`` (the rescale is a max over *all* features), so this
-    costs ``n_feas_iters + 1`` streams; ``u`` (margins ``X^T w``, e.g. the
+    Each feasibility iteration needs the correlation sweep ``X (y * alpha)``
+    (the rescale is a max over the problem's features), so this costs
+    ``n_feas_iters + 1`` streams; ``u`` (margins ``X^T w``, e.g. the
     solver's carried ones) saves the extra margin stream.
+
+    ``live_chunks`` / ``feature_mask`` certify the *reduced* problem
+    instead: features already screened out have ``w* = 0``, so the reduced
+    problem shares the full optimum and its dual-feasibility max runs over
+    live features only — that is what lets both mid-solve certification
+    (dynamic chunked solves) and the path driver's between-step anchor
+    certification skip dead chunks' transfers.
+
+    ``want_corr=True`` returns ``(theta1, delta, d_theta)`` where
+    ``d_theta = X (y * theta1)`` falls out of the *final* rescale's own
+    correlation sweep (``theta1 = s * alpha / lam`` implies
+    ``X (y * theta1) = s * corr / lam`` — zero extra streams). Entries in
+    skipped chunks are zeros: only live chunks' slices are valid, which is
+    exactly what the chunk-skip cache refresh consumes
+    (``ChunkScreenCache.refresh``). The feature mask applies to the rescale
+    *max* only, so live chunks' ``d_theta`` entries are valid for every
+    feature in them, screened or not.
     """
     y = jnp.asarray(y, fc.dtype)
     lam = jnp.asarray(lam, fc.dtype)
     if u is None:
-        u = fc.rmatvec(jnp.asarray(w, fc.dtype))
+        u = fc.rmatvec(jnp.asarray(w, fc.dtype), live_chunks=live_chunks)
     xi = jnp.maximum(0.0, 1.0 - y * (u + jnp.asarray(b, fc.dtype)))
     alpha = xi
     n = y.shape[0]
+    fm = None if feature_mask is None else jnp.asarray(feature_mask, fc.dtype)
 
     def rescale(alpha):
-        corr = fc.matvec(y * alpha)
-        mx = jnp.max(jnp.abs(corr))
-        return alpha * jnp.minimum(1.0, lam / jnp.maximum(mx, 1e-30))
+        corr = fc.matvec(y * alpha, live_chunks=live_chunks)
+        mx = jnp.max(jnp.abs(corr if fm is None else corr * fm))
+        s = jnp.minimum(1.0, lam / jnp.maximum(mx, 1e-30))
+        return alpha * s, corr * s
 
     for _ in range(n_feas_iters):
-        alpha = rescale(alpha)
+        alpha, _ = rescale(alpha)
         alpha = jnp.maximum(0.0, alpha - (alpha @ y) / n * y)
-    alpha = rescale(alpha)
+    alpha, corr = rescale(alpha)
 
     gap = (0.5 * jnp.sum(xi * xi)
            + lam * jnp.sum(jnp.abs(jnp.asarray(w, fc.dtype)))
            - (jnp.sum(alpha) - 0.5 * jnp.sum(alpha * alpha)))
     eq_resid = jnp.abs(alpha @ y) / jnp.sqrt(jnp.asarray(float(n), fc.dtype))
     delta = (jnp.sqrt(2.0 * jnp.maximum(gap, 0.0)) + 2.0 * eq_resid) / lam
+    if want_corr:
+        return alpha / lam, delta, corr / lam
     return alpha / lam, delta

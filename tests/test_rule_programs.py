@@ -229,13 +229,22 @@ def test_server_rejects_anchor_history_rules():
         job.group_key()
 
 
-def test_chunked_rejects_sample_rules():
+def test_chunked_runs_composite_sample_rules():
+    # chunked storage grew a transposed streamed sweep, so sample rules
+    # now run out-of-core instead of failing at dispatch: composite
+    # (feature VI + verified samples) must match the dense host driver.
+    # (Deeper coverage lives in tests/test_sparse_stream.py.)
     from repro.sparse import FeatureChunked
 
     X, y = _problem(m=60, n=40, seed=2)
-    fc = FeatureChunked.from_dense(np.asarray(X), chunk_m=32)
-    with pytest.raises(ValueError, match="feature rule only"):
-        PathDriver(rules="composite").run(fc, np.asarray(y), n_lambdas=3)
+    X_np, y_np = np.asarray(X), np.asarray(y)
+    fc = FeatureChunked.from_dense(X_np, chunk_m=32)
+    chunked = PathDriver(rules="composite", tol=TOL).run(
+        fc, y_np, n_lambdas=3, lam_min_ratio=0.3)
+    dense = PathDriver(rules="composite", tol=TOL).run(
+        X, y, n_lambdas=3, lam_min_ratio=0.3)
+    assert _rel(chunked.objectives, dense.objectives) < 1e-5
+    np.testing.assert_array_equal(chunked.kept_samples, dense.kept_samples)
 
 
 # -- chunked storage runs the program stacks ------------------------------

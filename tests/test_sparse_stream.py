@@ -15,15 +15,23 @@ Invariants:
                         than one chunk of X (stats observe the transfers).
   C6 (path):            the chunked screened path matches the in-core host
                         driver (objectives <= 1e-6; bitwise with a shared
-                        Lipschitz bound), with sample-rule/dynamic/mask
-                        configs rejected loudly.
+                        Lipschitz bound) for feature, sample and dynamic
+                        configs; mask reduce / program-less rules / scan
+                        engines rejected loudly.
   C7 (data):            sparse synthetic datasets carry an exact CSR view;
-                        the libsvm loader parses indices/labels correctly.
+                        the libsvm loader parses indices/labels correctly
+                        (gzip input, comments, dtype override).
+  C8 (chunk skip):      chunk-level gating is safe (a skipped chunk's
+                        stamped bounds sit below tau and agree with the
+                        fresh sweep) and free (the skip path is bitwise
+                        equal to the full-stream twin, transferring
+                        strictly fewer chunks); the mmap store round-trips.
 
 The CI ``stream`` lane runs this file with REPRO_STREAM_CHUNK_M forcing a
 small, ragged chunk size.
 """
 
+import gzip
 import os
 
 import jax
@@ -37,10 +45,12 @@ from repro.core.dual import safe_theta_and_delta
 from repro.data import load_libsvm, make_sparse_classification
 from repro.sparse import (
     BCOO_DENSITY_THRESHOLD,
+    ChunkScreenCache,
     FeatureChunked,
     fista_solve_chunked,
     lambda_max_stream,
     lipschitz_estimate_stream,
+    screen_step_stream,
     screen_stream,
     stream_feature_reductions,
 )
@@ -54,6 +64,17 @@ ENV_CHUNK_M = int(os.environ.get("REPRO_STREAM_CHUNK_M", "64"))
 def dense_inst():
     ds = make_sparse_classification(m=300, n=130, k_active=12, seed=21)
     return ds, jnp.asarray(ds.X), jnp.asarray(ds.y)
+
+
+@pytest.fixture(scope="module")
+def planted_inst():
+    """Informative head block + weak noise tail: features past row 64 have
+    tiny norms, so whole tail chunks screen out early and *stay* dead —
+    the geometry chunk-level gating is built for."""
+    ds = make_sparse_classification(m=320, n=120, k_active=8, seed=7)
+    X = np.array(ds.X, copy=True)
+    X[64:] *= 0.05
+    return X, np.asarray(ds.y)
 
 
 @pytest.fixture(scope="module")
@@ -245,7 +266,8 @@ def test_no_full_matrix_in_chunk_jaxprs(dense_inst):
     m, n = ds.X.shape
     chunk_m = ENV_CHUNK_M if ENV_CHUNK_M < m else 64
     from repro.core.screening import _row_stable_reductions, row_dot
-    from repro.sparse.chunked import _chunk_mv, _chunk_rmv, _chunk_sq
+    from repro.sparse.chunked import _chunk_csq, _chunk_mv, _chunk_rmv, \
+        _chunk_sq
 
     Xc = jnp.zeros((chunk_m, n), jnp.float32)
     v = jnp.zeros((n,), jnp.float32)
@@ -254,6 +276,7 @@ def test_no_full_matrix_in_chunk_jaxprs(dense_inst):
         jax.make_jaxpr(_chunk_mv)(Xc, v),
         jax.make_jaxpr(_chunk_rmv)(Xc, wc),
         jax.make_jaxpr(_chunk_sq)(Xc),
+        jax.make_jaxpr(_chunk_csq)(Xc),
         jax.make_jaxpr(row_dot)(Xc, v),
         jax.make_jaxpr(_row_stable_reductions)(Xc, v, v),
     ]
@@ -315,19 +338,215 @@ def test_chunked_path_self_contained(dense_inst):
     assert rel < 1e-5, rel  # fp32 plateau floor (see PathDriver docstring)
 
 
+def test_chunked_path_sample_rules_match_host(dense_inst):
+    """sifs (EDPP feature half + verified sample half) out of core: the
+    transposed sweep feeds the margins, verification rides the carried u."""
+    ds, X, y = dense_inst
+    from repro.core.solver import lipschitz_estimate
+
+    L = lipschitz_estimate(X)
+    kw = dict(rules="sifs", tol=1e-10, max_iters=20000, L=L)
+    grid = dict(n_lambdas=10, lam_min_ratio=0.02)
+    host = PathDriver(**kw).run(ds.X, ds.y, **grid)
+    ch = PathDriver(**kw).run(
+        FeatureChunked.from_dense(ds.X, chunk_m=ENV_CHUNK_M), ds.y, **grid)
+    rel = np.max(np.abs(host.objectives - ch.objectives)
+                 / np.maximum(np.abs(host.objectives), 1.0))
+    assert rel < 1e-6, rel  # verification makes any sample screen exact
+    assert "sample_masks" in ch.extras
+    np.testing.assert_array_equal(ch.kept_samples, host.kept_samples)
+    n = ds.X.shape[1]
+    assert np.any(ch.kept_samples[1:] < n)  # the screen actually fires
+
+
+def test_chunked_path_dynamic_matches_host(dense_inst):
+    """dynamic=True routes to the segmented streamed solver; objectives
+    still match the (non-dynamic) host path."""
+    ds, X, y = dense_inst
+    kw = dict(rules="feature_vi", tol=1e-10, max_iters=20000)
+    grid = dict(n_lambdas=5, lam_min_ratio=0.15)
+    host = PathDriver(**kw).run(ds.X, ds.y, **grid)
+    ch = PathDriver(dynamic=True, screen_every=40, **kw).run(
+        FeatureChunked.from_dense(ds.X, chunk_m=ENV_CHUNK_M), ds.y, **grid)
+    rel = np.max(np.abs(host.objectives - ch.objectives)
+                 / np.maximum(np.abs(host.objectives), 1.0))
+    assert rel < 1e-5, rel
+    assert "dynamic" in ch.extras
+
+
 def test_chunked_path_rejects_unsupported_configs(dense_inst):
     ds, _, _ = dense_inst
     fc = FeatureChunked.from_dense(ds.X, chunk_m=ENV_CHUNK_M)
     with pytest.raises(ValueError, match="gather"):
         PathDriver(rules="feature_vi", reduce="mask").run(fc, ds.y)
-    with pytest.raises(ValueError, match="dynamic"):
-        PathDriver(rules="feature_vi", dynamic=True).run(fc, ds.y)
+
+    from repro.core.rules.base import (AXIS_FEATURES, AXIS_SAMPLES,
+                                       ScreeningRule)
+
+    class _NoProgram(ScreeningRule):
+        axis = AXIS_FEATURES
+
+        def bounds(self, X, y, region):  # pragma: no cover - never reached
+            raise NotImplementedError
+
     with pytest.raises(ValueError, match="feature rule"):
-        PathDriver(rules="composite").run(fc, ds.y)
+        PathDriver(rules=[_NoProgram()]).run(fc, ds.y)
+
+    class _OddSample(ScreeningRule):
+        axis = AXIS_SAMPLES
+
+        def bounds(self, X, y, region):  # pragma: no cover - never reached
+            raise NotImplementedError
+
+    with pytest.raises(ValueError, match="SampleVIRule"):
+        PathDriver(rules=[_OddSample()]).run(fc, ds.y)
     from repro.core import svm_path
 
     with pytest.raises(ValueError, match="scan"):
         svm_path(fc, ds.y, engine="scan")
+
+
+# -- C8: chunk-skip data plane + disk-resident store --------------------------
+
+def test_chunk_skip_bitwise_vs_full_stream(planted_inst):
+    """The gated path is the full-stream path minus transfers: identical
+    gating/cache policy in both modes, so objectives, weights and kept
+    counts are bitwise equal while the skip side streams strictly fewer
+    chunks (and actually skips some)."""
+    X, y = planted_inst
+    kw = dict(rules="feature_vi", tol=1e-9, max_iters=8000)
+    grid = dict(n_lambdas=8, lam_min_ratio=0.05)
+    fc_skip = FeatureChunked.from_dense(X, chunk_m=32)
+    r_skip = PathDriver(chunk_skip=True, **kw).run(fc_skip, y, **grid)
+    fc_full = FeatureChunked.from_dense(X, chunk_m=32)
+    r_full = PathDriver(chunk_skip=False, **kw).run(fc_full, y, **grid)
+
+    np.testing.assert_array_equal(r_skip.objectives, r_full.objectives)
+    np.testing.assert_array_equal(r_skip.weights, r_full.weights)
+    np.testing.assert_array_equal(r_skip.kept, r_full.kept)
+
+    st = r_skip.extras["stream_stats"]
+    assert st["chunks_skipped"] > 0
+    assert st["chunks_streamed"] < r_full.extras["stream_stats"][
+        "chunks_streamed"]
+    assert st["bytes_put"] < r_full.extras["stream_stats"]["bytes_put"]
+    # gating visibly shrank the live set on some step
+    assert int(np.min(r_skip.extras["live_chunks"])) < fc_skip.n_chunks
+    assert r_skip.extras["chunk_skip"] and not r_full.extras["chunk_skip"]
+
+
+def test_skipped_chunk_bounds_safe(planted_inst):
+    """Safety property of chunk gating: every chunk the cache declares dead
+    has (a) all stamped stale bounds below tau, and (b) a fresh full sweep
+    from the same anchor agrees — no feature the fresh screen would keep is
+    ever gated away. With identical anchors the gated and fresh sweeps
+    produce the same keep decisions."""
+    X, y = planted_inst
+    fc = FeatureChunked.from_dense(X, chunk_m=32)
+    lmax = float(lambda_max_stream(fc, y))
+    theta1 = theta_at_lambda_max(jnp.asarray(y), jnp.asarray(lmax))
+
+    cache = ChunkScreenCache(fc)
+    # first gated step: empty cache, every chunk streams + refreshes
+    screen_step_stream(fc, y, lmax, 0.7 * lmax, theta1, cache=cache)
+    # second step re-uses the cached (lmax, theta1) anchors for gating
+    keep_g, bounds_g, _, live = screen_step_stream(
+        fc, y, lmax, 0.5 * lmax, theta1, cache=cache)
+    assert not live.all(), "planted instance must trigger gating"
+    assert live.any()
+
+    keep_f, bounds_f = screen_stream(
+        FeatureChunked.from_dense(X, chunk_m=32), y, lmax, 0.5 * lmax, theta1)
+    from repro.core.screening import SAFE_TAU
+
+    bounds_g, bounds_f = np.asarray(bounds_g), np.asarray(bounds_f)
+    for i in np.nonzero(~live)[0]:
+        s, e = fc.chunk_bounds(int(i))
+        assert np.all(bounds_g[s:e] < SAFE_TAU)  # stamped bounds honest
+        assert np.all(bounds_f[s:e] < SAFE_TAU)  # fresh sweep agrees
+    np.testing.assert_array_equal(np.asarray(keep_g), np.asarray(keep_f))
+
+
+def test_chunk_cache_refuses_larger_targets(planted_inst):
+    """A cached region certifies only strictly smaller lambdas: gating at a
+    target >= the cached anchor's lambda must declare every chunk live."""
+    X, y = planted_inst
+    fc = FeatureChunked.from_dense(X, chunk_m=32)
+    lmax = float(lambda_max_stream(fc, y))
+    theta1 = theta_at_lambda_max(jnp.asarray(y), jnp.asarray(lmax))
+    cache = ChunkScreenCache(fc)
+    screen_step_stream(fc, y, lmax, 0.6 * lmax, theta1, cache=cache)
+    from repro.core.screening import fixed_stats
+    from repro.sparse import fixed_reductions
+
+    d_one, d_y, d_sq = fixed_reductions(fc, y)
+    fixed = fixed_stats(jnp.asarray(y, fc.dtype), d_one, d_y, d_sq)
+    live, _ = cache.live_mask(lmax, fixed)
+    assert live.all()
+
+
+def test_col_sq_matches_dense(sparse_inst):
+    """The transposed reduction (CSR host scatter + dense kernel) and its
+    memoization."""
+    ds, X, _ = sparse_inst
+    ref = np.asarray(jnp.sum(X * X, axis=0))
+    fc = FeatureChunked.from_csr(ds.csr, chunk_m=ENV_CHUNK_M)
+    np.testing.assert_allclose(np.asarray(fc.col_sq()), ref,
+                               rtol=2e-4, atol=2e-4)
+    assert fc.col_sq() is fc.col_sq()  # theta-independent: memoized
+    fcd = FeatureChunked.from_dense(ds.X, chunk_m=ENV_CHUNK_M)
+    np.testing.assert_allclose(np.asarray(fcd.col_sq()), ref,
+                               rtol=2e-4, atol=2e-4)
+
+
+_TOY_LIBSVM = (
+    "+1 1:0.5 3:-2.0\n"
+    "-1 2:1.25\n"
+    "+1 1:3.0 4:0.125\n"
+    "-1 3:0.75\n"
+)
+
+
+def test_memmap_store_roundtrip(tmp_path):
+    p = tmp_path / "toy.svm"
+    p.write_text(_TOY_LIBSVM)
+    ref = load_libsvm(p)
+
+    fc, yv = FeatureChunked.from_libsvm_cached(
+        p, store_dir=tmp_path / "store", chunk_m=2)
+    np.testing.assert_array_equal(np.asarray(fc.as_dense()), ref.X)
+    np.testing.assert_array_equal(np.asarray(yv), ref.y)
+    # second open re-uses the store (and may re-slice the chunking)
+    fc2, y2 = FeatureChunked.from_libsvm_cached(
+        p, store_dir=tmp_path / "store", chunk_m=3)
+    np.testing.assert_array_equal(np.asarray(fc2.as_dense()), ref.X)
+    np.testing.assert_array_equal(np.asarray(y2), ref.y)
+
+    # gzip input builds the same store
+    pgz = tmp_path / "toy.svm.gz"
+    with gzip.open(pgz, "wt") as f:
+        f.write(_TOY_LIBSVM)
+    fcz, yz = FeatureChunked.from_libsvm_cached(
+        pgz, store_dir=tmp_path / "gz_store", chunk_m=2)
+    np.testing.assert_array_equal(np.asarray(fcz.as_dense()), ref.X)
+    np.testing.assert_array_equal(np.asarray(yz), ref.y)
+
+
+def test_memmap_store_runs_screened_path(tmp_path, planted_inst):
+    """End to end: dense store on disk -> memmap container -> gated path."""
+    X, y = planted_inst
+    fc_mem = FeatureChunked.from_dense(X, chunk_m=32)
+    store = tmp_path / "planted_store"
+    fc_mem.save_store(store, y=y)
+    fc = FeatureChunked.from_store(store, chunk_m=32)
+    assert fc.labels is not None
+    res = PathDriver(rules="feature_vi", tol=1e-9, max_iters=8000).run(
+        fc, fc.labels, n_lambdas=6, lam_min_ratio=0.05)
+    assert res.extras["stream_stats"]["chunks_skipped"] > 0
+    ref = PathDriver(rules="feature_vi", tol=1e-9, max_iters=8000).run(
+        FeatureChunked.from_dense(X, chunk_m=32), y,
+        n_lambdas=6, lam_min_ratio=0.05)
+    np.testing.assert_array_equal(res.objectives, ref.objectives)
 
 
 # -- C7: data -----------------------------------------------------------------
@@ -365,3 +584,21 @@ def test_libsvm_loader(tmp_path):
         load_libsvm(p, n_features=2)
     fc = FeatureChunked.from_csr(ds.csr, chunk_m=2)
     np.testing.assert_array_equal(fc.as_dense(), ds.X)
+
+
+def test_libsvm_loader_gzip_and_dtype(tmp_path):
+    p = tmp_path / "toy.svm"
+    p.write_text(_TOY_LIBSVM)
+    ref = load_libsvm(p)
+    # gzip is detected from the magic bytes, not the extension
+    pgz = tmp_path / "toy.svm.gz"
+    with gzip.open(pgz, "wt") as f:
+        f.write(_TOY_LIBSVM)
+    dz = load_libsvm(pgz)
+    np.testing.assert_array_equal(dz.X, ref.X)
+    np.testing.assert_array_equal(dz.y, ref.y)
+    # dtype override flows through X, y and the CSR view
+    d64 = load_libsvm(p, dtype=np.float64)
+    assert d64.X.dtype == np.float64
+    np.testing.assert_allclose(d64.X, ref.X.astype(np.float64))
+    assert d64.csr is not None and d64.csr.data.dtype == np.float64
