@@ -16,7 +16,11 @@ shared-cap batched compact vs batched mask comparison
 (``engines["batched_compact"]``), the (1,1)-mesh sharded-scan bitwise
 check, and batched throughput. The continuous-batching path server gets its
 own ``serve`` section (jobs/sec vs sequential ``svm_path``, slot occupancy,
-warm-cache hit/miss/retrace counters, p50/p95 job latency). The file is
+warm-cache hit/miss/retrace counters, p50/p95 job latency), and the
+``robustness`` section prices the fault-tolerance layer (guards-on vs
+guards-off path walls — asserted < 5% overhead in ``--smoke`` — plus
+recovered-vs-clean objective diffs after a poisoned mid-path step). The
+file is
 stamped with backend/device/jax-version metadata (``meta``) so trajectories
 from different machines are not silently compared.
 
@@ -157,6 +161,8 @@ def _rule_sweep(rows, log, m=2000, n=400, n_lambdas=10, lam_min_ratio=0.05):
     _storage_sweep(rows, log, traj, m=m, n=n, n_lambdas=n_lambdas,
                    lam_min_ratio=lam_min_ratio)
     _serve_sweep(rows, log, traj)
+    _robustness_sweep(rows, log, traj, m=m, n=n, n_lambdas=n_lambdas,
+                      lam_min_ratio=lam_min_ratio)
     TRAJECTORY_PATH.write_text(json.dumps(traj, indent=2))
     log(f"wrote trajectory file: {TRAJECTORY_PATH}")
 
@@ -889,6 +895,110 @@ def _serve_sweep(rows, log, traj, n_jobs=8, m=300, n=120, slots=4,
     return traj["serve"]
 
 
+def _robustness_sweep(rows, log, traj, m=2000, n=400, n_lambdas=10,
+                      lam_min_ratio=0.05, tol=1e-9, max_iters=4000,
+                      repeats=3, poison_step=2, check=False):
+    """Health-guard cost + poison recovery. Writes
+    ``BENCH_screening.json["robustness"]``.
+
+    Two questions the robustness layer must answer with numbers: (a) what
+    do the always-on solver guards cost on a clean path (guards-on vs
+    ``REPRO_SOLVER_GUARDS=0`` walls, min over ``repeats`` warm runs — the
+    ``--smoke`` lane asserts < 5%), and (b) how far does a recovered path
+    land from a clean one after a mid-path poisoned step (per-step and
+    final relative objective diffs; the poisoned step itself refuses its
+    certificate and keeps everything, later steps re-converge).
+    """
+    import os
+
+    from repro.core.solver import HEALTH_SCREEN_REFUSED
+    from repro.testing import poison_path_step
+
+    ds = make_sparse_classification(m=m, n=n, k_active=20, seed=11)
+    kw = dict(rules="feature_vi", tol=tol, max_iters=max_iters)
+    run_kw = dict(n_lambdas=n_lambdas, lam_min_ratio=lam_min_ratio)
+    log(f"\n# robustness (m={m}, n={n}, {n_lambdas} lambdas, "
+        f"min of {repeats} warm walls)")
+
+    def timed_path(guards_env):
+        prev = os.environ.get("REPRO_SOLVER_GUARDS")
+        os.environ["REPRO_SOLVER_GUARDS"] = guards_env
+        try:
+            drv = PathDriver(**kw)
+            drv.run(ds.X, ds.y, **run_kw)  # warm the jit caches
+            walls = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                r = drv.run(ds.X, ds.y, **run_kw)
+                walls.append(time.perf_counter() - t0)
+        finally:
+            if prev is None:
+                os.environ.pop("REPRO_SOLVER_GUARDS", None)
+            else:
+                os.environ["REPRO_SOLVER_GUARDS"] = prev
+        return min(walls), r
+
+    t_on, r_on = timed_path("1")
+    t_off, r_off = timed_path("0")
+    overhead = (t_on - t_off) / t_off
+    clean_equal = bool(np.allclose(np.asarray(r_on.objectives),
+                                   np.asarray(r_off.objectives),
+                                   rtol=0, atol=0))
+    log(f"guards_on_s={t_on:.3f} guards_off_s={t_off:.3f} "
+        f"overhead={overhead * 100:.2f}% bitwise_clean={clean_equal}")
+
+    # poison recovery: corrupt one accepted step, measure how the refused
+    # certificate + keep-all + sanitized warm start propagate
+    clean = PathDriver(**kw).run(ds.X, ds.y, **run_kw)
+    drv = PathDriver(**kw)
+    inj = poison_path_step(poison_step)
+    drv._fault_injector = inj
+    poisoned = drv.run(ds.X, ds.y, **run_kw)
+    health = np.asarray(poisoned.extras["health"])
+    co = np.asarray(clean.objectives)
+    po = np.asarray(poisoned.objectives)
+    rel = np.abs(po - co) / np.maximum(np.abs(co), 1.0)
+    refused = [int(k) for k in np.nonzero(health & HEALTH_SCREEN_REFUSED)[0]]
+    superset = bool(np.all(np.asarray(poisoned.kept)
+                           >= np.asarray(clean.kept)))
+    log(f"poisoned_step={poison_step} refused_steps={refused} "
+        f"kept_superset={superset} max_step_rel_obj_diff={rel.max():.2e} "
+        f"final_rel_obj_diff={rel[-1]:.2e}")
+    if check:
+        assert inj.state["fired"]
+        assert overhead < 0.05, (
+            f"guard overhead {overhead * 100:.2f}% >= 5% "
+            f"(on={t_on:.3f}s off={t_off:.3f}s)")
+        assert clean_equal, "guards changed a clean path's objectives"
+        assert refused, "poison never tripped a certificate refusal"
+        assert superset, "poisoned run discarded more than the clean run"
+        assert rel[-1] < 1e-4, f"no recovery: final diff {rel[-1]:.3e}"
+    rows.append(("robustness_guards", t_on * 1e6,
+                 f"overhead={overhead * 100:.2f}% "
+                 f"final_poison_diff={rel[-1]:.1e}"))
+    traj["robustness"] = {
+        "instance": {"m": m, "n": n, "n_lambdas": n_lambdas,
+                     "lam_min_ratio": lam_min_ratio, "seed": 11,
+                     "tol": tol, "max_iters": max_iters,
+                     "repeats": repeats},
+        "guards_on_path_seconds": t_on,
+        "guards_off_path_seconds": t_off,
+        "guard_overhead_fraction": overhead,
+        "clean_path_bitwise_equal": clean_equal,
+        "poison": {
+            "step": poison_step,
+            "refused_steps": refused,
+            "health": [int(v) for v in health],
+            "kept_clean": [int(v) for v in clean.kept],
+            "kept_poisoned": [int(v) for v in poisoned.kept],
+            "kept_superset": superset,
+            "per_step_rel_obj_diff": [float(v) for v in rel],
+            "final_rel_obj_diff": float(rel[-1]),
+        },
+    }
+    return traj["robustness"]
+
+
 def run(log=print, smoke=False):
     rows = []
     if smoke:
@@ -904,6 +1014,9 @@ def run(log=print, smoke=False):
                      tol=1e-10, max_iters=8000, check=True)
         _rules_sweep(rows, log, {}, m=300, n=120, n_lambdas=5,
                      lam_min_ratio=0.2, tol=1e-10, check=True)
+        _robustness_sweep(rows, log, {}, m=300, n=120, n_lambdas=5,
+                          lam_min_ratio=0.2, tol=1e-10, max_iters=4000,
+                          check=True)
         return rows
     _rate_tables(rows, log)
     _rule_sweep(rows, log)

@@ -41,8 +41,19 @@
 #                                #          batched-compact, server-vs-
 #                                #          sequential and sharded-scan-bitwise
 #                                #          regressions in seconds
+#   ./scripts/ci.sh chaos        # chaos:   fault-injection suite
+#                                #          (tests/test_faults.py via
+#                                #          src/repro/testing/faults.py):
+#                                #          poisoned solves keep a superset
+#                                #          and recover, corrupt/truncated
+#                                #          stores surface typed errors,
+#                                #          flaky reads are absorbed, server
+#                                #          kill+resume equals uninterrupted,
+#                                #          quarantine isolates tenants;
+#                                #          interpret mode forced so guard
+#                                #          paths run on any backend
 #   ./scripts/ci.sh all          # kernels + x64 + stream + serve + rules
-#                                # + bench,
+#                                # + bench + chaos,
 #                                # then full
 #
 # Extra pytest args pass through after the lane name (a leading '-' arg is
@@ -56,9 +67,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 lane="${1:-full}"
 case "$lane" in
-  full|fast|kernels|x64|stream|serve|rules|bench|all) shift || true ;;
+  full|fast|kernels|x64|stream|serve|rules|bench|chaos|all) shift || true ;;
   -*) lane="full" ;;  # bare pytest args => full lane (legacy invocation)
-  *) echo "unknown lane '$lane' (full|fast|kernels|x64|stream|serve|rules|bench|all)" >&2; exit 2 ;;
+  *) echo "unknown lane '$lane' (full|fast|kernels|x64|stream|serve|rules|bench|chaos|all)" >&2; exit 2 ;;
 esac
 
 # suites whose numerics are dtype-parametric: the safe-screening bound
@@ -103,6 +114,10 @@ run_lane() {
     bench)
       python -m benchmarks.bench_screening --smoke
       ;;
+    chaos)
+      REPRO_PALLAS_INTERPRET=1 python -m pytest -x -q \
+        tests/test_faults.py "$@"
+      ;;
   esac
 }
 
@@ -115,6 +130,7 @@ if [ "$lane" = "all" ]; then
   run_lane serve "$@"
   run_lane rules "$@"
   run_lane bench
+  run_lane chaos "$@"
   run_lane full "$@"
 else
   run_lane "$lane" "$@"

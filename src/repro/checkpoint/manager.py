@@ -124,3 +124,14 @@ class CheckpointManager:
         state = load_pytree(template, d / "state.npz", strict=strict)
         manifest = json.loads((d / "manifest.json").read_text())
         return state, manifest
+
+    def restore_raw(self, step: int) -> tuple[dict, dict]:
+        """Template-free restore: the checkpoint's flattened
+        ``{path: array}`` dict plus its manifest. For callers whose state
+        is naturally a flat dict of arrays (e.g. the path server's serve
+        snapshots) — no pytree template to thread around."""
+        d = self.dir / f"step_{step:012d}"
+        with np.load(d / "state.npz", allow_pickle=False) as data:
+            flat = {k: np.array(v) for k, v in data.items()}
+        manifest = json.loads((d / "manifest.json").read_text())
+        return flat, manifest

@@ -75,11 +75,21 @@ from .rules import (
 from .rules.base import dynamic_tau, solve_with_verification
 from .screening import SAFE_TAU, anchor_stats
 from .solver import (
+    HEALTH_SCREEN_REFUSED,
     DynamicFistaResult,
     fista_solve,
     fista_solve_dynamic,
     lipschitz_estimate,
 )
+
+
+def _anchor_ok(theta, delta) -> bool:
+    """Host-side certificate gate: screening regions may only be built from
+    a finite anchor. A poisoned ``(theta, delta)`` (NaN'd solve, inf'd gap)
+    must fail-safe to keep-all for the next step — host rule bounds compare
+    ``bounds >= tau``, where a NaN silently discards."""
+    return bool(np.isfinite(float(delta))
+                and np.all(np.isfinite(np.asarray(theta))))
 
 
 def _is_chunked(X) -> bool:
@@ -171,6 +181,7 @@ class PathDriver:
         use_pallas: Optional[bool] = None,
         L=None,
         chunk_skip: bool = True,
+        guards: Optional[bool] = None,
     ):
         """``dynamic=True`` swaps every solve for the segmented
         ``solver.fista_solve_dynamic``: the step's sequential screen seeds a
@@ -223,6 +234,15 @@ class PathDriver:
                              "not both")
         self.L = L
         self.chunk_skip = bool(chunk_skip)
+        # numerical health guards (core/solver.py): None resolves the
+        # REPRO_SOLVER_GUARDS env default at each solve dispatch
+        self.guards = guards
+        # fault-injection seam (testing/faults.py): called as
+        # ``injector(k, w_full, b_new) -> (w_full, b_new)`` on the accepted
+        # solution of step k, BEFORE it is recorded, certified, and warm-
+        # starts step k+1 — a poisoned return exercises the whole recovery
+        # chain (refused certificate -> keep-all -> sanitized warm start).
+        self._fault_injector = None
 
     # -- reduction helpers -------------------------------------------------
 
@@ -243,13 +263,14 @@ class PathDriver:
                 sample_mask=sample_mask,
                 feature_mask=feature_mask,
                 screen_every=self.screen_every, tau=dynamic_tau(self.rules),
-                use_pallas=self.use_pallas,
+                use_pallas=self.use_pallas, guards=self.guards,
                 **(sample_screen_kw or {}),
             )
         return fista_solve(
             Xr, yr, jnp.asarray(lam), w0=w0, b0=b0,
             max_iters=self.max_iters, tol=self.tol, L=L,
             sample_mask=sample_mask, use_pallas=self.use_pallas,
+            guards=self.guards,
         )
 
     # -- main loop ---------------------------------------------------------
@@ -305,6 +326,7 @@ class PathDriver:
         iters = np.zeros((T,), dtype=np.int64)
         wall = np.zeros((T,), dtype=np.float64)
         s_times = np.zeros((T,), dtype=np.float64)
+        health = np.zeros((T,), dtype=np.int64)  # guard telemetry per step
         sample_masks: dict[int, np.ndarray] = {}  # accepted per-step masks
 
         dyn_log: dict[int, dict] = {}  # per-step in-solver screening telemetry
@@ -348,10 +370,13 @@ class PathDriver:
             iters[0] = int(res0.n_iters)
             if isinstance(res0, DynamicFistaResult):
                 dyn_log[0] = _dynamic_telemetry(res0)
+            if res0.health is not None:
+                health[0] |= int(res0.health)
             theta_prev, delta_prev = safe_theta_and_delta(
                 X, y, jnp.asarray(w_host, X.dtype), jnp.asarray(b_host, X.dtype),
                 jnp.asarray(float(lambdas[0])),
             )
+        anchor_ok = _anchor_ok(theta_prev, delta_prev)
         # trust-region movement state (inf until one step of history exists)
         dw_pred = float("inf")
         db_pred = float("inf")
@@ -375,7 +400,13 @@ class PathDriver:
             f_mask = np.ones((m,), dtype=bool)
             s_mask = np.ones((n,), dtype=bool)
             step_rules: dict[str, dict] = {}
-            if self.rules:
+            if self.rules and not anchor_ok:
+                # fail-safe: the previous step's certificate was non-finite,
+                # so no region exists — keep every feature and sample this
+                # step (screening degrades to "no speedup", never to a wrong
+                # discard) and record the refusal
+                health[k] |= HEALTH_SCREEN_REFUSED
+            elif self.rules:
                 region = ConvexRegion.build(
                     y, lam_prev, lam, theta_prev, delta=delta_prev,
                     w1=jnp.asarray(w_host, X.dtype), b1=b_host,
@@ -444,6 +475,11 @@ class PathDriver:
                 sample_masks[k] = s_mask.copy()
             if isinstance(res, DynamicFistaResult):
                 dyn_log[k] = _dynamic_telemetry(res)
+            if getattr(res, "health", None) is not None:
+                health[k] |= int(res.health)
+
+            if self._fault_injector is not None:
+                w_full, b_new = self._fault_injector(k, w_full, b_new)
 
             # -- movement estimates for the next step's trust region --------
             # (weights[k-1]/biases[k-1] hold the previous accepted solution;
@@ -458,6 +494,7 @@ class PathDriver:
                 X, y, jnp.asarray(w_full, X.dtype), jnp.asarray(b_host, X.dtype),
                 jnp.asarray(lam),
             )
+            anchor_ok = _anchor_ok(theta_prev, delta_prev)
             lam_prev = lam
 
             weights[k] = w_full
@@ -487,7 +524,8 @@ class PathDriver:
             kept_samples=kept_s, verify_rounds=vrounds,
             rules=tuple(r.name for r in self.rules),
             extras={"lam_max": lam_max_val, "sample_masks": sample_masks,
-                    "dynamic": dyn_log, "rule_telemetry": rule_log},
+                    "dynamic": dyn_log, "rule_telemetry": rule_log,
+                    "health": health},
         )
 
     # -- one reduced solve -------------------------------------------------
@@ -650,6 +688,7 @@ class PathDriver:
         iters = np.zeros((T,), dtype=np.int64)
         wall = np.zeros((T,), dtype=np.float64)
         s_times = np.zeros((T,), dtype=np.float64)
+        health = np.zeros((T,), dtype=np.int64)  # guard telemetry per step
         live_log = np.full((T,), fc.n_chunks, dtype=np.int64)
         sample_masks: dict[int, np.ndarray] = {}
         dyn_log: dict[int, dict] = {}
@@ -680,7 +719,7 @@ class PathDriver:
             rep0: dict = {}
             res0 = fista_solve_chunked(
                 fc, y, float(lambdas[0]), max_iters=self.max_iters,
-                tol=self.tol, L=L_path,
+                tol=self.tol, L=L_path, guards=self.guards,
                 report=rep0 if self.dynamic else None, **dyn_kw,
             )
             jax.block_until_ready(res0.w)
@@ -696,6 +735,8 @@ class PathDriver:
             u_carry = np.asarray(res0.u, dtype=np.float64)
             if self.dynamic:
                 dyn_log[0] = rep0
+            if getattr(res0, "health", None) is not None:
+                health[0] |= int(res0.health)
             theta_prev, delta_prev, d_th0 = gap_theta_delta_stream(
                 fc, y, jnp.asarray(w_host, fc.dtype), res0.b,
                 jnp.asarray(float(lambdas[0])), u=res0.u, want_corr=True,
@@ -703,6 +744,7 @@ class PathDriver:
             if feature_rules:
                 cache.refresh(anchor_stats(
                     yd, float(lambdas[0]), theta_prev, delta_prev, d_th0))
+        anchor_ok = _anchor_ok(theta_prev, delta_prev)
 
         for k in range(1, T):
             lam = float(lambdas[k])
@@ -711,7 +753,12 @@ class PathDriver:
             st0 = time.perf_counter()
             s_mask = np.ones((n,), dtype=bool)
             live = np.ones((fc.n_chunks,), dtype=bool)
-            if feature_rules:
+            if feature_rules and not anchor_ok:
+                # fail-safe: no finite certificate to screen from — keep
+                # every feature and stream every chunk this step (cf. run())
+                health[k] |= HEALTH_SCREEN_REFUSED
+                f_mask = np.ones((m,), dtype=bool)
+            elif feature_rules:
                 keep_m, _, anchor, live = screen_step_stream(
                     fc, y, lam_prev, lam, theta_prev, delta=delta_prev,
                     rules=progs, tau=tau, cache=cache,
@@ -737,7 +784,10 @@ class PathDriver:
                         margin_floor=rule.margin_floor,
                     )
                     rule._u_prev = u1  # secant anchor for the next step
-                    s_mask &= np.asarray(surplus < 0.0)
+                    # NaN-safe drop test (cf. solver._dynamic_run): a
+                    # non-finite surplus keeps the sample — a poisoned
+                    # margin costs verification rounds, never loss terms
+                    s_mask &= np.asarray(~(surplus >= 0.0))
             s_times[k] = time.perf_counter() - st0
 
             f_idx = np.nonzero(f_mask)[0]
@@ -765,7 +815,7 @@ class PathDriver:
                         b0=jnp.asarray(warm_b, fc.dtype),
                         max_iters=self.max_iters, tol=self.tol, L=L_path,
                         sample_mask=smask_dev, feature_mask=f_mask,
-                        report=rep, **dyn_kw,
+                        report=rep, guards=self.guards, **dyn_kw,
                     )
                     w_full = np.asarray(res.w, dtype=np.float64)
                     dyn_log[k] = rep
@@ -776,6 +826,7 @@ class PathDriver:
                         b0=jnp.asarray(warm_b, fc.dtype),
                         max_iters=self.max_iters, tol=self.tol, L=L_path,
                         sample_mask=smask_dev, use_pallas=self.use_pallas,
+                        guards=self.guards,
                     )
                     w_full = np.zeros((m,), dtype=np.float64)
                     w_full[sel_f[: len(f_idx)]] = (
@@ -800,6 +851,11 @@ class PathDriver:
             vrounds[k] = rounds
             if sample_rules:
                 sample_masks[k] = s_mask.copy()
+            if getattr(res, "health", None) is not None:
+                health[k] |= int(res.health)
+
+            if self._fault_injector is not None:
+                w_full, b_new = self._fault_injector(k, w_full, b_new)
 
             # movement estimates for the next step's trust region
             dw_pred = self.shrink_factor * float(
@@ -826,7 +882,11 @@ class PathDriver:
                 jnp.asarray(lam), u=res.u, live_chunks=live_arg,
                 feature_mask=fm_cert, want_corr=True,
             )
+            anchor_ok = _anchor_ok(theta_prev, delta_prev)
             if feature_rules:
+                # a poisoned anchor is safe to hand over: refresh() guards
+                # non-finite stats by *invalidating* the touched entries, so
+                # gating treats those chunks as never-streamed (always live)
                 cache.refresh(
                     anchor_stats(yd, lam, theta_prev, delta_prev, d_th),
                     live=set(int(ci) for ci in np.nonzero(live)[0]),
@@ -845,6 +905,7 @@ class PathDriver:
         extras = {"lam_max": lam_max_val, "storage": "chunked",
                   "n_chunks": fc.n_chunks, "chunk_skip": self.chunk_skip,
                   "live_chunks": live_log,
+                  "health": health,
                   "stream_stats": dict(fc.stats)}
         if sample_rules:
             extras["sample_masks"] = sample_masks
@@ -880,6 +941,7 @@ def svm_path(
     exact_lipschitz: bool = False,
     use_pallas: Optional[bool] = None,
     chunk_skip: bool = True,
+    guards: Optional[bool] = None,
 ) -> PathResult:
     """Solve the L1-L2-SVM path with configurable screening rules.
 
@@ -938,7 +1000,7 @@ def svm_path(
             screen_every=screen_every, use_pallas=use_pallas,
             exact_lipschitz=exact_lipschitz,
             reduce="mask" if reduce is None else reduce,
-            rules=rules,
+            rules=rules, guards=guards,
         )
     if engine == "batched":
         from .path_scan import svm_path_batched  # deferred: imports us
@@ -955,7 +1017,7 @@ def svm_path(
             screen_every=screen_every, use_pallas=use_pallas,
             exact_lipschitz=exact_lipschitz,
             reduce="mask" if reduce is None else reduce,
-            rules=rules,
+            rules=rules, guards=guards,
         )
     if engine != "host":
         raise ValueError(
@@ -967,6 +1029,6 @@ def svm_path(
                         tol=tol, max_iters=max_iters,
                         dynamic=dynamic, screen_every=screen_every,
                         exact_lipschitz=exact_lipschitz, use_pallas=use_pallas,
-                        chunk_skip=chunk_skip)
+                        chunk_skip=chunk_skip, guards=guards)
     return driver.run(X, y, lambdas=lambdas, n_lambdas=n_lambdas,
                       lam_min_ratio=lam_min_ratio)

@@ -121,9 +121,11 @@ from .screening import (
     FixedStats,
 )
 from .solver import (
+    HEALTH_SCREEN_REFUSED,
     LOCAL,
     Collectives,
     _dynamic_run,
+    _resolve_guards,
     _resolve_pallas,
     fista_run,
     gap_theta_delta,
@@ -156,6 +158,10 @@ class ScanPathOutputs(NamedTuple):
     fmask: jax.Array       # (T, m) bool — the certified keep mask per step
     cap: jax.Array         # (T,) int32 — compact buffer capacity (m = mask)
     resurrected: jax.Array  # (T,) int32 — keeps the previous mask had dropped
+    # (T,) int32 guard telemetry: low bits = solver rollback trips,
+    # HEALTH_SCREEN_REFUSED flags a step that screened from a refused
+    # (non-finite) certificate and fail-safed to keep-all. 0 = clean.
+    health: jax.Array
 
 
 def compact_caps(m: int, max_buckets: int = 4, min_cap: int = 32) -> tuple:
@@ -232,6 +238,7 @@ def _batched_path_step(
     exact_lipschitz: bool,
     rules: tuple = ("feature_vi",),
     n_feas_iters: int = 8,
+    guards: bool = False,
 ):
     """One batched lambda step: screen -> shared-cap solve -> certify.
 
@@ -280,17 +287,28 @@ def _batched_path_step(
         if hist:
             l0, th0, de0 = hist
             anchors = (anchor(l0, th0, de0),) + anchors
-        return stack_bounds(progs, la, anchors, fixed) >= tau
+        return stack_bounds(progs, la, anchors, fixed)
 
+    # fail-safe screening: a carry anchored by a refused certificate
+    # (gap_theta_delta collapses delta to inf when any component is
+    # non-finite) must keep EVERY feature this step — screening degrades to
+    # "no speedup", never to a wrong discard. The keep comparison is
+    # NaN-safe too (~(b < tau) keeps non-finite bounds), and the refusal is
+    # recorded in the step's health word below.
+    anchor_ok = jnp.isfinite(delta)
+    if needs_hist:
+        anchor_ok = anchor_ok & jnp.isfinite(delta_old)
     with jax.named_scope("svm_path_batched/screen"):
         if screening and needs_hist:
-            keep = jax.vmap(
+            bounds = jax.vmap(
                 screen_one, in_axes=(ax, ax, ax, 0, 0, 0, 0, 0, 0, 0))(
                 X, y, statics, theta, delta, lam_prev, lam,
                 lam_old, theta_old, delta_old)
+            keep = (~(bounds < tau)) | (~anchor_ok)[:, None]
         elif screening:
-            keep = jax.vmap(screen_one, in_axes=(ax, ax, ax, 0, 0, 0, 0))(
+            bounds = jax.vmap(screen_one, in_axes=(ax, ax, ax, 0, 0, 0, 0))(
                 X, y, statics, theta, delta, lam_prev, lam)
+            keep = (~(bounds < tau)) | (~anchor_ok)[:, None]
         else:
             keep = jnp.ones((B, m), bool)
         fmask = keep.astype(dt)
@@ -302,11 +320,11 @@ def _batched_path_step(
             return _dynamic_run(
                 Xs, ye, la, ws, bs, inv_Ls, sme, fms,
                 max_iters, tol, screen_every, tau, 4, use_pallas,
-                valid_m=vm,
+                valid_m=vm, guards=guards,
             )
         return fista_run(
             Xs, ye, la, ws, bs, inv_Ls, sme, fms,
-            max_iters, tol, use_pallas, valid_m=vm,
+            max_iters, tol, use_pallas, valid_m=vm, guards=guards,
         )
 
     def inv_L_for(Xs, inv_Ls):
@@ -318,7 +336,7 @@ def _batched_path_step(
         res = solve(Xe, ye, sme, la, w_ * fmask_, b_, fmask_,
                     inv_L_for(Xe * fmask_[:, None], inv_Ls), None)
         return (res.w, res.b, res.obj, jnp.asarray(res.n_iters, jnp.int32),
-                res.converged, res.u)
+                res.converged, res.u, jnp.asarray(res.health, jnp.int32))
 
     def make_compact_one(cap):
         def one(Xe, ye, sme, la, inv_Ls, w_, b_, fmask_):
@@ -337,7 +355,7 @@ def _batched_path_step(
             w_full = jnp.zeros((m,), dt).at[selc].add(res.w * validf)
             return (w_full, res.b, res.obj,
                     jnp.asarray(res.n_iters, jnp.int32), res.converged,
-                    res.u)
+                    res.u, jnp.asarray(res.health, jnp.int32))
         return one
 
     def batch_branch(elem):
@@ -354,12 +372,12 @@ def _batched_path_step(
             idx = jnp.sum(max_kept > caps_arr)
             branches = [batch_branch(make_compact_one(c)) for c in caps]
             branches.append(batch_branch(mask_one))  # shared overflow
-            w2, b2, obj, n_it, conv, u_fin = jax.lax.switch(
+            w2, b2, obj, n_it, conv, u_fin, health = jax.lax.switch(
                 idx, branches, (w, b, fmask))
             cap_used = jnp.full(
                 (B,), jnp.asarray((*caps, m), jnp.int32)[idx])
         else:
-            w2, b2, obj, n_it, conv, u_fin = batch_branch(mask_one)(
+            w2, b2, obj, n_it, conv, u_fin, health = batch_branch(mask_one)(
                 (w, b, fmask))
             cap_used = jnp.full((B,), m, jnp.int32)
 
@@ -377,6 +395,8 @@ def _batched_path_step(
         active=jnp.sum(jnp.abs(w2) > 1e-10, axis=1).astype(jnp.int32),
         n_iters=n_it, converged=conv, gap=gap, delta=delta2,
         fmask=keep, cap=cap_used, resurrected=resurrected,
+        health=health | jnp.where(
+            anchor_ok, 0, HEALTH_SCREEN_REFUSED).astype(jnp.int32),
     )
     new_carry = (w2, b2, theta2, delta2, lam, fmask)
     if needs_hist:
@@ -409,6 +429,7 @@ def _batched_path_scan_program(
     rules: tuple = ("feature_vi",),
     shared_x: bool = False,
     n_feas_iters: int = 8,
+    guards: bool = False,
 ) -> ScanPathOutputs:
     """B whole paths as one program, compaction composed with batching.
 
@@ -447,7 +468,7 @@ def _batched_path_scan_program(
         caps=caps, shared_x=shared_x, max_iters=max_iters,
         screening=screening, dynamic=dynamic, screen_every=screen_every,
         use_pallas=use_pallas, exact_lipschitz=exact_lipschitz,
-        rules=rules, n_feas_iters=n_feas_iters,
+        rules=rules, n_feas_iters=n_feas_iters, guards=guards,
     )
 
     def step(carry, lam):
@@ -496,6 +517,7 @@ def _path_scan_program(
     rules: tuple = ("feature_vi",),
     col: Collectives = LOCAL,
     n_feas_iters: int = 8,
+    guards: bool = False,
 ) -> ScanPathOutputs:
     """The traced whole-path program (one ``lax.scan`` over the grid).
 
@@ -565,14 +587,22 @@ def _path_scan_program(
                 return _dynamic_run(
                     Xs, y, lam, ws, bs, inv_Ls, None, fms,
                     max_iters, tol, screen_every, tau, 4, use_pallas,
-                    valid_m=vm,
+                    valid_m=vm, guards=guards,
                 )
             return fista_run(
                 Xs, y, lam, ws, bs, inv_Ls, None, fms,
                 max_iters, tol, use_pallas, col=col, valid_m=vm,
+                guards=guards,
             )
 
         # -- sequential screen from the carried anchor(s) ------------------
+        # fail-safe: a refused certificate in the carry (delta collapsed to
+        # inf by gap_theta_delta) keeps EVERY feature this step, and the
+        # keep test itself is NaN-safe (~(b < tau) keeps non-finite bounds)
+        # — an unhealthy anchor can cost speed, never a wrong discard.
+        anchor_ok = jnp.isfinite(delta)
+        if needs_hist:
+            anchor_ok = anchor_ok & jnp.isfinite(delta_old)
         with jax.named_scope("svm_path/screen"):
             if screening:
                 anchors = (anchor_from(lam_prev, theta, delta),)
@@ -580,7 +610,7 @@ def _path_scan_program(
                     anchors = (anchor_from(lam_old, theta_old, delta_old),
                                ) + anchors
                 bounds = stack_bounds(progs, lam, anchors, fixed)
-                keep = bounds >= tau
+                keep = (~(bounds < tau)) | (~anchor_ok)
             else:
                 keep = jnp.ones((m,), bool)
             fmask = keep.astype(dt)
@@ -609,7 +639,7 @@ def _path_scan_program(
             res = solve(X, w_ * fmask_, b_, fmask_,
                         inv_L_for(X * fmask_[:, None]), None)
             return (res.w, res.b, res.obj, jnp.asarray(res.n_iters, jnp.int32),
-                    res.converged, res.u)
+                    res.converged, res.u, jnp.asarray(res.health, jnp.int32))
 
         def make_compact_branch(cap):
             def branch(args):
@@ -632,7 +662,7 @@ def _path_scan_program(
                 w_full = jnp.zeros((m,), dt).at[selc].add(res.w * validf)
                 return (w_full, res.b, res.obj,
                         jnp.asarray(res.n_iters, jnp.int32), res.converged,
-                        res.u)
+                        res.u, jnp.asarray(res.health, jnp.int32))
             return branch
 
         with jax.named_scope("svm_path/solve"):
@@ -642,11 +672,12 @@ def _path_scan_program(
                 idx = jnp.sum(kept_ct > caps_arr)  # first bucket that fits
                 branches = [make_compact_branch(c) for c in caps]
                 branches.append(mask_branch)  # overflow: mask-mode fallback
-                w2, b2, obj, n_it, conv, u_fin = jax.lax.switch(
+                w2, b2, obj, n_it, conv, u_fin, health = jax.lax.switch(
                     idx, branches, (w, b, fmask))
                 cap_used = jnp.asarray((*caps, m), jnp.int32)[idx]
             else:
-                w2, b2, obj, n_it, conv, u_fin = mask_branch((w, b, fmask))
+                w2, b2, obj, n_it, conv, u_fin, health = mask_branch(
+                    (w, b, fmask))
                 cap_used = m_tot
 
         # -- gap-certify the accepted point: anchor for the next step ------
@@ -667,6 +698,8 @@ def _path_scan_program(
             converged=conv,
             gap=gap, delta=delta2,
             fmask=keep, cap=cap_used, resurrected=resurrected,
+            health=health | jnp.where(
+                anchor_ok, 0, HEALTH_SCREEN_REFUSED).astype(jnp.int32),
         )
         new_carry = (w2, b2, theta2, delta2, lam, fmask)
         if needs_hist:
@@ -762,7 +795,8 @@ def _validate_reduce(reduce: str) -> str:
 
 
 def _static_opts(max_iters, screening, dynamic, screen_every, use_pallas,
-                 exact_lipschitz, reduce="mask", rules=None) -> tuple:
+                 exact_lipschitz, reduce="mask", rules=None,
+                 guards=None) -> tuple:
     # the rule spec is resolved HERE — at dispatch, not inside the trace —
     # so unlowerable specs (sample rules, containers holding them) fail
     # with resolve_programs' error before any engine is built, and the
@@ -779,6 +813,10 @@ def _static_opts(max_iters, screening, dynamic, screen_every, use_pallas,
         ("exact_lipschitz", bool(exact_lipschitz)),
         ("reduce", _validate_reduce(reduce)),
         ("rules", progs),
+        # numerical health guards (core/solver.py): None resolves the
+        # REPRO_SOLVER_GUARDS env default at dispatch, and the resolved bool
+        # is part of the engine-cache key like every other static
+        ("guards", _resolve_guards(guards)),
     )
 
 
@@ -815,6 +853,9 @@ def _to_path_result(lambdas, outs: ScanPathOutputs, lam_max_val, wall_s,
             "keep_masks": np.asarray(outs.fmask, bool),
             "caps": np.asarray(outs.cap, np.int64),
             "resurrected": np.asarray(outs.resurrected, np.int64),
+            # per-step guard telemetry (solver.HEALTH_SCREEN_REFUSED flags a
+            # fail-safe keep-all step; low bits count solver rollbacks)
+            "health": np.asarray(outs.health, np.int64),
             "options": dict(static_kw),
         },
     )
@@ -837,6 +878,7 @@ def svm_path_scan(
     exact_lipschitz: bool = False,
     reduce: str = "mask",
     rules=None,
+    guards: Optional[bool] = None,
 ) -> PathResult:
     """Solve the feature-screened path as ONE jitted XLA program.
 
@@ -884,7 +926,8 @@ def svm_path_scan(
     delta0 = jnp.asarray(0.0, X.dtype)
 
     static_kw = _static_opts(max_iters, screening, dynamic, screen_every,
-                             use_pallas, exact_lipschitz, reduce, rules)
+                             use_pallas, exact_lipschitz, reduce, rules,
+                             guards)
     engine = _engine_jit(static_kw, batched=None)
     t0 = time.perf_counter()
     outs = engine(X, y, jnp.asarray(lambdas, X.dtype), w0, b0, theta0,
@@ -911,6 +954,7 @@ def svm_path_scan_sharded(
     dynamic: bool = False,
     exact_lipschitz: bool = False,
     rules=None,
+    guards: Optional[bool] = None,
     data_axes=("data",),
 ) -> PathResult:
     """The scan engine as ONE ``shard_map``'d program on the ``svm_mesh``.
@@ -966,7 +1010,7 @@ def svm_path_scan_sharded(
     delta0 = jnp.asarray(0.0, X.dtype)
 
     static_kw = _static_opts(max_iters, screening, False, 1, False,
-                             exact_lipschitz, "mask", rules)
+                             exact_lipschitz, "mask", rules, guards)
     col = mesh_collectives(mesh, data_axes)
 
     def local_fn(Xb, yb, lams, w0b, b0b, th0b, d0b, lam0b, taub, tolb):
@@ -981,6 +1025,9 @@ def svm_path_scan_sharded(
         w=P(None, "model"), b=P(), obj=P(), kept=P(), active=P(),
         n_iters=P(), converged=P(), gap=P(), delta=P(),
         fmask=P(None, "model"), cap=P(), resurrected=P(),
+        # replicated: the guard's trip verdict is pmax'd over the model axis
+        # inside the body (solver._make_fista_body), so shards agree
+        health=P(),
     )
     fn = jax.jit(shard_map(local_fn, mesh=mesh, in_specs=in_specs,
                            out_specs=out_specs, check_rep=False))
@@ -1015,6 +1062,7 @@ def svm_path_batched(
     exact_lipschitz: bool = False,
     reduce: str = "mask",
     rules=None,
+    guards: Optional[bool] = None,
 ) -> list[PathResult]:
     """``vmap`` of the scan engine over a batch of problems or grids.
 
@@ -1055,7 +1103,8 @@ def svm_path_batched(
     X = jnp.asarray(X)
     y = jnp.asarray(y)
     static_kw = _static_opts(max_iters, screening, dynamic, screen_every,
-                             use_pallas, exact_lipschitz, reduce, rules)
+                             use_pallas, exact_lipschitz, reduce, rules,
+                             guards)
     compact = dict(static_kw)["reduce"] == "compact"
     if X.ndim == 2:
         # one problem, B grids — X/y/anchors stay unbatched (vmap broadcasts)

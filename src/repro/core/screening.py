@@ -472,6 +472,10 @@ def screen(
     Discarded features are guaranteed inactive at ``lam2`` (given an exact
     ``theta1``, or ``||theta1 - theta*|| <= delta``); kept features *may* be
     active.
+
+    The comparison is NaN-safe in the keep direction: a non-finite bound
+    (poisoned anchor, overflowed reduction) certifies nothing, so the
+    feature is KEPT — discarding is the only unsafe failure mode.
     """
     bounds = screen_bounds(X, y, lam1, lam2, theta1, red=red, delta=delta)
-    return bounds >= tau, bounds
+    return ~(bounds < tau), bounds

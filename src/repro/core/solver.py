@@ -75,6 +75,7 @@ kept-counts and gaps are returned as telemetry (`DynamicFistaResult`).
 
 from __future__ import annotations
 
+import os
 from functools import partial
 from typing import NamedTuple, Optional
 
@@ -140,6 +141,28 @@ def _identity(x):
 # the sharded-vs-local bitwise guarantee (tests/test_path_scan.py).
 LOCAL = Collectives(_identity, _identity, _identity, _identity)
 
+#: Cap on health-guard rollbacks per solve. Each trip halves the step size,
+#: so 8 trips leave a 256x smaller step — a solve still tripping past that
+#: is unrecoverable (poisoned operands), and bounding the trips keeps a
+#: NaN'd problem from burning max_iters on rollback churn.
+MAX_GUARD_TRIPS = 8
+
+#: Bit set in ``health`` when a screening refresh was *refused* because the
+#: gap certificate was non-finite (the fail-safe kept every feature). Low
+#: bits count solver guard trips (rollbacks + sanitized warm starts).
+HEALTH_SCREEN_REFUSED = 1 << 16
+
+
+def _resolve_guards(flag: Optional[bool] = None) -> bool:
+    """Numerical health guards default ON; ``REPRO_SOLVER_GUARDS=0``
+    disables them (the bench's guard-off baseline). Resolved at dispatch so
+    the flag lands in jit static args — an env read inside a trace would not
+    retrace on change (cf. ``_resolve_pallas``)."""
+    if flag is not None:
+        return bool(flag)
+    return os.environ.get("REPRO_SOLVER_GUARDS", "1").lower() not in (
+        "0", "false", "off")
+
 
 class FistaState(NamedTuple):
     w: jax.Array
@@ -163,6 +186,12 @@ class FistaState(NamedTuple):
     # (chunked storage, sharded meshes) agree to <=1e-6.
     rel_prev: jax.Array = jnp.inf
     rel_prev2: jax.Array = jnp.inf
+    # health-guard state (guards on only — see _make_fista_body): rollback
+    # trip count, and the multiplicative step-size backoff the trips applied.
+    # A trip means the candidate iterate was non-finite or a plain prox step
+    # increased the objective — both say the current step size is invalid.
+    health: jax.Array = 0
+    backoff: jax.Array = 1.0
 
 
 class FistaResult(NamedTuple):
@@ -175,6 +204,10 @@ class FistaResult(NamedTuple):
     # returning them is free); callers certifying the solution can hand them
     # to gap_theta_delta and skip its re-sweep. None from legacy paths.
     u: Optional[jax.Array] = None
+    # int32 guard telemetry: low bits count rollback trips (0 = clean solve),
+    # HEALTH_SCREEN_REFUSED flags a refused screening refresh. None from
+    # legacy paths that never threaded guards.
+    health: Optional[jax.Array] = None
 
 
 class DynamicFistaResult(NamedTuple):
@@ -203,6 +236,8 @@ class DynamicFistaResult(NamedTuple):
     # does) before treating the result as exact.
     sample_mask: Optional[jax.Array] = None          # (n,) bool
     kept_samples_per_segment: Optional[jax.Array] = None  # (S,) int32
+    # guard telemetry, same encoding as FistaResult.health
+    health: Optional[jax.Array] = None
 
 
 def soft_threshold(x: jax.Array, tau: jax.Array) -> jax.Array:
@@ -295,7 +330,22 @@ def _grad_sweep(X, y, xi, use_pallas, col=LOCAL, valid_m=None):
 
 
 def _init_state(X, y, lam, w0, b0, sm, use_pallas, col=LOCAL,
-                valid_m=None) -> FistaState:
+                valid_m=None, guards=False) -> FistaState:
+    trips = jnp.asarray(0, jnp.int32)
+    if guards:
+        # sanitize the warm start: a poisoned w0/b0 (NaN/inf from a faulted
+        # previous path step) would poison every later iterate through the
+        # carried margins; zeroing the bad coordinates is always feasible
+        # (w = 0 is in the domain) and counts one trip.
+        bad0 = (~jnp.all(jnp.isfinite(w0))) | (~jnp.isfinite(b0))
+        # mesh-consistent verdict: w0 is a shard block under shard_map, so
+        # every shard must agree on the trip (divergent health would split
+        # the while-loop conds and deadlock the body's psums). Identity
+        # under LOCAL.
+        bad0 = col.pmax_model(bad0.astype(X.dtype)) > 0.5
+        w0 = jnp.where(jnp.isfinite(w0), w0, jnp.zeros_like(w0))
+        b0 = jnp.where(jnp.isfinite(b0), b0, jnp.zeros_like(b0))
+        trips = bad0.astype(jnp.int32)
     u0, obj0 = _margin_obj_sweep(X, y, lam, w0, b0, sm, use_pallas, col,
                                  valid_m)
     return FistaState(
@@ -304,11 +354,12 @@ def _init_state(X, y, lam, w0, b0, sm, use_pallas, col=LOCAL,
         obj=obj0, rel_change=jnp.asarray(jnp.inf, X.dtype),
         rel_prev=jnp.asarray(jnp.inf, X.dtype),
         rel_prev2=jnp.asarray(jnp.inf, X.dtype),
+        health=trips, backoff=jnp.asarray(1.0, X.dtype),
     )
 
 
 def _make_fista_body(X, y, lam, inv_L, sm, fmask=None, use_pallas=False,
-                     col=LOCAL, valid_m=None):
+                     col=LOCAL, valid_m=None, guards=False):
     """One FISTA iteration ``FistaState -> FistaState`` as a closure.
 
     ``fmask`` (0/1 over features, optional) freezes screened coordinates at
@@ -320,12 +371,21 @@ def _make_fista_body(X, y, lam, inv_L, sm, fmask=None, use_pallas=False,
     Cost: 2 fused sweeps of X per iteration (gradient at the momentum point,
     margins+objective at the new point); +2 under ``lax.cond`` when the
     monotone restart fires. See the module docstring for the architecture.
+
+    ``guards`` adds the on-device numerical health guard: a non-finite
+    candidate iterate, or a *plain* prox step that still increased the
+    objective (a valid ``inv_L <= 1/L`` makes that step monotone, so an
+    increase beyond rounding noise means the step size is invalid), rolls
+    the iterate back to the last accepted finite point, halves the step via
+    ``FistaState.backoff``, and counts a trip in ``FistaState.health``. A
+    genuine momentum restart is NOT a trip — only its fallback step failing
+    is.
     """
 
     def mask_w(w):
         return w if fmask is None else w * fmask
 
-    def prox_from(w_a, b_a, u_a):
+    def prox_from(w_a, b_a, u_a, inv_Le):
         """One proximal-gradient step anchored at ``(w_a, b_a)`` whose
         margins ``u_a = X^T w_a`` are already known. 2 sweeps of X."""
         xi = jnp.maximum(0.0, 1.0 - y * (u_a + b_a))
@@ -333,13 +393,14 @@ def _make_fista_body(X, y, lam, inv_L, sm, fmask=None, use_pallas=False,
             xi = xi * sm
         gw = _grad_sweep(X, y, xi, use_pallas, col, valid_m)
         gb = col.psum_bias(-jnp.sum(y * xi))
-        w_new = mask_w(soft_threshold(w_a - inv_L * gw, lam * inv_L))
-        b_new = b_a - inv_L * gb
+        w_new = mask_w(soft_threshold(w_a - inv_Le * gw, lam * inv_Le))
+        b_new = b_a - inv_Le * gb
         u_new, obj_new = _margin_obj_sweep(X, y, lam, w_new, b_new, sm,
                                            use_pallas, col, valid_m)
         return w_new, b_new, u_new, obj_new
 
     def body(s: FistaState) -> FistaState:
+        inv_Le = inv_L * s.backoff if guards else inv_L
         # momentum extrapolation — margins included (u is linear in w, so
         # the momentum point's margins need no sweep)
         t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * s.t * s.t))
@@ -348,15 +409,16 @@ def _make_fista_body(X, y, lam, inv_L, sm, fmask=None, use_pallas=False,
         zb = s.b + beta * (s.b - s.b_prev)
         uz = s.u + beta * (s.u - s.u_prev)
 
-        w_new, b_new, u_new, obj_new = prox_from(zw, zb, uz)
+        w_new, b_new, u_new, obj_new = prox_from(zw, zb, uz, inv_Le)
 
         # monotone restart: if the extrapolated step increased the objective,
         # fall back to a plain proximal step from (w, b) — under lax.cond so
         # its two sweeps are paid only when the restart actually fires.
+        # (A NaN obj_new compares False here and falls through to the guard.)
         restarted = obj_new > s.obj
 
         def restart(_):
-            w_p, b_p, u_p, obj_p = prox_from(s.w, s.b, s.u)
+            w_p, b_p, u_p, obj_p = prox_from(s.w, s.b, s.u, inv_Le)
             return w_p, b_p, u_p, obj_p, jnp.asarray(1.0, X.dtype)
 
         def accept(_):
@@ -376,10 +438,34 @@ def _make_fista_body(X, y, lam, inv_L, sm, fmask=None, use_pallas=False,
             restarted, jnp.asarray(jnp.inf, X.dtype),
             jnp.abs(s.obj - obj_new) / jnp.maximum(jnp.abs(s.obj), 1e-30),
         )
+        health, backoff = s.health, s.backoff
+        if guards:
+            eps = jnp.finfo(X.dtype).eps
+            finite = (jnp.all(jnp.isfinite(w_new)) & jnp.isfinite(b_new)
+                      & jnp.isfinite(obj_new))
+            # post-restart increase beyond rounding noise: the plain step is
+            # monotone under a valid step size, so this is a blowup, not a
+            # momentum artifact. 256 eps relative keeps fp32 plateau ties
+            # from tripping the guard at convergence.
+            blowup = restarted & (obj_new > s.obj + 256.0 * eps
+                                  * jnp.maximum(jnp.abs(s.obj), 1.0))
+            bad = (~finite) | blowup
+            # shard-consistent verdict (see _init_state): all shards must
+            # agree or the guarded while-loop conds diverge across the mesh
+            bad = col.pmax_model(bad.astype(X.dtype)) > 0.5
+            w_new = jnp.where(bad, s.w, w_new)
+            b_new = jnp.where(bad, s.b, b_new)
+            u_new = jnp.where(bad, s.u, u_new)
+            obj_new = jnp.where(bad, s.obj, obj_new)
+            t_next = jnp.where(bad, jnp.asarray(1.0, X.dtype), t_next)
+            rel = jnp.where(bad, jnp.asarray(jnp.inf, X.dtype), rel)
+            health = s.health + bad.astype(jnp.int32)
+            backoff = jnp.where(bad, s.backoff * 0.5, s.backoff)
         return FistaState(
             w=w_new, b=b_new, w_prev=s.w, b_prev=s.b, u=u_new, u_prev=s.u,
             t=t_next, k=s.k + 1, obj=obj_new, rel_change=rel,
             rel_prev=s.rel_change, rel_prev2=s.rel_prev,
+            health=health, backoff=backoff,
         )
 
     return body
@@ -399,6 +485,7 @@ def fista_run(
     use_pallas: bool = False,
     col: Collectives = LOCAL,
     valid_m: Optional[jax.Array] = None,
+    guards: bool = False,
 ) -> FistaResult:
     """The raw (unjitted) FISTA loop — trace-safe building block.
 
@@ -410,21 +497,28 @@ def fista_run(
     mask-mode reduction. ``w0`` must already respect it. ``col`` binds the
     body's reductions to mesh collectives when the operands are ``shard_map``
     blocks (the sharded path engine); ``valid_m`` is the live-row count of a
-    compacted active set (Pallas sweeps skip blocks past it).
+    compacted active set (Pallas sweeps skip blocks past it). ``guards``
+    enables the numerical health guard (warm-start sanitization, on-device
+    rollback with step-size backoff, trip-bounded loop — see
+    :func:`_make_fista_body`); the trip count is returned as
+    ``FistaResult.health``.
     """
     init = _init_state(X, y, lam, w0, jnp.asarray(b0, X.dtype), sample_mask,
-                       use_pallas, col, valid_m)
+                       use_pallas, col, valid_m, guards=guards)
 
     def cond(s: FistaState):
         # three consecutive sub-tol iterations (see FistaState.rel_prev)
-        return (s.k < max_iters) & (_rel3(s) > tol)
+        go = (s.k < max_iters) & (_rel3(s) > tol)
+        if guards:
+            go = go & (s.health < MAX_GUARD_TRIPS)
+        return go
 
     body = _make_fista_body(X, y, lam, inv_L, sample_mask, feature_mask,
-                            use_pallas, col, valid_m)
+                            use_pallas, col, valid_m, guards=guards)
     out = jax.lax.while_loop(cond, body, init)
     return FistaResult(
         w=out.w, b=out.b, obj=out.obj, n_iters=out.k,
-        converged=_rel3(out) <= tol, u=out.u,
+        converged=_rel3(out) <= tol, u=out.u, health=out.health,
     )
 
 
@@ -434,9 +528,9 @@ def _resolve_pallas(flag: Optional[bool]) -> bool:
     return fista_use_pallas(flag)
 
 
-@partial(jax.jit, static_argnames=("max_iters", "use_pallas"))
+@partial(jax.jit, static_argnames=("max_iters", "use_pallas", "guards"))
 def _fista_solve_jit(X, y, lam, w0, b0, max_iters, tol, L, sample_mask,
-                     use_pallas):
+                     use_pallas, guards):
     m = X.shape[0]
     lam = jnp.asarray(lam, X.dtype)
     if w0 is None:
@@ -447,7 +541,7 @@ def _fista_solve_jit(X, y, lam, w0, b0, max_iters, tol, L, sample_mask,
         L = lipschitz_estimate(X)
     L = jnp.maximum(L * 1.01, 1e-12)  # small safety factor
     return fista_run(X, y, lam, w0, b0, 1.0 / L, sample_mask, None,
-                     max_iters, tol, use_pallas)
+                     max_iters, tol, use_pallas, guards=guards)
 
 
 def fista_solve(
@@ -462,6 +556,7 @@ def fista_solve(
     sample_mask: Optional[jax.Array] = None,
     use_pallas: Optional[bool] = None,
     operator=None,
+    guards: Optional[bool] = None,
 ) -> FistaResult:
     """Solve the primal to relative-objective tolerance ``tol``.
 
@@ -493,9 +588,11 @@ def fista_solve(
 
         return fista_solve_chunked(A, y, lam, w0=w0, b0=b0,
                                    max_iters=max_iters, tol=tol, L=L,
-                                   sample_mask=sample_mask)
+                                   sample_mask=sample_mask,
+                                   guards=_resolve_guards(guards))
     return _fista_solve_jit(A, y, lam, w0, b0, max_iters, float(tol), L,
-                            sample_mask, _resolve_pallas(use_pallas))
+                            sample_mask, _resolve_pallas(use_pallas),
+                            _resolve_guards(guards))
 
 
 def gap_theta_delta(
@@ -561,7 +658,16 @@ def gap_theta_delta(
     gap = jnp.maximum(gap, 4.0 * jnp.finfo(X.dtype).eps * jnp.abs(p_obj))
     eq_resid = jnp.abs(col.psum_data(alpha @ y)) / jnp.sqrt(n_eff)
     delta = (jnp.sqrt(2.0 * gap) + 2.0 * eq_resid) / lam
-    return alpha / lam, delta, gap
+    theta = alpha / lam
+    # fail-safe: a non-finite certificate must never feed screening. A NaN
+    # theta with a *finite* delta is the dangerous combination (bounds come
+    # out NaN and `bounds >= tau` silently discards), so collapse delta and
+    # gap to inf whenever any component is non-finite — every screening
+    # consumer gates on isfinite(delta) / the NaN-safe keep comparison.
+    cert_ok = (jnp.isfinite(gap) & jnp.isfinite(delta)
+               & jnp.all(jnp.isfinite(theta)))
+    inf = jnp.asarray(jnp.inf, X.dtype)
+    return theta, jnp.where(cert_ok, delta, inf), jnp.where(cert_ok, gap, inf)
 
 
 def _dynamic_run(
@@ -586,6 +692,7 @@ def _dynamic_run(
     sample_u_prev: Optional[jax.Array] = None,
     sample_shrink: float = 2.0,
     sample_floor: float = 1e-3,
+    guards: bool = False,
 ) -> DynamicFistaResult:
     """Raw segmented dynamic solve (see :func:`fista_solve_dynamic`).
 
@@ -622,14 +729,22 @@ def _dynamic_run(
     statics0 = bound_statics(sm_vec)
 
     s0 = _init_state(X, y, lam, w0, jnp.asarray(b0, X.dtype), sm, use_pallas,
-                     valid_m=valid_m)
+                     valid_m=valid_m, guards=guards)
     kept0 = jnp.full((n_seg,), -1, jnp.int32)
     gaps0 = jnp.full((n_seg,), jnp.inf, X.dtype)
     kept_s0 = jnp.full((n_seg,), -1, jnp.int32)
 
+    def _trips(s):
+        # the trip bound looks at the low (rollback) bits only — refused
+        # screening refreshes (HEALTH_SCREEN_REFUSED) don't stop the solve
+        return s.health & (HEALTH_SCREEN_REFUSED - 1)
+
     def outer_cond(carry):
         s, *_ = carry
-        return (s.k < max_iters) & (_rel3(s) > tol)
+        go = (s.k < max_iters) & (_rel3(s) > tol)
+        if guards:
+            go = go & (_trips(s) < MAX_GUARD_TRIPS)
+        return go
 
     def outer_body(carry):
         s, fmask, smask, statics, sm_dirty, kept, gaps, kept_s, seg = carry
@@ -637,11 +752,14 @@ def _dynamic_run(
 
         # -- segment: up to screen_every FISTA steps on the live mask ------
         body = _make_fista_body(X, y, lam, inv_L, seg_sm, fmask, use_pallas,
-                                valid_m=valid_m)
+                                valid_m=valid_m, guards=guards)
         k_stop = jnp.minimum(s.k + screen_every, max_iters)
 
         def inner_cond(st):
-            return (st.k < k_stop) & (_rel3(st) > tol)
+            go = (st.k < k_stop) & (_rel3(st) > tol)
+            if guards:
+                go = go & (_trips(st) < MAX_GUARD_TRIPS)
+            return go
 
         s = jax.lax.while_loop(inner_cond, body, s)
 
@@ -676,7 +794,12 @@ def _dynamic_run(
             screen_bounds_from_reductions(red, sh),
             jnp.abs(red.d_theta) + jnp.sqrt(jnp.maximum(d_sq_c, 0.0)) * delta,
         )
-        new_mask = fmask * (bounds >= tau).astype(X.dtype)
+        # fail-safe keep: ~(b < tau) keeps NaN/inf bounds (a poisoned
+        # certificate degrades to "no screening this segment", never to a
+        # wrong discard), and the explicit cert gate records the refusal
+        cert_ok = jnp.isfinite(delta)
+        keep = (~(bounds < tau)) | (~cert_ok)
+        new_mask = fmask * keep.astype(X.dtype)
 
         # -- dynamic sample re-screen: margin surplus at the carried
         # margins (O(n) — no sweep). Samples whose surplus clears the slack
@@ -689,7 +812,10 @@ def _dynamic_run(
                 u_prev=sample_u_prev, shrink_factor=sample_shrink,
                 margin_floor=sample_floor,
             )
-            new_sm = smask * (surplus < 0.0).astype(X.dtype)
+            # NaN-safe drop test: a non-finite surplus keeps the sample
+            # (~(s >= 0) is True for NaN), so a poisoned margin can only
+            # cost speed, never silently drop loss terms
+            new_sm = smask * (~(surplus >= 0.0)).astype(X.dtype)
             sm_dirty = jnp.sum(smask - new_sm) > 0.0  # statics stale now
         else:
             new_sm = smask
@@ -715,10 +841,15 @@ def _dynamic_run(
             rel_change=jnp.asarray(jnp.inf, X.dtype),
             rel_prev=jnp.asarray(jnp.inf, X.dtype),
             rel_prev2=jnp.asarray(jnp.inf, X.dtype),
+            health=s.health, backoff=s.backoff,
         )
         s = jax.tree_util.tree_map(
             lambda a, b_: jnp.where(changed, a, b_), s_masked, s
         )
+        # a refused refresh is health telemetry, not a solver trip: set the
+        # flag bit once (idempotent under repeated refusals via bitwise or)
+        s = s._replace(health=s.health | jnp.where(
+            cert_ok, 0, HEALTH_SCREEN_REFUSED).astype(jnp.int32))
 
         # a segment may consume fewer than screen_every iterations (inner
         # convergence followed by a mask change restarts iteration), so more
@@ -743,16 +874,17 @@ def _dynamic_run(
         gap_per_segment=gaps, n_segments=seg, u=out.u,
         sample_mask=(smask > 0.5) if dynamic_samples else None,
         kept_samples_per_segment=kept_s if dynamic_samples else None,
+        health=out.health,
     )
 
 
 @partial(jax.jit, static_argnames=("max_iters", "screen_every", "n_feas_iters",
-                                   "use_pallas", "dynamic_samples"))
+                                   "use_pallas", "dynamic_samples", "guards"))
 def _fista_solve_dynamic_jit(X, y, lam, w0, b0, max_iters, tol, L,
                              sample_mask, feature_mask, screen_every, tau,
                              n_feas_iters, use_pallas, dynamic_samples,
                              sample_dw, sample_db, sample_u_prev,
-                             sample_shrink, sample_floor):
+                             sample_shrink, sample_floor, guards):
     m = X.shape[0]
     lam = jnp.asarray(lam, X.dtype)
     if w0 is None:
@@ -774,7 +906,7 @@ def _fista_solve_dynamic_jit(X, y, lam, w0, b0, max_iters, tol, L,
                         sample_dw=sample_dw, sample_db=sample_db,
                         sample_u_prev=sample_u_prev,
                         sample_shrink=sample_shrink,
-                        sample_floor=sample_floor)
+                        sample_floor=sample_floor, guards=guards)
 
 
 def fista_solve_dynamic(
@@ -798,6 +930,7 @@ def fista_solve_dynamic(
     sample_u_prev: Optional[jax.Array] = None,
     sample_shrink_factor: float = 2.0,
     sample_margin_floor: float = 1e-3,
+    guards: Optional[bool] = None,
 ) -> DynamicFistaResult:
     """Segmented FISTA with gap-driven dynamic feature screening.
 
@@ -841,4 +974,5 @@ def fista_solve_dynamic(
         sample_u_prev,
         jnp.asarray(float(sample_shrink_factor)),
         jnp.asarray(float(sample_margin_floor)),
+        _resolve_guards(guards),
     )

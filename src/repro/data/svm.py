@@ -136,25 +136,46 @@ def iter_libsvm(path, zero_based: bool = False) -> Iterator[tuple]:
     memory is O(one line). Comment lines / trailing ``# comments`` are
     stripped, blank lines and trailing whitespace tolerated; indices are
     1-based unless ``zero_based``.
+
+    A malformed line (unparseable label, token without ``:``, non-numeric
+    index/value, wrong index base) raises ``ValueError`` naming the file,
+    the 1-based line number, and the offending token — not a bare float()
+    traceback three frames deep.
     """
     with _open_maybe_gzip(path) as fh:
-        for line in fh:
-            line = line.split("#", 1)[0].strip()
+        for lineno, raw in enumerate(fh, start=1):
+            line = raw.split("#", 1)[0].strip()
             if not line:
                 continue
             parts = line.split()
-            label = float(parts[0])
+            try:
+                label = float(parts[0])
+            except ValueError:
+                raise ValueError(
+                    f"{path}:{lineno}: malformed label {parts[0]!r} "
+                    f"(expected a number)") from None
             idx, vals = [], []
             for tok in parts[1:]:
-                k, v = tok.split(":")
-                j = int(k) - (0 if zero_based else 1)
+                k, sep, v = tok.partition(":")
+                if not sep:
+                    raise ValueError(
+                        f"{path}:{lineno}: malformed feature token {tok!r} "
+                        f"(expected <index>:<value>)")
+                try:
+                    j = int(k) - (0 if zero_based else 1)
+                    val = float(v)
+                except ValueError:
+                    raise ValueError(
+                        f"{path}:{lineno}: malformed feature token {tok!r} "
+                        f"(index must be an integer, value a number)"
+                    ) from None
                 if j < 0:
                     raise ValueError(
-                        f"feature index {k} in {path} is not "
+                        f"{path}:{lineno}: feature index {k} is not "
                         f"{'0' if zero_based else '1'}-based"
                     )
                 idx.append(j)
-                vals.append(float(v))
+                vals.append(val)
             yield label, idx, vals
 
 

@@ -59,6 +59,23 @@ program — a same-key same-shape dispatch that retraced is a regression).
 Under-predicting the capacity never breaks correctness: the step program's
 scalar overflow check demotes that step to its mask branch on device.
 
+Fault tolerance
+---------------
+Each :class:`PathJob` carries an optional wall-clock ``deadline_s`` and a
+``max_retries`` budget. After every batched step the server host-checks each
+active slot's outputs for finiteness: a poisoned slot (NaN/inf objective or
+weights) is rolled back to its pre-step carry — sanitized, so a poisoned
+certificate re-enters as a *refusing* one (``delta = inf`` → the step
+fail-safes to keep-all) — and retried with backoff; a slot that exhausts its
+retries (or its deadline) is quarantined: masked out of the batch, evicted
+with ``status="failed"``, its slot state zeroed, while the other tenants'
+slots are untouched. ``serve(..., snapshot_dir=...)`` additionally
+checkpoints the whole serve state (device slot buffers, per-job step
+streams, queue order) every ``snapshot_every`` steps through
+:class:`~repro.checkpoint.manager.CheckpointManager`; re-serving the same
+job list with the same ``snapshot_dir`` after a crash resumes mid-path and
+produces results equal to an uninterrupted run.
+
 CPU smoke: PYTHONPATH=src python -m repro.launch.path_server --jobs 6
 """
 
@@ -76,6 +93,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.manager import CheckpointManager
 from repro.core.dual import bias_at_lambda_max, lambda_max, theta_at_lambda_max
 from repro.core.path import PathResult, _bucket, _validate_grid, default_lambda_grid
 from repro.core.path_scan import (
@@ -102,6 +120,8 @@ class PathJob:
     lam_min_ratio: float = 0.1
     rules: str = "feature_vi"           # any single-anchor program stack
     dynamic: bool = False               # in-solver re-screen segments
+    deadline_s: Optional[float] = None  # wall budget from first insert
+    max_retries: int = 1                # poisoned-step retry budget
 
     # -- server-owned runtime state (streamed results) ---------------------
     t: int = field(default=0, repr=False)
@@ -110,6 +130,10 @@ class PathJob:
     lam_max: float = field(default=0.0, repr=False)
     t_submit: float = field(default=0.0, repr=False)
     t_done: float = field(default=0.0, repr=False)
+    t_start: float = field(default=0.0, repr=False)  # deadline epoch
+    retries: int = field(default=0, repr=False)
+    status: str = field(default="queued", repr=False)  # running/done/failed
+    error: Optional[str] = field(default=None, repr=False)
 
     @property
     def rule_stack(self) -> tuple:
@@ -171,10 +195,18 @@ class PathServer:
 
         self._programs: dict = {}
         self.stats = dict(hits=0, misses=0, steps=0, occupied_slots=0,
-                          jobs_done=0, mask_fallback_steps=0)
+                          jobs_done=0, mask_fallback_steps=0,
+                          retries=0, jobs_failed=0)
         self._group: Optional[tuple] = None
         self._act = np.zeros((self.slots,), bool)
         self._slot_jobs: list[Optional[PathJob]] = [None] * self.slots
+        # testing seam: called as hook(step_count) after every serve-loop
+        # step (post-snapshot); raising simulates a server crash mid-drain
+        self._step_hook = None
+        self._retry_backoff_s = 0.01
+        # jobs already finished (done/failed) this serve — snapshots must
+        # carry their streams too, or a resume would lose their results
+        self._tracked_done: list[PathJob] = []
 
     # -- program cache -----------------------------------------------------
 
@@ -289,6 +321,9 @@ class PathServer:
         self._last_kept[slot] = 0
         self._act[slot] = True
         self._slot_jobs[slot] = job
+        job.status = "running"
+        if job.t_start == 0.0:
+            job.t_start = time.perf_counter()
 
     # -- one batched lambda step -------------------------------------------
 
@@ -309,17 +344,28 @@ class PathServer:
 
     def step(self):
         m_b, n_b, _, _ = self._group
+        now = time.perf_counter()
         for s in range(self.slots):
             job = self._slot_jobs[s]
-            if self._act[s]:
-                self._lam_host[s] = float(job.lambdas[job.t])
+            if not self._act[s]:
+                continue
+            if (job.deadline_s is not None
+                    and now - job.t_start > job.deadline_s):
+                self._evict_failed(
+                    s, f"deadline {job.deadline_s}s exceeded at "
+                       f"lambda index {job.t}")
+                continue
+            self._lam_host[s] = float(job.lambdas[job.t])
+        if not self._act.any():
+            return
         cap_b = self._predict_cap(m_b)
         fn = self._program(m_b, n_b, cap_b, self._step_cfg)
         lam = jnp.asarray(self._lam_host, self.dtype)
         act = jnp.asarray(self._act)
         tau = jnp.asarray(self.tau, self.dtype)
+        carry_prev = self._carry  # functional updates: free pre-step copy
         self._carry, out = fn(self._X, self._y, self._sm, self._statics,
-                              self._inv_L, tau, self.tol, self._carry,
+                              self._inv_L, tau, self.tol, carry_prev,
                               lam, act)
         host = {k: np.asarray(v) for k, v in out._asdict().items()}
         self.stats["steps"] += 1
@@ -330,15 +376,70 @@ class PathServer:
             if not self._act[s]:
                 continue
             job = self._slot_jobs[s]
+            poisoned = not (np.isfinite(host["obj"][s])
+                            and np.all(np.isfinite(host["w"][s])))
+            if poisoned:
+                # fault isolation: THIS slot rolls back to its pre-step
+                # carry (sanitized — a poisoned certificate re-enters
+                # refusing, delta = inf) and the step is not recorded; the
+                # other tenants' outputs are committed normally
+                if job.retries < job.max_retries:
+                    job.retries += 1
+                    self.stats["retries"] += 1
+                    time.sleep(self._retry_backoff_s * (2 ** (job.retries - 1)))
+                    self._carry = self._restore_slot_carry(carry_prev, s)
+                    continue
+                self._evict_failed(
+                    s, f"non-finite step output at lambda index {job.t} "
+                       f"after {job.retries} retries")
+                continue
             job.steps.append({k: v[s] for k, v in host.items()})
             self._last_kept[s] = int(host["kept"][s])
             job.t += 1
             if job.t >= len(job.lambdas):
                 self._finish(s)
 
-    def _finish(self, slot: int):
+    def _restore_slot_carry(self, carry_prev, s: int):
+        """Splice slot ``s``'s pre-step carry back in, sanitized: non-finite
+        weights/bias/theta become zeros (always feasible), a non-finite
+        ``delta`` becomes ``+inf`` (a *refusing* certificate — the retried
+        step screens keep-all instead of trusting poison), and a non-finite
+        keep flag re-enters live."""
+        w, b, th, dl, lp, km = self._carry
+        pw, pb, pth, pdl, plp, pkm = carry_prev
+        fin = lambda a: jnp.where(jnp.isfinite(a), a, jnp.zeros_like(a))
+        return (
+            w.at[s].set(fin(pw[s])),
+            b.at[s].set(fin(pb[s])),
+            th.at[s].set(fin(pth[s])),
+            dl.at[s].set(jnp.where(jnp.isfinite(pdl[s]), pdl[s],
+                                   jnp.asarray(jnp.inf, dl.dtype))),
+            lp.at[s].set(jnp.where(jnp.isfinite(plp[s]), plp[s],
+                                   jnp.asarray(self._lam_host[s], lp.dtype))),
+            km.at[s].set(jnp.where(jnp.isfinite(pkm[s]), pkm[s],
+                                   jnp.ones_like(pkm[s]))),
+        )
+
+    def _evict_failed(self, slot: int, msg: str):
+        """Quarantine a poisoned/overdue job: mask its slot out of the
+        batch, zero the slot state (no NaN residue for the next tenant),
+        evict with ``status="failed"`` — results stay 1:1 with jobs (the
+        failed job's ``result`` is None, its ``error`` says why)."""
         job = self._slot_jobs[slot]
+        job.status = "failed"
+        job.error = msg
         job.t_done = time.perf_counter()
+        job.result = None
+        self.stats["jobs_failed"] += 1
+        self._tracked_done.append(job)
+        self._act[slot] = False
+        self._slot_jobs[slot] = None
+        self._carry = tuple(c.at[slot].set(jnp.zeros_like(c[slot]))
+                            for c in self._carry)
+
+    def _assemble(self, job: PathJob) -> PathResult:
+        """Build the job's PathResult from its streamed per-step outputs
+        (also the resume path's way to re-materialize finished jobs)."""
         m = job.X.shape[0]
         stacked = {k: np.stack([st[k] for st in job.steps])
                    for k in ScanPathOutputs._fields}
@@ -354,24 +455,165 @@ class PathServer:
         r.extras["jid"] = job.jid
         r.extras["latency_s"] = job.t_done - job.t_submit
         job.result = r
-        job.steps = []
+        return r
+
+    def _finish(self, slot: int):
+        job = self._slot_jobs[slot]
+        job.t_done = time.perf_counter()
+        self._assemble(job)
+        job.status = "done"
         self.stats["jobs_done"] += 1
+        self._tracked_done.append(job)
         self._act[slot] = False
         self._slot_jobs[slot] = None
 
+    # -- snapshot / resume -------------------------------------------------
+
+    def _snapshot(self, mgr: CheckpointManager, pending: list):
+        """Checkpoint the complete serve state at the current step count.
+
+        Arrays (device slot buffers + each job's stacked step stream +
+        grids) go in the npz; everything discrete (group key, slot->jid
+        map, queue order, per-job progress/status) rides the JSON manifest.
+        The write is atomic (tmp + rename), so a crash mid-snapshot leaves
+        the previous one valid.
+        """
+        now = time.perf_counter()
+        flat = {
+            "X": self._X, "y": self._y, "sm": self._sm,
+            "inv_L": self._inv_L, "lam_host": self._lam_host,
+            "last_kept": self._last_kept, "act": self._act,
+        }
+        for i, a in enumerate(self._statics):
+            flat[f"statics{i}"] = a
+        for i, a in enumerate(self._carry):
+            flat[f"carry{i}"] = a
+        jobs_meta = {}
+        tracked = [j for j in self._slot_jobs if j is not None]
+        tracked += list(pending) + list(self._tracked_done)
+        for job in tracked:
+            jid = int(job.jid)
+            jobs_meta[str(jid)] = {
+                "t": int(job.t), "retries": int(job.retries),
+                "status": job.status, "error": job.error,
+                "lam_max": float(job.lam_max),
+                "elapsed": float(now - job.t_submit),
+                "started": float(now - job.t_start) if job.t_start else -1.0,
+                "n_steps": len(job.steps),
+            }
+            if job.lambdas is not None:
+                flat[f"job{jid}_lambdas"] = np.asarray(job.lambdas)
+            for f in ScanPathOutputs._fields:
+                if job.steps:
+                    flat[f"job{jid}_{f}"] = np.stack(
+                        [np.asarray(st[f]) for st in job.steps])
+        m_b, n_b, rule_stack, dynamic = self._group
+        extra = {
+            "group": [int(m_b), int(n_b), list(rule_stack), bool(dynamic)],
+            "slots": [int(j.jid) if j is not None else -1
+                      for j in self._slot_jobs],
+            "pending": [int(j.jid) for j in pending],
+            "jobs": jobs_meta,
+            "stats": {k: int(v) for k, v in self.stats.items()},
+        }
+        mgr.save(self.stats["steps"], flat, extra=extra)
+
+    def _restore_serve(self, mgr: CheckpointManager,
+                       jobs: list) -> Optional[list]:
+        """Resume from the latest snapshot: rebuild device slot state,
+        splice each job's recorded progress back (matched by ``jid``), and
+        return the restored pending queue — or None when there is no valid
+        snapshot (fresh serve)."""
+        step = mgr.latest()
+        if step is None:
+            return None
+        flat, manifest = mgr.restore_raw(step)
+        ex = manifest["extra"]
+        by_jid = {int(j.jid): j for j in jobs}
+        g = ex["group"]
+        self._alloc_group((int(g[0]), int(g[1]), tuple(g[2]), bool(g[3])))
+        self._X = jnp.asarray(flat["X"])
+        self._y = jnp.asarray(flat["y"])
+        self._sm = jnp.asarray(flat["sm"])
+        self._inv_L = jnp.asarray(flat["inv_L"])
+        self._statics = tuple(jnp.asarray(flat[f"statics{i}"])
+                              for i in range(5))
+        self._carry = tuple(jnp.asarray(flat[f"carry{i}"])
+                            for i in range(6))
+        self._lam_host = np.asarray(flat["lam_host"], np.float64).copy()
+        self._last_kept = np.asarray(flat["last_kept"], np.int64).copy()
+        self._act = np.asarray(flat["act"], bool).copy()
+        now = time.perf_counter()
+        self._tracked_done = []
+        for jid_s, jm in ex["jobs"].items():
+            job = by_jid.get(int(jid_s))
+            if job is None:
+                raise ValueError(
+                    f"snapshot references job {jid_s} missing from the "
+                    f"resubmitted job list")
+            job.t = int(jm["t"])
+            job.retries = int(jm["retries"])
+            job.status = jm["status"]
+            job.error = jm["error"]
+            job.lam_max = float(jm["lam_max"])
+            job.t_submit = now - float(jm["elapsed"])
+            job.t_start = (now - float(jm["started"])
+                           if jm["started"] >= 0 else 0.0)
+            key = f"job{int(jid_s)}_lambdas"
+            if key in flat:
+                job.lambdas = np.asarray(flat[key])
+            n_steps = int(jm["n_steps"])
+            if n_steps:
+                stacks = {f: flat[f"job{int(jid_s)}_{f}"]
+                          for f in ScanPathOutputs._fields}
+                job.steps = [{f: stacks[f][k] for f in stacks}
+                             for k in range(n_steps)]
+            if job.status == "done":
+                job.t_done = job.t_submit + float(jm["elapsed"])
+                self._assemble(job)
+                self._tracked_done.append(job)
+                self.stats["jobs_done"] += 1
+            elif job.status == "failed":
+                job.t_done = job.t_submit + float(jm["elapsed"])
+                self._tracked_done.append(job)
+                self.stats["jobs_failed"] += 1
+        self._slot_jobs = [by_jid[j] if j >= 0 else None
+                           for j in ex["slots"]]
+        self.stats["steps"] = int(ex["stats"].get("steps",
+                                                  manifest["step"]))
+        return [by_jid[j] for j in ex["pending"]]
+
     # -- the serve loop ----------------------------------------------------
 
-    def serve(self, jobs: list[PathJob], log=print) -> list[PathResult]:
-        """Drain a job queue; returns results in submission order.
+    def serve(self, jobs: list[PathJob], log=print,
+              snapshot_dir=None, snapshot_every: int = 0,
+              ) -> list[Optional[PathResult]]:
+        """Drain a job queue; returns results in submission order (a failed
+        job's entry is None — see its ``.error``).
 
         Continuous batching: empty slots refill from the queue (same bucket
         group) before every step, so ragged grid lengths keep the device
         program saturated instead of waiting on the longest path.
+
+        ``snapshot_dir`` enables crash recovery: serve state (device slot
+        buffers, per-job step streams, queue order, progress) is
+        checkpointed there every ``snapshot_every`` steps (atomically, via
+        :class:`CheckpointManager`). Calling ``serve`` again with the same
+        ``jobs`` list (matched by ``jid``) and the same ``snapshot_dir``
+        resumes from the latest snapshot instead of starting over, and the
+        resumed run's results equal an uninterrupted run's.
         """
         pending = list(jobs)
         t0 = time.perf_counter()
         for j in pending:
             j.t_submit = t0
+        mgr = (CheckpointManager(snapshot_dir, keep=2)
+               if snapshot_dir is not None else None)
+        resumed = self._restore_serve(mgr, jobs) if mgr is not None else None
+        if resumed is not None:
+            pending = resumed
+        else:
+            self._tracked_done = []
         while pending or self._act.any():
             if not self._act.any():
                 nxt_group = pending[0].group_key()
@@ -386,6 +628,11 @@ class PathServer:
                     pending.remove(nxt)
                     self._insert(s, nxt)
             self.step()
+            if (mgr is not None and snapshot_every
+                    and self.stats["steps"] % int(snapshot_every) == 0):
+                self._snapshot(mgr, pending)
+            if self._step_hook is not None:
+                self._step_hook(self.stats["steps"])
         wall = time.perf_counter() - t0
         lat = np.array([j.t_done - j.t_submit for j in jobs])
         occ = (self.stats["occupied_slots"]

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 from pathlib import Path
 
@@ -336,11 +337,24 @@ def run_path_chunked(
     # validates the spec itself
     rule_spec = [] if rules in (None, "none") else rules
     if storage == "mmap" or store_dir is not None:
-        if libsvm_path is None:
-            raise ValueError("--store-dir builds its mmap store from a "
-                             "libsvm file; add --libsvm FILE")
-        fc, y = FeatureChunked.from_libsvm_cached(
-            libsvm_path, store_dir=store_dir, chunk_m=chunk_m)
+        if libsvm_path is not None:
+            fc, y = FeatureChunked.from_libsvm_cached(
+                libsvm_path, store_dir=store_dir, chunk_m=chunk_m)
+        elif store_dir is not None:
+            # open an existing store directly: a missing directory raises
+            # StoreMissingError, checksum/size damage StoreCorruptError —
+            # both reach the CLI as a typed message + nonzero exit
+            fc = FeatureChunked.from_store(store_dir, chunk_m=chunk_m)
+            fc.verify()
+            if fc.labels is None:
+                raise ValueError(
+                    f"store {store_dir} has no labels (y.bin); rebuild it "
+                    "from the source text with --libsvm FILE")
+            y = fc.labels
+        else:
+            raise ValueError("--storage mmap needs --libsvm FILE (to build "
+                             "the store) or --store-dir DIR (to open an "
+                             "existing one)")
     elif storage == "csr":
         if csr is None:
             raise ValueError(
@@ -457,9 +471,10 @@ def main():
         return
 
     rules = args.rules if "," not in args.rules else args.rules.split(",")
-    if args.storage == "mmap" and args.libsvm:
-        # the mmap store is built straight from the file by the chunked
-        # lane (from_libsvm_cached) — never materialize X in host RAM here
+    if args.storage == "mmap":
+        # the mmap store is built straight from the file (or opened from
+        # --store-dir) by the chunked lane — never materialize X in host
+        # RAM here
         from repro.data import SvmDataset
 
         ds = SvmDataset(X=None, y=None, w_true=None, csr=None)
@@ -492,13 +507,22 @@ def main():
                 "chunk on one device); use --storage dense for sharded "
                 "meshes"
             )
-        results = run_path_chunked(
-            ds.X, ds.y, csr=ds.csr, n_lambdas=args.n_lambdas,
-            rules=args.rules, storage=args.storage, chunk_m=args.chunk_m,
-            exact_lipschitz=args.exact_lipschitz,
-            chunk_skip=args.chunk_skip, dynamic=args.dynamic,
-            screen_every=args.screen_every,
-            libsvm_path=args.libsvm, store_dir=args.store_dir)
+        from repro.sparse import StoreError
+
+        try:
+            results = run_path_chunked(
+                ds.X, ds.y, csr=ds.csr, n_lambdas=args.n_lambdas,
+                rules=args.rules, storage=args.storage, chunk_m=args.chunk_m,
+                exact_lipschitz=args.exact_lipschitz,
+                chunk_skip=args.chunk_skip, dynamic=args.dynamic,
+                screen_every=args.screen_every,
+                libsvm_path=args.libsvm, store_dir=args.store_dir)
+        except StoreError as e:
+            # typed storage failure (missing store, checksum mismatch,
+            # exhausted read retries) — a clean message and a nonzero
+            # exit, not a traceback
+            print(f"error: {type(e).__name__}: {e}", file=sys.stderr)
+            raise SystemExit(2)
         Path("artifacts").mkdir(exist_ok=True)
         Path("artifacts/svm_path.json").write_text(json.dumps(results, indent=2))
         return

@@ -21,7 +21,14 @@ Entry points:
   ``from_store`` keep the chunks themselves disk-resident (memmap).
 """
 
-from .chunked import BCOO_DENSITY_THRESHOLD, CsrChunk, FeatureChunked  # noqa: F401
+from .chunked import (  # noqa: F401
+    BCOO_DENSITY_THRESHOLD,
+    CsrChunk,
+    FeatureChunked,
+    StoreCorruptError,
+    StoreError,
+    StoreMissingError,
+)
 from .screen_stream import (  # noqa: F401
     ChunkScreenCache,
     fixed_reductions,

@@ -51,19 +51,132 @@ is the explicit escape hatch for in-core use and small tests.
 ``chunks_skipped`` / ``bytes_put`` for the skip plane) and the largest row
 block ever put on device (``max_put_rows``) so benchmarks and tests can
 observe the contract instead of trusting it.
+
+Store integrity: ``save_store`` (and the ``from_libsvm_cached`` build)
+records a crc32 per store-grid chunk in ``meta.json``; ``from_store``
+validates file presence/sizes up front (typed :class:`StoreMissingError` /
+:class:`StoreCorruptError`) and verifies each grid chunk's checksum lazily,
+the first time any of its rows is about to reach the device — so a corrupt
+chunk is detected *before* its bytes can participate in a sweep or a
+screening bound. Transient read faults retry with backoff
+(:func:`_read_with_retry`; ``_read_fault_hook`` is the fault-injection
+seam), and ``from_libsvm_cached`` rebuilds the store from the libsvm text
+when opening it fails with a :class:`StoreError`.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import time
+import zlib
 from typing import NamedTuple, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["CsrChunk", "FeatureChunked", "BCOO_DENSITY_THRESHOLD"]
+__all__ = ["CsrChunk", "FeatureChunked", "BCOO_DENSITY_THRESHOLD",
+           "StoreError", "StoreMissingError", "StoreCorruptError"]
+
+
+class StoreError(RuntimeError):
+    """Base error for on-disk store problems (missing, corrupt, unreadable)."""
+
+
+class StoreMissingError(StoreError):
+    """The store directory or one of its files does not exist."""
+
+
+class StoreCorruptError(StoreError):
+    """The store exists but fails validation (truncated file, bad meta,
+    checksum mismatch)."""
+
+
+#: Testing seam: when set, called as ``hook(tag, attempt)`` before every
+#: guarded store read; raising ``OSError`` simulates a transient I/O fault
+#: (``testing/faults.py`` installs finite- and infinite-fault versions).
+_read_fault_hook = None
+_READ_RETRIES = 3
+_READ_BACKOFF_S = 0.02
+
+
+def _read_with_retry(fn, tag: str):
+    """Run a store read, retrying transient ``OSError`` with backoff.
+
+    mmap-backed reads surface disk faults as ``OSError``/``BusError`` at
+    page-touch time; NFS and flaky disks produce transient ones. Bounded
+    retries with exponential backoff absorb those; persistent failure
+    surfaces as a typed :class:`StoreError` naming the read.
+    """
+    last = None
+    for attempt in range(_READ_RETRIES):
+        try:
+            if _read_fault_hook is not None:
+                _read_fault_hook(tag, attempt)
+            return fn()
+        except OSError as e:
+            last = e
+            if attempt + 1 < _READ_RETRIES:
+                time.sleep(_READ_BACKOFF_S * (2 ** attempt))
+    raise StoreError(
+        f"store read failed after {_READ_RETRIES} attempts: {tag}") from last
+
+
+def _grid_chunk_crc(fmt: str, arrays, s: int, e: int) -> int:
+    """crc32 of store-grid rows ``[s, e)`` — the payload bytes a sweep of
+    those rows would consume (CSR: data + indices + the indptr slice)."""
+    if fmt == "csr":
+        data, indices, indptr = arrays
+        lo, hi = int(indptr[s]), int(indptr[e])
+        c = zlib.crc32(np.ascontiguousarray(data[lo:hi]).tobytes())
+        c = zlib.crc32(np.ascontiguousarray(indices[lo:hi]).tobytes(), c)
+        return zlib.crc32(np.ascontiguousarray(indptr[s:e + 1]).tobytes(), c)
+    (X,) = arrays
+    return zlib.crc32(np.ascontiguousarray(X[s:e]).tobytes())
+
+
+def _store_grid_checksums(store_dir, meta: dict) -> dict:
+    """Compute the ``meta["checksums"]`` block by re-reading the written
+    binaries on the store's uniform chunk grid (verification's frame of
+    reference, independent of any runtime re-chunking)."""
+    m = int(meta["m"])
+    cm = int(meta["chunk_m"])
+    dt = np.dtype(meta["dtype"])
+    if meta["format"] == "csr":
+        indptr = np.memmap(os.path.join(store_dir, "indptr.bin"),
+                           dtype=np.int64, mode="r", shape=(m + 1,))
+        nnz = max(int(indptr[-1]), 1)
+        arrays = (
+            np.memmap(os.path.join(store_dir, "data.bin"), dtype=dt,
+                      mode="r", shape=(nnz,)),
+            np.memmap(os.path.join(store_dir, "indices.bin"),
+                      dtype=np.int32, mode="r", shape=(nnz,)),
+            indptr,
+        )
+    else:
+        arrays = (np.memmap(os.path.join(store_dir, "X.bin"), dtype=dt,
+                            mode="r", shape=(m, int(meta["n"]))),)
+    crcs = [_grid_chunk_crc(meta["format"], arrays, s, min(s + cm, m))
+            for s in range(0, m, cm)]
+    out = {"algo": "crc32", "chunks": crcs}
+    if meta.get("has_y"):
+        y_path = os.path.join(store_dir, "y.bin")
+        with open(y_path, "rb") as fy:
+            out["y"] = zlib.crc32(fy.read())
+    return out
+
+
+def _require_store_file(store_dir, name: str,
+                        nbytes: Optional[int] = None) -> str:
+    p = os.path.join(store_dir, name)
+    if not os.path.exists(p):
+        raise StoreMissingError(f"store {store_dir} is missing {name}")
+    if nbytes is not None and os.path.getsize(p) < nbytes:
+        raise StoreCorruptError(
+            f"{p} is truncated: {os.path.getsize(p)} bytes, "
+            f"expected at least {nbytes}")
+    return p
 
 #: CSR chunks at or below this density are swept as BCOO on device (FLOPs
 #: scale with nnz); denser CSR chunks are densified per transfer (the dense
@@ -151,6 +264,9 @@ class FeatureChunked:
         self.stats = {"puts": 0, "max_put_rows": 0, "bcoo_puts": 0,
                       "chunks_streamed": 0, "chunks_skipped": 0,
                       "bytes_put": 0}
+        # set by from_store: lazy checksum-verification state over the
+        # store's uniform chunk grid (None = not store-backed / no sums)
+        self._store = None
 
     # -- constructors ------------------------------------------------------
 
@@ -225,10 +341,39 @@ class FeatureChunked:
 
     # -- device streaming --------------------------------------------------
 
+    def _verify_rows(self, s: int, e: int) -> None:
+        """Checksum-verify the store-grid chunks overlapping rows ``[s, e)``
+        before those bytes reach any consumer; each grid chunk is verified
+        once per container (the memmap views are read-only thereafter, and
+        re-verifying every stream would double the path's disk traffic)."""
+        st = self._store
+        if st is None:
+            return
+        cm = st["chunk_m"]
+        for j in range(s // cm, -(-e // cm)):
+            if st["verified"][j]:
+                continue
+            gs, ge = j * cm, min((j + 1) * cm, self.m)
+            got = _read_with_retry(
+                lambda: _grid_chunk_crc(st["format"], st["arrays"], gs, ge),
+                f"{st['dir']} rows [{gs}, {ge})")
+            if got != st["crcs"][j]:
+                raise StoreCorruptError(
+                    f"checksum mismatch in store chunk {j} of {st['dir']} "
+                    f"(rows [{gs}, {ge})): expected "
+                    f"{st['crcs'][j]:#010x}, got {got:#010x}")
+            st["verified"][j] = True
+
+    def verify(self) -> None:
+        """Eagerly checksum-verify the whole store (no-op when the container
+        is not store-backed or the store predates checksums)."""
+        self._verify_rows(0, self.m)
+
     def _device_form(self, i: int):
         """One chunk's device representation: dense ``jax.Array`` or BCOO."""
         from jax.experimental import sparse as jsparse
 
+        self._verify_rows(*self.chunk_bounds(i))
         c = self.chunks[i]
         rows = c.rows if isinstance(c, CsrChunk) else c.shape[0]
         self.stats["puts"] += 1
@@ -377,6 +522,8 @@ class FeatureChunked:
         out = np.zeros((len(idx), self.n), dtype=self.dtype)
         which = np.searchsorted(self.offsets[1:], idx, side="right")
         for ci in np.unique(which):
+            self._verify_rows(*self.chunk_bounds(int(ci)))
+        for ci in np.unique(which):
             sel = np.nonzero(which == ci)[0]
             local = idx[sel] - self.offsets[ci]
             c = self.chunks[ci]
@@ -430,6 +577,9 @@ class FeatureChunked:
         meta = {"format": fmt, "m": self.m, "n": self.n,
                 "dtype": self.dtype.name, "chunk_m": chunk_m,
                 "has_y": y is not None}
+        # integrity manifest computed from the bytes that actually landed on
+        # disk; meta.json (written last) is still the build-complete marker
+        meta["checksums"] = _store_grid_checksums(store_dir, meta)
         with open(os.path.join(store_dir, "meta.json"), "w") as fm:
             json.dump(meta, fm)
         return str(store_dir)
@@ -445,28 +595,70 @@ class FeatureChunked:
         ``chunk_m`` overrides the stored chunking (views are free to
         re-slice). Labels saved alongside are exposed as ``.labels`` (or
         ``None``).
+
+        Integrity: raises :class:`StoreMissingError` when the directory or
+        a required file is absent, :class:`StoreCorruptError` when meta is
+        unparseable or a file is shorter than meta implies. Stores carrying
+        a checksum manifest additionally verify each store-grid chunk's
+        crc32 lazily, on first touch (see :meth:`verify` to front-load it).
         """
-        with open(os.path.join(store_dir, "meta.json")) as fm:
-            meta = json.load(fm)
-        m, n = int(meta["m"]), int(meta["n"])
-        dtype = np.dtype(meta["dtype"])
+        if not os.path.isdir(store_dir):
+            raise StoreMissingError(f"no such store directory: {store_dir}")
+        meta_path = _require_store_file(store_dir, "meta.json")
+        try:
+            with open(meta_path) as fm:
+                meta = json.load(fm)
+            m, n = int(meta["m"]), int(meta["n"])
+            dtype = np.dtype(meta["dtype"])
+            fmt = meta["format"]
+        except (ValueError, KeyError, TypeError) as e:
+            raise StoreCorruptError(
+                f"unreadable store meta {meta_path}: {e}") from e
         chunk_m = int(chunk_m or meta["chunk_m"])
-        if meta["format"] == "csr":
+        if fmt == "csr":
+            _require_store_file(store_dir, "indptr.bin", (m + 1) * 8)
+            indptr = np.memmap(os.path.join(store_dir, "indptr.bin"),
+                               dtype=np.int64, mode="r", shape=(m + 1,))
+            nnz = int(_read_with_retry(lambda: indptr[-1],
+                                       f"{store_dir}/indptr.bin"))
+            _require_store_file(store_dir, "data.bin", nnz * dtype.itemsize)
+            _require_store_file(store_dir, "indices.bin", nnz * 4)
             data = np.memmap(os.path.join(store_dir, "data.bin"),
                              dtype=dtype, mode="r")
             indices = np.memmap(os.path.join(store_dir, "indices.bin"),
                                 dtype=np.int32, mode="r")
-            indptr = np.memmap(os.path.join(store_dir, "indptr.bin"),
-                               dtype=np.int64, mode="r", shape=(m + 1,))
             fc = cls.from_csr((data, indices, indptr, (m, n)),
                               chunk_m=chunk_m, **kw)
+            arrays = (data, indices, indptr)
         else:
+            _require_store_file(store_dir, "X.bin", m * n * dtype.itemsize)
             X = np.memmap(os.path.join(store_dir, "X.bin"), dtype=dtype,
                           mode="r", shape=(m, n))
             fc = cls.from_dense(X, chunk_m=chunk_m, **kw)
+            arrays = (X,)
+        sums = meta.get("checksums")
+        if sums and sums.get("algo") == "crc32":
+            grid_cm = int(meta["chunk_m"])
+            n_grid = -(-m // grid_cm)
+            crcs = list(sums["chunks"])
+            if len(crcs) != n_grid:
+                raise StoreCorruptError(
+                    f"store {store_dir}: manifest has {len(crcs)} chunk "
+                    f"checksums, grid has {n_grid}")
+            fc._store = {"dir": str(store_dir), "format": fmt,
+                         "arrays": arrays, "chunk_m": grid_cm,
+                         "crcs": crcs,
+                         "verified": np.zeros((n_grid,), dtype=bool)}
         y_path = os.path.join(store_dir, "y.bin")
-        fc.labels = (np.fromfile(y_path, dtype=dtype)
-                     if meta.get("has_y") and os.path.exists(y_path) else None)
+        if meta.get("has_y") and os.path.exists(y_path):
+            raw = _read_with_retry(
+                lambda: open(y_path, "rb").read(), y_path)
+            if sums and "y" in sums and zlib.crc32(raw) != sums["y"]:
+                raise StoreCorruptError(
+                    f"checksum mismatch in {y_path}: labels are corrupt")
+            fc.labels = np.frombuffer(raw, dtype=dtype).copy()
+        else:
+            fc.labels = None
         return fc
 
     @classmethod
@@ -484,6 +676,10 @@ class FeatureChunked:
         RAM. Re-opens the existing store on subsequent calls (it sits next
         to the text as ``<path>.store/`` unless ``store_dir`` is given);
         ``rebuild=True`` forces a rebuild. Gzip input works transparently.
+
+        A store that fails to open (:class:`StoreError` — missing files,
+        truncation, checksum mismatch) is rebuilt from the source text once;
+        the error propagates only when the rebuild fails too.
         """
         from ..data.svm import iter_libsvm
 
@@ -535,9 +731,21 @@ class FeatureChunked:
             y.tofile(os.path.join(store_dir, "y.bin"))
             meta = {"format": "csr", "m": m, "n": n, "dtype": dt.name,
                     "chunk_m": int(chunk_m), "has_y": True}
+            meta["checksums"] = _store_grid_checksums(store_dir, meta)
             with open(os.path.join(store_dir, "meta.json"), "w") as fm:
                 json.dump(meta, fm)
-        fc = cls.from_store(store_dir, chunk_m=chunk_m, **kw)
+        try:
+            fc = cls.from_store(store_dir, chunk_m=chunk_m, **kw)
+            # eager verify: silent corruption must trigger the rebuild
+            # fallback *here*, not a StoreCorruptError mid-path later
+            fc.verify()
+        except StoreError:
+            if rebuild or not os.path.exists(path):
+                raise  # fresh build already, or no source to rebuild from
+            return cls.from_libsvm_cached(
+                path, store_dir=store_dir, chunk_m=chunk_m, dtype=dtype,
+                n_features=n_features, zero_based=zero_based, rebuild=True,
+                **kw)
         return fc, fc.labels
 
 

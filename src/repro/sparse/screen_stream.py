@@ -199,7 +199,8 @@ def screen_stream(
     """Safe screening over chunked storage: ``(keep_mask, bounds)``."""
     bounds = screen_bounds_stream(fc, y, lam1, lam2, theta1, delta=delta,
                                   use_pallas=use_pallas)
-    return bounds >= tau, bounds
+    # NaN-safe keep: a non-finite bound certifies nothing — keep the feature
+    return ~(bounds < tau), bounds
 
 
 def stream_anchor_stats(fc: FeatureChunked, y, lam1, theta1, delta=0.0,
@@ -292,12 +293,31 @@ class ChunkScreenCache:
 
     def refresh(self, anchor: AnchorStats, live=None) -> None:
         """Record ``anchor`` as the cached region for the streamed chunks
-        (``live=None`` = all). ``anchor.d_theta`` must be full-``m``."""
+        (``live=None`` = all). ``anchor.d_theta`` must be full-``m``.
+
+        A poisoned anchor (any non-finite scalar or ``d_theta`` entry) must
+        never become a cached region — its stale bounds could later certify
+        a live chunk dead. Such an anchor *invalidates* the entries it would
+        have refreshed instead: ``live_mask`` then treats those chunks as
+        never-streamed (+inf stale bounds, always live), i.e. the cache
+        fail-safes to streaming everything it can no longer vouch for.
+        """
+        lam_host = float(anchor.lam)
+        bad = not (np.isfinite(lam_host)
+                   and np.isfinite(float(anchor.delta))
+                   and np.isfinite(float(anchor.theta_dot_one))
+                   and np.isfinite(float(anchor.theta_dot_y))
+                   and np.isfinite(float(anchor.theta_sq))
+                   and bool(jnp.all(jnp.isfinite(anchor.d_theta))))
         scalars = (anchor.lam, anchor.delta, anchor.theta_dot_one,
                    anchor.theta_dot_y, anchor.theta_sq)
-        lam_host = float(anchor.lam)
         for i in range(self.fc.n_chunks):
             if live is not None and i not in live:
+                continue
+            if bad:
+                self._scalars[i] = None
+                self._d_theta[i] = None
+                self._lam_host[i] = None
                 continue
             s, e = self.fc.chunk_bounds(i)
             self._scalars[i] = scalars
@@ -336,7 +356,8 @@ class ChunkScreenCache:
                 continue
             b = finalize_from_anchor_jit(a, lam2, fixed_slice(fixed, s, e))
             parts.append(b)
-            live[i] = bool(jnp.max(b) >= tau)
+            # NaN-safe liveness: a non-finite bound must keep its chunk live
+            live[i] = not bool(jnp.max(b) < tau)
         return live, jnp.concatenate(parts)
 
 
@@ -427,7 +448,8 @@ def screen_step_stream(
         dead_feat = np.repeat(
             ~live, np.diff(fc.offsets).astype(np.int64))
         bounds = jnp.where(jnp.asarray(dead_feat), stale_bounds, bounds)
-    return bounds >= tau, bounds, anchor, live
+    # NaN-safe keep: a non-finite bound certifies nothing — keep the feature
+    return ~(bounds < tau), bounds, anchor, live
 
 
 def _pallas_step(fc, y_key, y, lam1, lam2, theta1, delta, cache, live, skip):
@@ -487,7 +509,8 @@ def screen_stack_stream(
     d_one, d_y, d_sq = fixed_reductions(fc, y)
     fixed = fixed_stats(jnp.asarray(y, fc.dtype), d_one, d_y, d_sq)
     bounds = stack_bounds(progs, lam2, anchors, fixed)
-    return bounds >= tau, bounds
+    # NaN-safe keep: a non-finite bound certifies nothing — keep the feature
+    return ~(bounds < tau), bounds
 
 
 def lambda_max_stream(fc: FeatureChunked, y) -> jax.Array:

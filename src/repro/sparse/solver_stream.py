@@ -52,7 +52,13 @@ from repro.core.screening import (
     row_dot,
     shared_scalars,
 )
-from repro.core.solver import FistaResult, soft_threshold
+from repro.core.solver import (
+    HEALTH_SCREEN_REFUSED,
+    MAX_GUARD_TRIPS,
+    FistaResult,
+    _resolve_guards,
+    soft_threshold,
+)
 
 from .chunked import FeatureChunked
 
@@ -127,6 +133,8 @@ def fista_solve_chunked(
     screen_every: Optional[int] = None,
     screen_tau: float = SAFE_TAU,
     report: Optional[dict] = None,
+    guards: Optional[bool] = None,
+    iteration_hook=None,
 ) -> FistaResult:
     """Solve the primal over chunked storage (see module docstring).
 
@@ -140,6 +148,17 @@ def fista_solve_chunked(
     re-certifies from the live duality gap between segments (at-lambda VI
     region), shrinking both masks mid-solve; ``report`` (a dict, mutated)
     receives ``screens`` / ``live_chunks`` / ``kept`` telemetry.
+
+    ``guards`` (None = ``REPRO_SOLVER_GUARDS`` env default) is the host-loop
+    twin of the in-core numerical health guard: a non-finite objective after
+    a step, or a post-restart increase beyond rounding noise, rolls back to
+    the last accepted iterate with a halved step size; trips are bounded by
+    ``MAX_GUARD_TRIPS`` and returned in ``FistaResult.health``. Checking the
+    *objective* alone suffices — any NaN/inf in ``w``/``u``/``b`` propagates
+    into it through ``lam * sum|w|`` and the slacks. ``iteration_hook``
+    (fault-injection seam, ``testing/faults.py``) is called as
+    ``hook(k, w, b, u, obj) -> None | (w, b, u, obj)`` on each candidate
+    iterate before the guard inspects it.
     """
     m, n = fc.shape
     y_key = y
@@ -167,15 +186,28 @@ def fista_solve_chunked(
 
         d_one, d_y, d_sq = fixed_reductions(fc, y_key)
 
+    guards = _resolve_guards(guards)
+    health = 0
+    backoff = 1.0
+
     if w0 is None:
         w = jnp.zeros((m,), fc.dtype)
         u = jnp.zeros((n,), fc.dtype)
     else:
         w = jnp.asarray(w0, fc.dtype)
+        if guards and not bool(jnp.all(jnp.isfinite(w))):
+            # sanitize the warm start (cf. solver._init_state): w = 0 is
+            # always feasible, and a poisoned coordinate would otherwise
+            # poison every later iterate through the carried margins
+            w = jnp.where(jnp.isfinite(w), w, jnp.zeros_like(w))
+            health += 1
         if masked:
             w = w * fmask_dev
         u = fc.rmatvec(w, live_chunks=live_arg)
     b = jnp.asarray(jnp.mean(y) if b0 is None else b0, fc.dtype)
+    if guards and not bool(jnp.isfinite(b)):
+        b = jnp.asarray(0.0, fc.dtype)
+        health += 1
 
     xi = _slacks(u, b, y, sm)
     obj = _objective(xi, w, lam)
@@ -187,33 +219,59 @@ def fista_solve_chunked(
     rel_prev = rel_prev2 = float("inf")
     n_screens = 0
 
-    def prox_from(w_a, b_a, u_a):
+    def prox_from(w_a, b_a, u_a, inv_Le):
         """One proximal step anchored at known margins: 2 streams of X
         (live chunks only — dead rows are pinned zero by the mask)."""
         xi_a = _slacks(u_a, b_a, y, sm)
         gv = y * xi_a
         gw = -fc.matvec(gv, live_chunks=live_arg)
         gb = -jnp.sum(gv)
-        w_new, b_new = _prox(w_a, b_a, gw, gb, inv_L, lam)
+        w_new, b_new = _prox(w_a, b_a, gw, gb, inv_Le, lam)
         if masked:
             w_new = w_new * fmask_dev
         u_new = fc.rmatvec(w_new, live_chunks=live_arg)
         obj_new = _objective(_slacks(u_new, b_new, y, sm), w_new, lam)
         return w_new, b_new, u_new, obj_new
 
+    eps = float(jnp.finfo(fc.dtype).eps)
     while k < max_iters:
+        inv_Le = inv_L * backoff if guards else inv_L
         t_next = 0.5 * (1.0 + float(jnp.sqrt(1.0 + 4.0 * t * t)))
         beta = (t - 1.0) / t_next
         zw = w + beta * (w - w_prev)
         zb = b + beta * (b - b_prev)
         uz = u + beta * (u - u_prev)
 
-        w_new, b_new, u_new, obj_new = prox_from(zw, zb, uz)
+        w_new, b_new, u_new, obj_new = prox_from(zw, zb, uz, inv_Le)
         restarted = float(obj_new) > float(obj)
         if restarted:
             # monotone restart: plain step from (w, b) — margins are carried
-            w_new, b_new, u_new, obj_new = prox_from(w, b, u)
+            w_new, b_new, u_new, obj_new = prox_from(w, b, u, inv_Le)
             t_next = 1.0
+
+        if iteration_hook is not None:
+            hooked = iteration_hook(k, w_new, b_new, u_new, obj_new)
+            if hooked is not None:
+                w_new, b_new, u_new, obj_new = hooked
+
+        if guards:
+            obj_f = float(obj_new)
+            # a non-finite objective, or a *plain* (post-restart) step that
+            # still increased it beyond rounding noise: the step size is
+            # invalid — roll back, halve it, restart momentum (cf. the
+            # on-device guard in solver._make_fista_body)
+            bad = not np.isfinite(obj_f) or (
+                restarted and obj_f > float(obj)
+                + 256.0 * eps * max(abs(float(obj)), 1.0))
+            if bad:
+                health += 1
+                backoff *= 0.5
+                w_prev, b_prev, u_prev, t = w, b, u, 1.0
+                rel_prev = rel_prev2 = float("inf")
+                k += 1
+                if (health & (HEALTH_SCREEN_REFUSED - 1)) >= MAX_GUARD_TRIPS:
+                    break  # unrecoverable: poisoned operands (see solver)
+                continue
 
         # restart iterations are not convergence evidence (cf. the in-core
         # body): force one more plain iteration after every restart
@@ -234,6 +292,12 @@ def fista_solve_chunked(
             theta, delta = gap_theta_delta_stream(
                 fc, y, w, b, lam, u=u,
                 live_chunks=live_arg, feature_mask=fmask_dev)
+            if not bool(jnp.isfinite(delta)):
+                # refused certificate (non-finite gap/theta, sanitized to
+                # delta = inf): screening from it could discard a live
+                # feature — fail-safe to keep-all for this segment
+                health |= HEALTH_SCREEN_REFUSED
+                continue
             yt = y * theta
             parts = []
             for i in range(fc.n_chunks):
@@ -246,7 +310,8 @@ def fista_solve_chunked(
             red = FeatureReductions(d_theta=jnp.concatenate(parts),
                                     d_one=d_one, d_y=d_y, d_sq=d_sq)
             sh = shared_scalars(y, lam, lam, theta, delta=delta)
-            keep = np.asarray(_finalize_bounds(red, sh) >= screen_tau)
+            # NaN-safe keep: a non-finite bound must KEEP its feature
+            keep = np.asarray(~(_finalize_bounds(red, sh) < screen_tau))
             new_fmask = fmask & keep
             n_screens += 1
             if new_fmask.sum() < fmask.sum():
@@ -271,6 +336,7 @@ def fista_solve_chunked(
     return FistaResult(
         w=w, b=b, obj=obj, n_iters=jnp.asarray(k, jnp.int32),
         converged=jnp.asarray(converged), u=u,
+        health=jnp.asarray(health, jnp.int32),
     )
 
 
@@ -336,6 +402,13 @@ def gap_theta_delta_stream(
            - (jnp.sum(alpha) - 0.5 * jnp.sum(alpha * alpha)))
     eq_resid = jnp.abs(alpha @ y) / jnp.sqrt(jnp.asarray(float(n), fc.dtype))
     delta = (jnp.sqrt(2.0 * jnp.maximum(gap, 0.0)) + 2.0 * eq_resid) / lam
+    theta = alpha / lam
+    # certificate sanitize (twin of solver.gap_theta_delta): any non-finite
+    # component refuses the certificate — delta = inf is the one downstream
+    # signal ("isfinite(delta)") that screening from this anchor is unsafe
+    cert_ok = (jnp.isfinite(gap) & jnp.isfinite(delta)
+               & jnp.all(jnp.isfinite(theta)))
+    delta = jnp.where(cert_ok, delta, jnp.asarray(jnp.inf, fc.dtype))
     if want_corr:
-        return alpha / lam, delta, corr / lam
-    return alpha / lam, delta
+        return theta, delta, corr / lam
+    return theta, delta

@@ -1,0 +1,143 @@
+"""Fault-injection harness for the robustness test suite.
+
+Each injector targets one seam the production code exposes on purpose:
+
+* :func:`poison_path_step` — ``PathDriver._fault_injector``: corrupt the
+  accepted solution of path step ``k`` *before* it is recorded and
+  certified, so the poison flows into the step's stored weights, the next
+  anchor's certificate, and the next warm start — the full recovery chain
+  (refused certificate → keep-all screen → sanitized warm start) is what
+  the chaos tests then assert on.
+* :func:`poison_stream_iterate` — ``fista_solve_chunked(iteration_hook=)``:
+  corrupt the streamed solver's candidate iterate at host-loop iteration
+  ``k``, exercising the host-side guard (rollback + step backoff).
+* :func:`corrupt_store_bytes` / :func:`truncate_store_file` — flip payload
+  bytes in (or truncate) an on-disk store file, for checksum/truncation
+  detection tests.
+* :func:`flaky_reads` / :func:`dead_reads` — context managers installing
+  ``repro.sparse.chunked._read_fault_hook`` so guarded store reads fail
+  transiently (absorbed by retry) or persistently (typed ``StoreError``).
+* :func:`kill_server_after` — ``PathServer._step_hook``: raise
+  :class:`ServerKilled` after N serve-loop steps, simulating a crash
+  mid-drain (snapshots taken before the kill stay valid — atomic publish).
+
+Nothing here is imported by production code paths; the seams themselves
+default to "off" (``None`` hooks).
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import numpy as np
+
+from repro.sparse import chunked as _chunked
+
+
+class ServerKilled(RuntimeError):
+    """Raised by :func:`kill_server_after` to simulate a server crash."""
+
+
+# -- solver / path poison ----------------------------------------------------
+
+def poison_path_step(k: int, value: float = np.nan, coord: int = 0):
+    """A ``PathDriver._fault_injector`` that corrupts step ``k``'s accepted
+    weight vector (``w[coord] = value``) and bias, exactly once."""
+    state = {"fired": False}
+
+    def injector(step, w_full, b_new):
+        if step == k and not state["fired"]:
+            state["fired"] = True
+            w_full = np.array(w_full, copy=True)
+            w_full[coord] = value
+            return w_full, float(value)
+        return w_full, b_new
+
+    injector.state = state
+    return injector
+
+
+def poison_stream_iterate(k: int, value: float = np.nan):
+    """An ``iteration_hook`` for ``fista_solve_chunked`` that replaces the
+    candidate objective at host iteration ``k`` with ``value``, once."""
+    import jax.numpy as jnp
+
+    state = {"fired": False}
+
+    def hook(step, w, b, u, obj):
+        if step == k and not state["fired"]:
+            state["fired"] = True
+            return w, b, u, jnp.asarray(value, w.dtype)
+        return None
+
+    hook.state = state
+    return hook
+
+
+# -- storage faults ----------------------------------------------------------
+
+def corrupt_store_bytes(path, offset: int = 0, nbytes: int = 4):
+    """Flip ``nbytes`` payload bytes of a store file in place (XOR 0xFF —
+    guaranteed to change the bytes, hence the chunk's crc32)."""
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        raw = f.read(nbytes)
+        f.seek(offset)
+        f.write(bytes(b ^ 0xFF for b in raw))
+
+
+def truncate_store_file(path, nbytes: int = 0):
+    """Truncate a store file to ``nbytes`` (simulates an interrupted write
+    that escaped the meta-last build protocol, or filesystem damage)."""
+    with open(path, "r+b") as f:
+        f.truncate(nbytes)
+
+
+@contextlib.contextmanager
+def flaky_reads(n_failures: int = 1):
+    """Guarded store reads raise transient ``OSError`` for their first
+    ``n_failures`` attempts, then succeed — must be absorbed by the retry
+    loop (asserted via the yielded counter dict)."""
+    counts: dict = {}
+
+    def hook(tag, attempt):
+        seen = counts.setdefault(tag, 0)
+        if seen < n_failures:
+            counts[tag] = seen + 1
+            raise OSError(f"injected transient fault on {tag}")
+
+    prev = _chunked._read_fault_hook
+    _chunked._read_fault_hook = hook
+    try:
+        yield counts
+    finally:
+        _chunked._read_fault_hook = prev
+
+
+@contextlib.contextmanager
+def dead_reads():
+    """Every guarded store read fails persistently — retries must exhaust
+    and surface a typed ``StoreError``."""
+
+    def hook(tag, attempt):
+        raise OSError(f"injected persistent fault on {tag}")
+
+    prev = _chunked._read_fault_hook
+    _chunked._read_fault_hook = hook
+    try:
+        yield
+    finally:
+        _chunked._read_fault_hook = prev
+
+
+# -- server crash ------------------------------------------------------------
+
+def kill_server_after(n_steps: int):
+    """A ``PathServer._step_hook`` raising :class:`ServerKilled` once the
+    serve loop has executed ``n_steps`` batched steps."""
+
+    def hook(step_count):
+        if step_count >= n_steps:
+            raise ServerKilled(f"injected crash after {step_count} steps")
+
+    return hook

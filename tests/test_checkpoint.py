@@ -57,3 +57,99 @@ def test_atomicity_no_tmp_left(tmp_path):
     mgr = CheckpointManager(tmp_path)
     mgr.save(9, _state())
     assert not list(tmp_path.glob("*.tmp"))
+
+
+def test_restore_raw_roundtrip(tmp_path):
+    """restore_raw returns the exact flat arrays + manifest (the path
+    server's snapshot format: no pytree template needed)."""
+    flat = {
+        "carry0": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "job0_lambdas": np.array([0.5, 0.25], dtype=np.float64),
+        "act": np.array([True, False]),
+    }
+    extra = {"slots": [0, -1], "pending": [1, 2],
+             "jobs": {"0": {"t": 2, "status": "running"}}}
+    mgr = CheckpointManager(tmp_path, keep=2)
+    mgr.save(3, flat, extra=extra)
+    got, manifest = mgr.restore_raw(3)
+    assert set(got) == set(flat)
+    for k in flat:
+        np.testing.assert_array_equal(got[k], flat[k])
+        assert got[k].dtype == flat[k].dtype
+    assert manifest["extra"] == json.loads(json.dumps(extra))
+
+
+def _mixed_bucket_jobs():
+    """Jobs spanning TWO bucket groups (different (m, n) grids), so the
+    serve loop drains one group, reallocates, and drains the other."""
+    from repro.launch.path_server import demo_jobs
+
+    small = demo_jobs(2, m=64, n=32, seed=0)
+    big = demo_jobs(2, m=96, n=48, seed=10)
+    for i, j in enumerate(big):
+        j.jid = 2 + i
+    return small + big
+
+
+def test_server_snapshot_resume_mixed_buckets(tmp_path):
+    """Kill the server mid-drain on a TWO-bucket workload and resume: the
+    snapshot must carry finished jobs from the *previous* bucket group
+    (whose device state is long gone) as well as the live group's slots,
+    and the resumed results must equal an uninterrupted run bitwise."""
+    from repro.launch.path_server import PathServer
+    from repro.testing import ServerKilled, kill_server_after
+
+    ref = PathServer(slots=2).serve(_mixed_bucket_jobs(),
+                                    log=lambda *a: None)
+    assert all(r is not None for r in ref)
+
+    sd = str(tmp_path / "snap")
+    # kill late enough that the first (small) bucket has drained and the
+    # group has been reallocated for the second
+    total_small = sum(j.n_lambdas for j in _mixed_bucket_jobs()[:2])
+    crashed = PathServer(slots=2)
+    crashed._step_hook = kill_server_after(total_small + 1)
+    with pytest.raises(ServerKilled):
+        crashed.serve(_mixed_bucket_jobs(), log=lambda *a: None,
+                      snapshot_dir=sd, snapshot_every=1)
+
+    resumed = PathServer(slots=2).serve(
+        _mixed_bucket_jobs(), log=lambda *a: None,
+        snapshot_dir=sd, snapshot_every=1)
+    assert all(r is not None for r in resumed)
+    for ra, rb in zip(ref, resumed):
+        np.testing.assert_array_equal(np.asarray(ra.lambdas),
+                                      np.asarray(rb.lambdas))
+        np.testing.assert_array_equal(np.asarray(ra.objectives),
+                                      np.asarray(rb.objectives))
+        np.testing.assert_array_equal(np.asarray(ra.weights),
+                                      np.asarray(rb.weights))
+        np.testing.assert_array_equal(np.asarray(ra.kept),
+                                      np.asarray(rb.kept))
+
+
+def test_server_snapshot_resume_early_kill_mixed_buckets(tmp_path):
+    """Same workload, but killed while the FIRST bucket is still live —
+    resume must re-enter mid-group and still finish both buckets."""
+    from repro.launch.path_server import PathServer
+    from repro.testing import ServerKilled, kill_server_after
+
+    ref = PathServer(slots=2).serve(_mixed_bucket_jobs(),
+                                    log=lambda *a: None)
+
+    sd = str(tmp_path / "snap")
+    crashed = PathServer(slots=2)
+    crashed._step_hook = kill_server_after(2)
+    with pytest.raises(ServerKilled):
+        crashed.serve(_mixed_bucket_jobs(), log=lambda *a: None,
+                      snapshot_dir=sd, snapshot_every=1)
+
+    resumed = PathServer(slots=2).serve(
+        _mixed_bucket_jobs(), log=lambda *a: None,
+        snapshot_dir=sd, snapshot_every=1)
+    assert all(r is not None for r in resumed)
+    for ra, rb in zip(ref, resumed):
+        np.testing.assert_array_equal(np.asarray(ra.objectives),
+                                      np.asarray(rb.objectives))
+        np.testing.assert_array_equal(np.asarray(ra.weights),
+                                      np.asarray(rb.weights))

@@ -1,0 +1,296 @@
+"""Chaos tests: inject faults, assert the safety invariants hold.
+
+The invariants (ISSUE 9):
+  1. a poisoned solve at any path step screens a SUPERSET of the clean
+     run's kept features at that step (fail-safe keep-all, never a wrong
+     discard) and recovers to identical final objectives;
+  2. killing the path server mid-drain and resuming from its snapshot
+     produces results equal to an uninterrupted run;
+  3. a corrupt store chunk is detected by checksum BEFORE its bytes can
+     participate in any sweep or screening bound;
+  4. transient read faults are absorbed by retry; persistent ones surface
+     as typed StoreErrors.
+"""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.path import PathDriver
+from repro.core.solver import HEALTH_SCREEN_REFUSED
+from repro.data import make_sparse_classification
+from repro.sparse.chunked import (
+    FeatureChunked,
+    StoreCorruptError,
+    StoreError,
+    StoreMissingError,
+)
+from repro.testing import faults
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_sparse_classification(m=80, n=48, k_active=6, seed=3)
+
+
+def _driver(**kw):
+    return PathDriver("feature_vi", tol=1e-8, max_iters=1500, **kw)
+
+
+def _run(driver, X, y, T=5):
+    return driver.run(X, y, n_lambdas=T, lam_min_ratio=0.2)
+
+
+# -- invariant 1: poisoned solve -> keep-all fail-safe, then full recovery --
+
+def test_poisoned_path_step_keeps_superset_and_recovers(ds):
+    X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+    clean = _run(_driver(), X, y)
+
+    drv = _driver()
+    drv._fault_injector = faults.poison_path_step(2)
+    poisoned = _run(drv, X, y)
+    assert drv._fault_injector.state["fired"]
+
+    health = poisoned.extras["health"]
+    # the step after the poison screens from a refused certificate
+    assert health[3] & HEALTH_SCREEN_REFUSED
+    assert not np.any(clean.extras["health"])
+    # fail-safe: never fewer kept features than the clean run, and the
+    # refused step keeps everything
+    assert np.all(poisoned.kept >= clean.kept)
+    assert poisoned.kept[3] == X.shape[0]
+    # recovery: every step except the poisoned one matches the clean run
+    T = len(clean.lambdas)
+    for k in range(T):
+        if k == 2:
+            continue
+        assert abs(poisoned.objectives[k] - clean.objectives[k]) < 1e-4
+    assert np.allclose(poisoned.weights[-1], clean.weights[-1], atol=1e-4)
+
+
+def test_poisoned_chunked_path_recovers(ds):
+    y = np.asarray(ds.y)
+    fc_c = FeatureChunked.from_dense(np.asarray(ds.X), chunk_m=16)
+    clean = _run(_driver(), fc_c, y)
+
+    fc_p = FeatureChunked.from_dense(np.asarray(ds.X), chunk_m=16)
+    drv = _driver()
+    drv._fault_injector = faults.poison_path_step(2)
+    poisoned = _run(drv, fc_p, y)
+
+    assert poisoned.extras["health"][3] & HEALTH_SCREEN_REFUSED
+    assert np.all(poisoned.kept >= clean.kept)
+    for k in range(len(clean.lambdas)):
+        if k == 2:
+            continue
+        assert abs(poisoned.objectives[k] - clean.objectives[k]) < 1e-4
+
+
+def test_stream_solver_guard_rolls_back(ds):
+    from repro.sparse.solver_stream import fista_solve_chunked
+
+    y = np.asarray(ds.y)
+    fc = FeatureChunked.from_dense(np.asarray(ds.X), chunk_m=16)
+    lam = 1.0
+    clean = fista_solve_chunked(fc, y, lam, max_iters=400)
+    assert int(clean.health) == 0
+
+    hook = faults.poison_stream_iterate(2)
+    hooked = fista_solve_chunked(fc, y, lam, max_iters=400,
+                                 iteration_hook=hook)
+    assert hook.state["fired"]
+    assert int(hooked.health) >= 1
+    assert abs(float(hooked.obj) - float(clean.obj)) < 1e-4
+
+
+def test_poisoned_warm_start_sanitized(ds):
+    from repro.sparse.solver_stream import fista_solve_chunked
+
+    y = np.asarray(ds.y)
+    fc = FeatureChunked.from_dense(np.asarray(ds.X), chunk_m=16)
+    clean = fista_solve_chunked(fc, y, 1.0, max_iters=400)
+    w0 = np.zeros((fc.shape[0],), np.float32)
+    w0[1] = np.nan
+    res = fista_solve_chunked(fc, y, 1.0, w0=w0, b0=np.nan, max_iters=400)
+    assert int(res.health) >= 2
+    assert abs(float(res.obj) - float(clean.obj)) < 1e-4
+
+
+# -- invariant 3: corruption detected before the bytes are used -------------
+
+def test_corrupt_chunk_detected_before_screening(tmp_path, ds):
+    sd = str(tmp_path / "store")
+    FeatureChunked.from_dense(np.asarray(ds.X), chunk_m=16).save_store(
+        sd, y=np.asarray(ds.y))
+    # flip bytes in grid chunk 1 (rows 16..32 of the dense payload)
+    faults.corrupt_store_bytes(os.path.join(sd, "X.bin"),
+                               offset=17 * ds.X.shape[1] * 4)
+    fc = FeatureChunked.from_store(sd)
+    from repro.sparse.screen_stream import screen_step_stream
+
+    lam_max = float(np.max(np.abs(np.asarray(ds.X) @ (
+        np.asarray(ds.y) - np.mean(np.asarray(ds.y))))))
+    theta = np.zeros((ds.X.shape[1],), np.float32)
+    with pytest.raises(StoreCorruptError, match="chunk 1"):
+        screen_step_stream(fc, np.asarray(ds.y), lam_max, 0.5 * lam_max,
+                           theta)
+
+
+def test_truncated_and_missing_store_typed_errors(tmp_path, ds):
+    sd = str(tmp_path / "store")
+    FeatureChunked.from_dense(np.asarray(ds.X), chunk_m=16).save_store(sd)
+    faults.truncate_store_file(os.path.join(sd, "X.bin"), nbytes=64)
+    with pytest.raises(StoreCorruptError, match="truncated"):
+        FeatureChunked.from_store(sd)
+    with pytest.raises(StoreMissingError):
+        FeatureChunked.from_store(str(tmp_path / "absent"))
+
+
+def test_flaky_reads_absorbed_dead_reads_raise(tmp_path, ds):
+    sd = str(tmp_path / "store")
+    FeatureChunked.from_dense(np.asarray(ds.X), chunk_m=16).save_store(
+        sd, y=np.asarray(ds.y))
+    with faults.flaky_reads(n_failures=1) as counts:
+        fc = FeatureChunked.from_store(sd)
+        fc.verify()
+        assert counts  # at least one injected failure was retried through
+    with faults.dead_reads():
+        with pytest.raises(StoreError):
+            FeatureChunked.from_store(sd)
+
+
+def test_libsvm_rebuild_fallback(tmp_path):
+    p = str(tmp_path / "toy.svm")
+    with open(p, "w") as f:
+        f.write("+1 1:0.5 3:1.5\n-1 2:2.0\n+1 1:1.0 4:0.25\n")
+    fc, y = FeatureChunked.from_libsvm_cached(p, chunk_m=2)
+    ref = fc.as_dense().copy()
+    faults.corrupt_store_bytes(os.path.join(p + ".store", "data.bin"))
+    fc2, y2 = FeatureChunked.from_libsvm_cached(p, chunk_m=2)
+    fc2.verify()
+    assert np.array_equal(fc2.as_dense(), ref)
+    assert np.array_equal(y2, y)
+
+
+# -- invariant 2: kill mid-drain + resume == uninterrupted -------------------
+
+def test_server_kill_resume_equals_uninterrupted(tmp_path):
+    from repro.launch.path_server import PathServer, demo_jobs
+
+    ref = PathServer(slots=2).serve(demo_jobs(4, m=96, n=48),
+                                    log=lambda *a: None)
+
+    sd = str(tmp_path / "snap")
+    crashed = PathServer(slots=2)
+    crashed._step_hook = faults.kill_server_after(4)
+    with pytest.raises(faults.ServerKilled):
+        crashed.serve(demo_jobs(4, m=96, n=48), log=lambda *a: None,
+                      snapshot_dir=sd, snapshot_every=1)
+
+    resumed = PathServer(slots=2).serve(
+        demo_jobs(4, m=96, n=48), log=lambda *a: None,
+        snapshot_dir=sd, snapshot_every=1)
+    assert all(r is not None for r in resumed)
+    for ra, rb in zip(ref, resumed):
+        assert np.array_equal(np.asarray(ra.objectives),
+                              np.asarray(rb.objectives))
+        assert np.array_equal(np.asarray(ra.weights),
+                              np.asarray(rb.weights))
+        assert np.array_equal(np.asarray(ra.extras["health"]),
+                              np.asarray(rb.extras["health"]))
+
+
+def test_server_quarantine_isolates_tenant(monkeypatch):
+    from repro.launch.path_server import PathServer, demo_jobs
+
+    # disable the on-device guard so the poison actually reaches the host
+    # check (with guards on, the solver self-heals and no retry is needed)
+    monkeypatch.setenv("REPRO_SOLVER_GUARDS", "0")
+    jobs = demo_jobs(4, m=96, n=48)
+    for j in jobs:
+        j.max_retries = 0
+    srv = PathServer(slots=2)
+    state = {"hit": False}
+
+    def poison_slot0(step):
+        if not state["hit"] and srv._act[0]:
+            state["hit"] = True
+            b = srv._carry[1]
+            srv._carry = (srv._carry[0], b.at[0].set(jnp.nan)) + srv._carry[2:]
+
+    srv._step_hook = poison_slot0
+    res = srv.serve(jobs, log=lambda *a: None)
+    failed = [j for j in jobs if j.status == "failed"]
+    assert len(failed) == 1
+    assert "non-finite" in failed[0].error
+    assert srv.stats["jobs_failed"] == 1
+    assert sum(r is None for r in res) == 1
+    assert sum(r is not None for r in res) == 3
+
+
+def test_server_retry_recovers_transient_poison(monkeypatch):
+    from repro.launch.path_server import PathServer, demo_jobs
+
+    monkeypatch.setenv("REPRO_SOLVER_GUARDS", "0")
+    ref = PathServer(slots=2).serve(demo_jobs(4, m=96, n=48),
+                                    log=lambda *a: None)
+    srv = PathServer(slots=2)
+    state = {"hit": False}
+
+    def poison_once(step):
+        if step == 3 and not state["hit"]:
+            state["hit"] = True
+            b = srv._carry[1]
+            srv._carry = (srv._carry[0], b.at[0].set(jnp.nan)) + srv._carry[2:]
+
+    srv._step_hook = poison_once
+    res = srv.serve(demo_jobs(4, m=96, n=48), log=lambda *a: None)
+    assert srv.stats["retries"] >= 1
+    assert all(r is not None for r in res)
+    for ra, rb in zip(ref, res):
+        assert np.max(np.abs(np.asarray(ra.objectives)
+                             - np.asarray(rb.objectives))) < 1e-4
+
+
+def test_server_deadline_evicts(monkeypatch):
+    import time
+
+    from repro.launch.path_server import PathServer, demo_jobs
+
+    jobs = demo_jobs(2, m=96, n=48)
+    jobs[0].deadline_s = 0.0
+    jobs[0].t_start = time.perf_counter() - 1.0
+    res = PathServer(slots=2).serve(jobs, log=lambda *a: None)
+    assert jobs[0].status == "failed" and "deadline" in jobs[0].error
+    assert res[0] is None and res[1] is not None
+
+
+# -- cache guard: a poisoned anchor invalidates, streams everything ----------
+
+def test_chunk_cache_refresh_rejects_poisoned_anchor(ds):
+    from repro.core.screening import anchor_stats, fixed_stats
+    from repro.sparse.screen_stream import ChunkScreenCache, fixed_reductions
+
+    y = np.asarray(ds.y)
+    fc = FeatureChunked.from_dense(np.asarray(ds.X), chunk_m=16)
+    d_one, d_y, d_sq = fixed_reductions(fc, y)
+    yj = jnp.asarray(y, fc.dtype)
+    fixed = fixed_stats(yj, d_one, d_y, d_sq)
+    theta = jnp.zeros((ds.X.shape[1],), fc.dtype)
+    d_theta = jnp.zeros((fc.shape[0],), fc.dtype)
+
+    cache = ChunkScreenCache(fc)
+    good = anchor_stats(yj, 2.0, theta, 0.0, d_theta)
+    cache.refresh(good)
+    live, _ = cache.live_mask(1.0, fixed)
+    assert not live.all()  # a zero anchor certifies plenty dead
+
+    bad = anchor_stats(yj, 2.0, theta.at[0].set(jnp.nan), jnp.nan, d_theta)
+    cache.refresh(bad)
+    live2, bounds2 = cache.live_mask(1.0, fixed)
+    # poisoned anchor invalidated the cache: everything streams again
+    assert live2.all()
+    assert np.all(np.isinf(np.asarray(bounds2)))
