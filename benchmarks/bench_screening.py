@@ -19,8 +19,10 @@ own ``serve`` section (jobs/sec vs sequential ``svm_path``, slot occupancy,
 warm-cache hit/miss/retrace counters, p50/p95 job latency), and the
 ``robustness`` section prices the fault-tolerance layer (guards-on vs
 guards-off path walls — asserted < 5% overhead in ``--smoke`` — plus
-recovered-vs-clean objective diffs after a poisoned mid-path step). The
-file is
+recovered-vs-clean objective diffs after a poisoned mid-path step), and the
+``obs`` section prices the observability layer (tracing-on vs tracing-off
+path walls — asserted < 3% overhead in ``--smoke``, tracing-off bitwise
+equal — plus the run's uniform ``PathTrace`` artifact). The file is
 stamped with backend/device/jax-version metadata (``meta``) so trajectories
 from different machines are not silently compared.
 
@@ -163,6 +165,8 @@ def _rule_sweep(rows, log, m=2000, n=400, n_lambdas=10, lam_min_ratio=0.05):
     _serve_sweep(rows, log, traj)
     _robustness_sweep(rows, log, traj, m=m, n=n, n_lambdas=n_lambdas,
                       lam_min_ratio=lam_min_ratio)
+    _obs_sweep(rows, log, traj, m=m, n=n, n_lambdas=n_lambdas,
+               lam_min_ratio=lam_min_ratio)
     TRAJECTORY_PATH.write_text(json.dumps(traj, indent=2))
     log(f"wrote trajectory file: {TRAJECTORY_PATH}")
 
@@ -999,6 +1003,85 @@ def _robustness_sweep(rows, log, traj, m=2000, n=400, n_lambdas=10,
     return traj["robustness"]
 
 
+def _obs_sweep(rows, log, traj, m=2000, n=400, n_lambdas=10,
+               lam_min_ratio=0.05, tol=1e-9, max_iters=4000,
+               repeats=3, check=False):
+    """Observability cost on the stock host path. Writes
+    ``BENCH_screening.json["obs"]``.
+
+    The obs layer's contract is "always-on instrumentation you never have
+    to strip": with tracing *off* the span hooks must be free (the path's
+    numerics are untouched either way — asserted bitwise), and with
+    tracing *on* the recorder must stay under 3% of path wall (min over
+    ``repeats`` warm runs; the ``--smoke`` lane asserts it). Also checks
+    every run hands back the uniform ``PathTrace`` artifact.
+    """
+    from repro.obs import trace as obs_trace
+
+    ds = make_sparse_classification(m=m, n=n, k_active=20, seed=11)
+    kw = dict(rules="feature_vi", tol=tol, max_iters=max_iters)
+    run_kw = dict(n_lambdas=n_lambdas, lam_min_ratio=lam_min_ratio)
+    log(f"\n# observability (m={m}, n={n}, {n_lambdas} lambdas, "
+        f"min of {repeats} warm walls)")
+
+    was = obs_trace.enabled()
+    drv = PathDriver(**kw)
+    drv.run(ds.X, ds.y, **run_kw)  # warm the jit caches (tracing-neutral)
+
+    def trial(tracing):
+        (obs_trace.enable if tracing else obs_trace.disable)()
+        obs_trace.get_tracer().clear()
+        t0 = time.perf_counter()
+        r = drv.run(ds.X, ds.y, **run_kw)
+        dt = time.perf_counter() - t0
+        n = len(obs_trace.get_tracer().events)
+        obs_trace.get_tracer().clear()
+        return dt, r, n
+
+    # alternate off/on trials so machine drift hits both columns equally
+    try:
+        offs, ons = [], []
+        for _ in range(repeats):
+            offs.append(trial(False))
+            ons.append(trial(True))
+    finally:
+        (obs_trace.enable if was else obs_trace.disable)()
+    t_off, r_off, _ = min(offs, key=lambda x: x[0])
+    t_on, r_on, n_events = min(ons, key=lambda x: x[0])
+    overhead = (t_on - t_off) / t_off
+    bitwise = bool(np.allclose(np.asarray(r_on.objectives),
+                               np.asarray(r_off.objectives),
+                               rtol=0, atol=0))
+    pt = r_on.extras["path_trace"]
+    log(f"trace_on_s={t_on:.3f} trace_off_s={t_off:.3f} "
+        f"overhead={overhead * 100:.2f}% events_per_path={n_events} "
+        f"bitwise_off_vs_on={bitwise}")
+    if check:
+        assert overhead < 0.03, (
+            f"tracing overhead {overhead * 100:.2f}% >= 3% "
+            f"(on={t_on:.3f}s off={t_off:.3f}s)")
+        assert bitwise, "tracing changed the path's objectives"
+        assert pt.engine == "host" and len(pt.steps) == n_lambdas
+        # screen/solve/certify/step per solved step (k=0 is the analytic
+        # lambda_max point — no solve, no spans)
+        assert n_events >= 4 * (n_lambdas - 1)
+    rows.append(("obs_tracing", t_on * 1e6,
+                 f"overhead={overhead * 100:.2f}% events={n_events}"))
+    traj["obs"] = {
+        "instance": {"m": m, "n": n, "n_lambdas": n_lambdas,
+                     "lam_min_ratio": lam_min_ratio, "seed": 11,
+                     "tol": tol, "max_iters": max_iters,
+                     "repeats": repeats},
+        "trace_on_path_seconds": t_on,
+        "trace_off_path_seconds": t_off,
+        "trace_overhead_fraction": overhead,
+        "trace_events_per_path": int(n_events),
+        "objectives_bitwise_equal": bitwise,
+        "path_trace": pt.to_dict(),
+    }
+    return traj["obs"]
+
+
 def run(log=print, smoke=False):
     rows = []
     if smoke:
@@ -1017,6 +1100,9 @@ def run(log=print, smoke=False):
         _robustness_sweep(rows, log, {}, m=300, n=120, n_lambdas=5,
                           lam_min_ratio=0.2, tol=1e-10, max_iters=4000,
                           check=True)
+        _obs_sweep(rows, log, {}, m=300, n=120, n_lambdas=5,
+                   lam_min_ratio=0.2, tol=1e-10, max_iters=4000,
+                   repeats=5, check=True)
         return rows
     _rate_tables(rows, log)
     _rule_sweep(rows, log)

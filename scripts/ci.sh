@@ -41,6 +41,15 @@
 #                                #          batched-compact, server-vs-
 #                                #          sequential and sharded-scan-bitwise
 #                                #          regressions in seconds
+#   ./scripts/ci.sh obs          # obs:     observability layer
+#                                #          (tests/test_obs.py: span recorder
+#                                #          round-trip, disabled-mode no-op,
+#                                #          metrics registry mirroring the
+#                                #          legacy stats dicts bitwise,
+#                                #          PathTrace schema across engines)
+#                                #          + a train_svm --trace smoke that
+#                                #          validates the exported Chrome
+#                                #          trace JSON
 #   ./scripts/ci.sh chaos        # chaos:   fault-injection suite
 #                                #          (tests/test_faults.py via
 #                                #          src/repro/testing/faults.py):
@@ -53,7 +62,7 @@
 #                                #          interpret mode forced so guard
 #                                #          paths run on any backend
 #   ./scripts/ci.sh all          # kernels + x64 + stream + serve + rules
-#                                # + bench + chaos,
+#                                # + bench + chaos + obs,
 #                                # then full
 #
 # Extra pytest args pass through after the lane name (a leading '-' arg is
@@ -67,9 +76,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 lane="${1:-full}"
 case "$lane" in
-  full|fast|kernels|x64|stream|serve|rules|bench|chaos|all) shift || true ;;
+  full|fast|kernels|x64|stream|serve|rules|bench|chaos|obs|all) shift || true ;;
   -*) lane="full" ;;  # bare pytest args => full lane (legacy invocation)
-  *) echo "unknown lane '$lane' (full|fast|kernels|x64|stream|serve|rules|bench|chaos|all)" >&2; exit 2 ;;
+  *) echo "unknown lane '$lane' (full|fast|kernels|x64|stream|serve|rules|bench|chaos|obs|all)" >&2; exit 2 ;;
 esac
 
 # suites whose numerics are dtype-parametric: the safe-screening bound
@@ -118,6 +127,21 @@ run_lane() {
       REPRO_PALLAS_INTERPRET=1 python -m pytest -x -q \
         tests/test_faults.py "$@"
       ;;
+    obs)
+      python -m pytest -x -q tests/test_obs.py "$@"
+      # trace-capture smoke: the launcher must export loadable Chrome
+      # trace-event JSON with per-step spans from the scan engine
+      python -m repro.launch.train_svm --m 120 --n 60 --n-lambdas 4 \
+        --engine scan --trace artifacts/ci_trace.json
+      python - <<'EOF'
+import json
+doc = json.load(open("artifacts/ci_trace.json"))
+evs = doc["traceEvents"]
+assert any(e.get("ph") == "X" and e["name"] == "scan.step" for e in evs), \
+    sorted({e["name"] for e in evs})
+print(f"obs smoke: {len(evs)} trace events OK")
+EOF
+      ;;
   esac
 }
 
@@ -131,6 +155,7 @@ if [ "$lane" = "all" ]; then
   run_lane rules "$@"
   run_lane bench
   run_lane chaos "$@"
+  run_lane obs "$@"
   run_lane full "$@"
 else
   run_lane "$lane" "$@"

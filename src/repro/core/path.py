@@ -58,6 +58,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.path_trace import build_path_trace
+
 from .dual import (
     bias_at_lambda_max,
     lambda_max,
@@ -326,6 +330,8 @@ class PathDriver:
         iters = np.zeros((T,), dtype=np.int64)
         wall = np.zeros((T,), dtype=np.float64)
         s_times = np.zeros((T,), dtype=np.float64)
+        c_times = np.zeros((T,), dtype=np.float64)  # certification walls
+        deltas_log = np.full((T,), np.nan, dtype=np.float64)
         health = np.zeros((T,), dtype=np.int64)  # guard telemetry per step
         sample_masks: dict[int, np.ndarray] = {}  # accepted per-step masks
 
@@ -377,6 +383,7 @@ class PathDriver:
                 jnp.asarray(float(lambdas[0])),
             )
         anchor_ok = _anchor_ok(theta_prev, delta_prev)
+        deltas_log[0] = float(delta_prev)
         # trust-region movement state (inf until one step of history exists)
         dw_pred = float("inf")
         db_pred = float("inf")
@@ -490,11 +497,13 @@ class PathDriver:
             b_host = b_new
             w_host = w_full.copy()
 
+            ct0 = time.perf_counter()
             theta_prev, delta_prev = safe_theta_and_delta(
                 X, y, jnp.asarray(w_full, X.dtype), jnp.asarray(b_host, X.dtype),
                 jnp.asarray(lam),
             )
             anchor_ok = _anchor_ok(theta_prev, delta_prev)
+            deltas_log[k] = float(delta_prev)
             lam_prev = lam
 
             weights[k] = w_full
@@ -506,7 +515,19 @@ class PathDriver:
             # wall time covers all device work it caused, not just what the
             # host happened to wait for
             jax.block_until_ready((theta_prev, delta_prev))
+            c_times[k] = time.perf_counter() - ct0
             wall[k] = time.perf_counter() - t0
+            if obs_trace.enabled():
+                st1 = st0 + s_times[k]
+                obs_trace.complete("path.screen", st0, st1, step=k,
+                                   kept=int(kept[k]))
+                obs_trace.complete("path.solve", st1, ct0, step=k,
+                                   iters=int(iters[k]))
+                obs_trace.complete("path.certify", ct0, ct0 + c_times[k],
+                                   step=k)
+                obs_trace.complete("path.step", t0, t0 + wall[k], step=k,
+                                   lam=lam, kept=int(kept[k]),
+                                   active=int(active[k]))
 
             # telemetry hand-back: rules exposing ``observe`` (AutoRule's
             # cost model) learn this step's solve wall per kept feature
@@ -517,6 +538,14 @@ class PathDriver:
                     obs(solve_seconds=solve_s, kept=int(kept[k]))
 
         kept_s[0] = 0
+        self._observe_run("host", kept, health)
+        path_trace = build_path_trace(
+            "host", lambdas, kept, kept_s, active, iters, wall,
+            deltas=deltas_log, health=health, screen_s=s_times,
+            solve_s=np.maximum(wall - s_times - c_times, 0.0),
+            certify_s=c_times, walls_observed=True,
+            meta={"reduce": self.reduce, "lam_max": lam_max_val},
+        )
         return PathResult(
             lambdas=lambdas, weights=weights, biases=biases, objectives=objectives,
             kept=kept, active=active, solver_iters=iters, wall_times=wall,
@@ -525,8 +554,20 @@ class PathDriver:
             rules=tuple(r.name for r in self.rules),
             extras={"lam_max": lam_max_val, "sample_masks": sample_masks,
                     "dynamic": dyn_log, "rule_telemetry": rule_log,
-                    "health": health},
+                    "health": health, "path_trace": path_trace},
         )
+
+    @staticmethod
+    def _observe_run(engine: str, kept, health):
+        """Fold one run's per-step telemetry into the process metrics
+        registry (``repro.obs.metrics``): step counts, guard-tripped
+        steps, and the kept-per-step distribution."""
+        obs_metrics.counter("path.steps").inc(int(len(kept)))
+        obs_metrics.counter("path.guard_trips").inc(
+            int(np.count_nonzero(np.asarray(health))))
+        h = obs_metrics.histogram("path.kept")
+        for v in np.asarray(kept):
+            h.observe(float(v))
 
     # -- one reduced solve -------------------------------------------------
 
@@ -688,6 +729,8 @@ class PathDriver:
         iters = np.zeros((T,), dtype=np.int64)
         wall = np.zeros((T,), dtype=np.float64)
         s_times = np.zeros((T,), dtype=np.float64)
+        c_times = np.zeros((T,), dtype=np.float64)  # certification walls
+        deltas_log = np.full((T,), np.nan, dtype=np.float64)
         health = np.zeros((T,), dtype=np.int64)  # guard telemetry per step
         live_log = np.full((T,), fc.n_chunks, dtype=np.int64)
         sample_masks: dict[int, np.ndarray] = {}
@@ -745,6 +788,7 @@ class PathDriver:
                 cache.refresh(anchor_stats(
                     yd, float(lambdas[0]), theta_prev, delta_prev, d_th0))
         anchor_ok = _anchor_ok(theta_prev, delta_prev)
+        deltas_log[0] = float(delta_prev)
 
         for k in range(1, T):
             lam = float(lambdas[k])
@@ -877,12 +921,14 @@ class PathDriver:
             live_arg = None if live.all() else live
             fm_cert = (None if f_mask.all()
                        else jnp.asarray(f_mask.astype(fc.dtype)))
+            ct0 = time.perf_counter()
             theta_prev, delta_prev, d_th = gap_theta_delta_stream(
                 fc, y, jnp.asarray(w_full, fc.dtype), res.b,
                 jnp.asarray(lam), u=res.u, live_chunks=live_arg,
                 feature_mask=fm_cert, want_corr=True,
             )
             anchor_ok = _anchor_ok(theta_prev, delta_prev)
+            deltas_log[k] = float(delta_prev)
             if feature_rules:
                 # a poisoned anchor is safe to hand over: refresh() guards
                 # non-finite stats by *invalidating* the touched entries, so
@@ -899,13 +945,37 @@ class PathDriver:
             active[k] = int(np.sum(np.abs(w_full) > 1e-10))
             iters[k] = int(res.n_iters)
             jax.block_until_ready((theta_prev, delta_prev))
+            c_times[k] = time.perf_counter() - ct0
             wall[k] = time.perf_counter() - t0
+            if obs_trace.enabled():
+                st1 = st0 + s_times[k]
+                obs_trace.complete("path.screen", st0, st1, step=k,
+                                   kept=int(kept[k]),
+                                   live_chunks=int(live_log[k]))
+                obs_trace.complete("path.solve", st1, ct0, step=k,
+                                   iters=int(iters[k]))
+                obs_trace.complete("path.certify", ct0, ct0 + c_times[k],
+                                   step=k)
+                obs_trace.complete("path.step", t0, t0 + wall[k], step=k,
+                                   lam=lam, kept=int(kept[k]),
+                                   active=int(active[k]))
 
         kept_s[0] = 0
+        self._observe_run("chunked", kept, health)
+        path_trace = build_path_trace(
+            "chunked", lambdas, kept, kept_s, active, iters, wall,
+            deltas=deltas_log, health=health, screen_s=s_times,
+            solve_s=np.maximum(wall - s_times - c_times, 0.0),
+            certify_s=c_times, walls_observed=True,
+            meta={"storage": "chunked", "n_chunks": fc.n_chunks,
+                  "chunk_skip": self.chunk_skip, "lam_max": lam_max_val,
+                  "stream_stats": dict(fc.stats)},
+        )
         extras = {"lam_max": lam_max_val, "storage": "chunked",
                   "n_chunks": fc.n_chunks, "chunk_skip": self.chunk_skip,
                   "live_chunks": live_log,
                   "health": health,
+                  "path_trace": path_trace,
                   "stream_stats": dict(fc.stats)}
         if sample_rules:
             extras["sample_masks"] = sample_masks

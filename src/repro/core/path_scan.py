@@ -104,11 +104,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as obs_trace
+from repro.obs.path_trace import build_path_trace
+
 from .dual import bias_at_lambda_max, lambda_max, theta_at_lambda_max
 # _validate_grid shared with the host driver: a grid-validation change
 # applied to one engine must never leave the other accepting what the
 # first rejects
-from .path import PathResult, _validate_grid, default_lambda_grid
+from .path import PathDriver, PathResult, _validate_grid, default_lambda_grid
 from .rules.programs import (
     PROGRAMS,
     resolve_programs,
@@ -821,11 +824,29 @@ def _static_opts(max_iters, screening, dynamic, screen_every, use_pallas,
 
 
 def _to_path_result(lambdas, outs: ScanPathOutputs, lam_max_val, wall_s,
-                    screening, static_kw) -> PathResult:
+                    screening, static_kw, engine: str = "scan") -> PathResult:
     T = len(lambdas)
     opts = dict(static_kw)
     screened = bool(opts.get("screening", screening))
     per_step = np.full((T,), wall_s / max(T, 1), dtype=np.float64)
+    # the uniform PathTrace artifact, synthesized post-hoc from the scan
+    # carry's streamed telemetry (kept/iters/gap/delta/health ride the
+    # device outputs; per-step walls are the uniform share of the blocked
+    # dispatch — walls_observed=False says so)
+    path_trace = build_path_trace(
+        engine, lambdas, np.asarray(outs.kept, np.int64), None,
+        np.asarray(outs.active, np.int64),
+        np.asarray(outs.n_iters, np.int64), per_step,
+        gaps=np.asarray(outs.gap, np.float64),
+        deltas=np.asarray(outs.delta, np.float64),
+        health=np.asarray(outs.health, np.int64),
+        total_s=float(wall_s), walls_observed=False,
+        meta={"reduce": opts.get("reduce"), "lam_max": float(lam_max_val)},
+    )
+    # same registry counters the host driver feeds (steps / guard trips /
+    # kept histogram), so every engine's runs aggregate in one place
+    PathDriver._observe_run(engine, np.asarray(outs.kept, np.int64),
+                            np.asarray(outs.health, np.int64))
     return PathResult(
         lambdas=np.asarray(lambdas, np.float64),
         weights=np.asarray(outs.w, np.float64),
@@ -844,7 +865,8 @@ def _to_path_result(lambdas, outs: ScanPathOutputs, lam_max_val, wall_s,
         verify_rounds=np.zeros((T,), np.int64),
         rules=opts.get("rules", ("feature_vi",) if screened else ()),
         extras={
-            "engine": "scan",
+            "engine": engine,
+            "path_trace": path_trace,
             "lam_max": float(lam_max_val),
             "total_seconds": float(wall_s),
             "gaps": np.asarray(outs.gap, np.float64),
@@ -934,9 +956,14 @@ def svm_path_scan(
                   delta0, jnp.asarray(lam_max_val, X.dtype), None,
                   float(tau), float(tol))
     outs = jax.block_until_ready(outs)
-    wall_s = time.perf_counter() - t0
-    return _to_path_result(lambdas, outs, lam_max_val, wall_s, screening,
-                           static_kw)
+    t1 = time.perf_counter()
+    wall_s = t1 - t0
+    obs_trace.complete("scan.dispatch", t0, t1, steps=len(lambdas),
+                       reduce=dict(static_kw)["reduce"])
+    r = _to_path_result(lambdas, outs, lam_max_val, wall_s, screening,
+                        static_kw)
+    r.extras["path_trace"].emit_to_tracer()
+    return r
 
 
 def svm_path_scan_sharded(
@@ -1037,11 +1064,14 @@ def svm_path_scan_sharded(
               jnp.asarray(float(tau), X.dtype),
               jnp.asarray(float(tol), X.dtype))
     outs = jax.block_until_ready(outs)
-    wall_s = time.perf_counter() - t0
+    t1 = time.perf_counter()
+    wall_s = t1 - t0
+    obs_trace.complete("scan_sharded.dispatch", t0, t1, steps=len(lambdas))
     r = _to_path_result(lambdas, outs, lam_max_val, wall_s, screening,
-                        static_kw)
+                        static_kw, engine="scan_sharded")
     r.extras["engine"] = "scan_sharded"
     r.extras["mesh"] = dict(zip(mesh.axis_names, mesh.devices.shape))
+    r.extras["path_trace"].emit_to_tracer()
     return r
 
 
@@ -1162,15 +1192,19 @@ def svm_path_batched(
     t0 = time.perf_counter()
     outs = engine(*args, None, float(tau), float(tol))
     outs = jax.block_until_ready(outs)
-    wall_s = time.perf_counter() - t0
+    t1 = time.perf_counter()
+    wall_s = t1 - t0
+    obs_trace.complete("batched.dispatch", t0, t1, batch=B)
 
     results = []
     for i in range(B):
         sub = ScanPathOutputs(*(np.asarray(v)[i] for v in outs))
         r = _to_path_result(grids[i], sub, float(lam_maxs[i]), wall_s / B,
-                            screening, static_kw)
+                            screening, static_kw, engine="batched")
         r.extras["total_seconds"] = float(wall_s)
         r.extras["batch"] = B
         r.extras["batch_index"] = i
+        r.extras["path_trace"].meta["batch_index"] = i
+        r.extras["path_trace"].emit_to_tracer()
         results.append(r)
     return results

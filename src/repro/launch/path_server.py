@@ -102,10 +102,16 @@ from repro.core.path_scan import (
     _static_opts,
     _to_path_result,
     compact_caps_batched,
+    engine_cache_info,
 )
 from repro.core.rules.programs import PROGRAMS, resolve_programs
 from repro.core.screening import SAFE_TAU
 from repro.core.solver import lipschitz_estimate
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.log import get_logger, setup as log_setup
+
+_LOG = get_logger("launch.path_server")
 
 
 @dataclass
@@ -208,15 +214,21 @@ class PathServer:
         # carry their streams too, or a resume would lose their results
         self._tracked_done: list[PathJob] = []
 
+    def _bump(self, key: str, n: int = 1):
+        """Increment a legacy ``stats`` counter and mirror it into the
+        process-wide metrics registry under ``serve.<key>``."""
+        self.stats[key] += n
+        obs_metrics.counter("serve." + key).inc(n)
+
     # -- program cache -----------------------------------------------------
 
     def _program(self, m_b: int, n_b: int, cap_b: int, cfg: tuple):
         key = (m_b, n_b, cap_b, self.slots, cfg)
         fn = self._programs.get(key)
         if fn is not None:
-            self.stats["hits"] += 1
+            self._bump("hits")
             return fn
-        self.stats["misses"] += 1
+        self._bump("misses")
         caps = () if cap_b >= m_b else (cap_b,)
         fn = jax.jit(partial(_batched_path_step, caps=caps, shared_x=False,
                              **dict(cfg)))
@@ -232,6 +244,19 @@ class PathServer:
                 retraces += max(0, int(probe()) - 1)
         return dict(programs=len(self._programs), hits=self.stats["hits"],
                     misses=self.stats["misses"], retraces=retraces)
+
+    def metrics(self) -> dict:
+        """Unified observability snapshot (the ISSUE's one-stop view):
+        the process-wide :mod:`repro.obs.metrics` registry — which the
+        server's counters mirror into live — with the step-program cache
+        health (:meth:`cache_stats`) and the scan-engine warm-cache layers
+        (``engine_cache_info``) absorbed as gauges."""
+        obs_metrics.absorb("serve.cache", self.cache_stats())
+        info = engine_cache_info()
+        obs_metrics.gauge("engine.cache.programs").set(len(info))
+        obs_metrics.gauge("engine.cache.retraces").set(
+            sum(max(0, v - 1) for v in info.values() if v > 0))
+        return obs_metrics.snapshot()
 
     # -- group (bucket) state ----------------------------------------------
 
@@ -368,10 +393,10 @@ class PathServer:
                               self._inv_L, tau, self.tol, carry_prev,
                               lam, act)
         host = {k: np.asarray(v) for k, v in out._asdict().items()}
-        self.stats["steps"] += 1
-        self.stats["occupied_slots"] += int(self._act.sum())
+        self._bump("steps")
+        self._bump("occupied_slots", int(self._act.sum()))
         if self.reduce == "compact" and int(host["cap"][0]) >= m_b:
-            self.stats["mask_fallback_steps"] += 1
+            self._bump("mask_fallback_steps")
         for s in range(self.slots):
             if not self._act[s]:
                 continue
@@ -385,7 +410,7 @@ class PathServer:
                 # other tenants' outputs are committed normally
                 if job.retries < job.max_retries:
                     job.retries += 1
-                    self.stats["retries"] += 1
+                    self._bump("retries")
                     time.sleep(self._retry_backoff_s * (2 ** (job.retries - 1)))
                     self._carry = self._restore_slot_carry(carry_prev, s)
                     continue
@@ -430,7 +455,9 @@ class PathServer:
         job.error = msg
         job.t_done = time.perf_counter()
         job.result = None
-        self.stats["jobs_failed"] += 1
+        self._bump("jobs_failed")
+        obs_metrics.histogram("serve.latency_s").observe(
+            float(job.t_done - job.t_submit))
         self._tracked_done.append(job)
         self._act[slot] = False
         self._slot_jobs[slot] = None
@@ -448,12 +475,20 @@ class PathServer:
         # mask-fallback steps report the bucket width; clamp to the true m
         stacked["cap"] = np.minimum(stacked["cap"], m)
         outs = ScanPathOutputs(**stacked)
+        latency = job.t_done - job.t_submit
         r = _to_path_result(job.lambdas, outs, job.lam_max,
-                            job.t_done - job.t_submit, job.screening,
-                            self._cfg)
+                            latency, job.screening,
+                            self._cfg, engine="serve")
         r.extras["engine"] = "serve"
         r.extras["jid"] = job.jid
-        r.extras["latency_s"] = job.t_done - job.t_submit
+        r.extras["latency_s"] = latency
+        # the shared PathTrace latency field: the job's queue-to-done wall
+        # lands in total_s, same slot the host driver's summed step walls
+        # use — one bookkeeping scheme across engines
+        pt = r.extras["path_trace"]
+        pt.meta["jid"] = job.jid
+        pt.meta["latency_s"] = float(latency)
+        pt.emit_to_tracer()
         job.result = r
         return r
 
@@ -462,7 +497,9 @@ class PathServer:
         job.t_done = time.perf_counter()
         self._assemble(job)
         job.status = "done"
-        self.stats["jobs_done"] += 1
+        self._bump("jobs_done")
+        obs_metrics.histogram("serve.latency_s").observe(
+            float(job.t_done - job.t_submit))
         self._tracked_done.append(job)
         self._act[slot] = False
         self._slot_jobs[slot] = None
@@ -572,20 +609,22 @@ class PathServer:
                 job.t_done = job.t_submit + float(jm["elapsed"])
                 self._assemble(job)
                 self._tracked_done.append(job)
-                self.stats["jobs_done"] += 1
+                self._bump("jobs_done")
             elif job.status == "failed":
                 job.t_done = job.t_submit + float(jm["elapsed"])
                 self._tracked_done.append(job)
-                self.stats["jobs_failed"] += 1
+                self._bump("jobs_failed")
         self._slot_jobs = [by_jid[j] if j >= 0 else None
                            for j in ex["slots"]]
-        self.stats["steps"] = int(ex["stats"].get("steps",
-                                                  manifest["step"]))
+        # restore is an assignment in the legacy dict; mirror it into the
+        # monotone registry counter as the delta so both stay equal
+        restored = int(ex["stats"].get("steps", manifest["step"]))
+        self._bump("steps", restored - self.stats["steps"])
         return [by_jid[j] for j in ex["pending"]]
 
     # -- the serve loop ----------------------------------------------------
 
-    def serve(self, jobs: list[PathJob], log=print,
+    def serve(self, jobs: list[PathJob], log=None,
               snapshot_dir=None, snapshot_every: int = 0,
               ) -> list[Optional[PathResult]]:
         """Drain a job queue; returns results in submission order (a failed
@@ -603,6 +642,8 @@ class PathServer:
         resumes from the latest snapshot instead of starting over, and the
         resumed run's results equal an uninterrupted run's.
         """
+        if log is None:
+            log = _LOG.info
         pending = list(jobs)
         t0 = time.perf_counter()
         for j in pending:
@@ -619,18 +660,23 @@ class PathServer:
                 nxt_group = pending[0].group_key()
                 if self._group != nxt_group:
                     self._alloc_group(nxt_group)
-            for s in range(self.slots):
-                if not self._act[s]:
-                    nxt = next((j for j in pending
-                                if j.group_key() == self._group), None)
-                    if nxt is None:
-                        break
-                    pending.remove(nxt)
-                    self._insert(s, nxt)
-            self.step()
+            with obs_trace.span("serve.refill", pending=len(pending)):
+                for s in range(self.slots):
+                    if not self._act[s]:
+                        nxt = next((j for j in pending
+                                    if j.group_key() == self._group), None)
+                        if nxt is None:
+                            break
+                        pending.remove(nxt)
+                        self._insert(s, nxt)
+            with obs_trace.span("serve.step", step=self.stats["steps"],
+                                occupied=int(self._act.sum())):
+                self.step()
             if (mgr is not None and snapshot_every
                     and self.stats["steps"] % int(snapshot_every) == 0):
-                self._snapshot(mgr, pending)
+                with obs_trace.span("serve.checkpoint",
+                                    step=self.stats["steps"]):
+                    self._snapshot(mgr, pending)
             if self._step_hook is not None:
                 self._step_hook(self.stats["steps"])
         wall = time.perf_counter() - t0
@@ -645,6 +691,7 @@ class PathServer:
             latency_p95_s=float(np.percentile(lat, 95)),
             **self.cache_stats(),
         )
+        obs_metrics.gauge("serve.slot_occupancy").set(float(occ))
         log(f"[serve] {len(jobs)} jobs in {wall:.2f}s "
             f"({self.last_serve['jobs_per_s']:.2f} jobs/s), "
             f"occupancy={occ:.2f}, cache={self.cache_stats()}")
@@ -678,17 +725,20 @@ def main():
     ap.add_argument("--tol", type=float, default=1e-9)
     args = ap.parse_args()
 
+    log_setup()
     server = PathServer(slots=args.slots, reduce=args.reduce, tol=args.tol)
     jobs = demo_jobs(args.jobs, m=args.m, n=args.n)
     results = server.serve(jobs)
     for r in results:
-        print(f"  job {r.extras['jid']}: T={len(r.lambdas)} "
-              f"final nnz={int(r.active[-1])} "
-              f"obj={float(r.objectives[-1]):.5f} "
-              f"latency={r.extras['latency_s']:.2f}s")
+        _LOG.info(
+            "job %d: T=%d final nnz=%d obj=%.5f latency=%.2fs",
+            r.extras["jid"], len(r.lambdas), int(r.active[-1]),
+            float(r.objectives[-1]), r.extras["latency_s"])
     Path("artifacts").mkdir(exist_ok=True)
     Path("artifacts/svm_serve.json").write_text(
         json.dumps(server.last_serve, indent=2))
+    Path("artifacts/svm_serve_metrics.json").write_text(
+        json.dumps(server.metrics(), indent=2, default=str))
 
 
 if __name__ == "__main__":

@@ -40,13 +40,17 @@ from __future__ import annotations
 
 import argparse
 import json
-import sys
 import time
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import trace as obs_trace
+from repro.obs.log import get_logger, setup as log_setup
+
+_LOG = get_logger("launch.train_svm")
 
 from repro.checkpoint import CheckpointManager
 from repro.core import (
@@ -84,7 +88,7 @@ def run_path_scan(
     dynamic: bool = False,
     screen_every: int = 50,
     exact_lipschitz: bool = False,
-    log=print,
+    log=None,
 ):
     """The launcher's scan-engine lane: one program, no per-step host loop.
 
@@ -96,6 +100,8 @@ def run_path_scan(
     """
     from repro.core import svm_path_scan, svm_path_scan_sharded
 
+    if log is None:
+        log = _LOG.info
     # lowerability of the rule spec is validated by the engines at dispatch
     # (rules/programs.resolve_programs): any a-priori-safe feature-rule
     # stack (feature_vi / edpp / dvi / auto / lists) runs in the jitted
@@ -150,7 +156,7 @@ def run_path(
     n_lambdas: int = 10, lam_min_ratio: float = 0.1,
     model: int = 1, data: int = 1,
     tol: float = 1e-9, max_iters: int = 4000,
-    ckpt_dir: str = "artifacts/svm_ckpt", log=print,
+    ckpt_dir: str = "artifacts/svm_ckpt", log=None,
     rules: str = "feature_vi",
     shrink_factor: float = 1.5,
     max_verify_rounds: int = 3,
@@ -158,6 +164,8 @@ def run_path(
     screen_every: int = 50,
     exact_lipschitz: bool = False,
 ):
+    if log is None:
+        log = _LOG.info
     mesh = svm_mesh(model=model, data=data)
     Xj, yj = jnp.asarray(X), jnp.asarray(y)
     m, n = Xj.shape
@@ -279,6 +287,8 @@ def run_path(
                  "db": jnp.asarray(shrink_factor * db_obs, jnp.float32),
                  "k": jnp.asarray(k, jnp.int32)}
         dt = time.perf_counter() - t0
+        obs_trace.complete("path.step", t0, t0 + dt, step=k, lam=lam2,
+                           kept=kept, iters=int(res.n_iters))
         nnz = int(jnp.sum(jnp.abs(res.w) > 1e-8))
         kept_n = int(s_mask.sum())
         row = {"lam": lam2, "kept": kept, "kept_samples": kept_n,
@@ -312,7 +322,7 @@ def run_path_chunked(
     screen_every: int = 50,
     libsvm_path=None,
     store_dir=None,
-    log=print,
+    log=None,
 ):
     """The launcher's out-of-core lane: stream the screened path over
     ``repro.sparse.FeatureChunked`` storage (``--storage chunked|csr``).
@@ -331,6 +341,8 @@ def run_path_chunked(
     from repro.core import PathDriver
     from repro.sparse import FeatureChunked
 
+    if log is None:
+        log = _LOG.info
     # program-backed feature stacks stream (feature_vi / edpp / dvi /
     # auto); sample rules (sample_vi / composite / sifs) ride the
     # transposed sweep + carried-margin verification; the driver lane
@@ -452,8 +464,46 @@ def main():
                          "solving one path")
     ap.add_argument("--serve-jobs", type=int, default=8)
     ap.add_argument("--serve-slots", type=int, default=4)
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="record obs spans around the path and export "
+                         "Chrome trace-event JSON here (open in Perfetto / "
+                         "chrome://tracing); equivalent to REPRO_TRACE=1 "
+                         "plus an export")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace of the path "
+                         "into DIR (view with TensorBoard / Perfetto; the "
+                         "engines' named_scope annotations label the "
+                         "regions)")
     args = ap.parse_args()
 
+    log_setup()
+    _obs_begin(args)
+    try:
+        _run(args, ap)
+    finally:
+        _obs_end(args)
+
+
+def _obs_begin(args):
+    """Arm the observability capture selected on the command line: the obs
+    span recorder (``--trace``) and/or the jax device profiler
+    (``--profile``), both spanning the whole path dispatch."""
+    if args.trace:
+        obs_trace.enable()
+    if args.profile:
+        jax.profiler.start_trace(args.profile)
+
+
+def _obs_end(args):
+    if args.profile:
+        jax.profiler.stop_trace()
+        _LOG.info("profiler trace captured to %s", args.profile)
+    if args.trace:
+        path = obs_trace.export_chrome(args.trace)
+        _LOG.info("chrome trace written to %s (load in Perfetto)", path)
+
+
+def _run(args, ap):
     if args.serve:
         from repro.launch.path_server import PathServer, demo_jobs
 
@@ -468,6 +518,8 @@ def main():
         Path("artifacts").mkdir(exist_ok=True)
         Path("artifacts/svm_serve.json").write_text(
             json.dumps(server.last_serve, indent=2))
+        Path("artifacts/svm_serve_metrics.json").write_text(
+            json.dumps(server.metrics(), indent=2, default=str))
         return
 
     rules = args.rules if "," not in args.rules else args.rules.split(",")
@@ -521,7 +573,7 @@ def main():
             # typed storage failure (missing store, checksum mismatch,
             # exhausted read retries) — a clean message and a nonzero
             # exit, not a traceback
-            print(f"error: {type(e).__name__}: {e}", file=sys.stderr)
+            _LOG.error("%s: %s", type(e).__name__, e)
             raise SystemExit(2)
         Path("artifacts").mkdir(exist_ok=True)
         Path("artifacts/svm_path.json").write_text(json.dumps(results, indent=2))

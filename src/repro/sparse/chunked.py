@@ -76,6 +76,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+
 __all__ = ["CsrChunk", "FeatureChunked", "BCOO_DENSITY_THRESHOLD",
            "StoreError", "StoreMissingError", "StoreCorruptError"]
 
@@ -268,6 +270,12 @@ class FeatureChunked:
         # store's uniform chunk grid (None = not store-backed / no sums)
         self._store = None
 
+    def _bump(self, key: str, n: int = 1):
+        """Increment a legacy ``stats`` counter and mirror it into the
+        process-wide metrics registry under ``stream.<key>``."""
+        self.stats[key] += n
+        obs_metrics.counter("stream." + key).inc(n)
+
     # -- constructors ------------------------------------------------------
 
     @classmethod
@@ -376,23 +384,24 @@ class FeatureChunked:
         self._verify_rows(*self.chunk_bounds(i))
         c = self.chunks[i]
         rows = c.rows if isinstance(c, CsrChunk) else c.shape[0]
-        self.stats["puts"] += 1
-        self.stats["chunks_streamed"] += 1
+        self._bump("puts")
+        self._bump("chunks_streamed")
         self.stats["max_put_rows"] = max(self.stats["max_put_rows"], rows)
+        obs_metrics.gauge("stream.max_put_rows").set_max(rows)
         if isinstance(c, CsrChunk) and c.density <= self.bcoo_threshold:
-            self.stats["bcoo_puts"] += 1
+            self._bump("bcoo_puts")
             row_idx = np.repeat(np.arange(c.rows, dtype=np.int32),
                                 np.diff(c.indptr))
             idx = np.stack([row_idx, c.indices.astype(np.int32)], axis=1)
             data = c.data.astype(self.dtype)
-            self.stats["bytes_put"] += data.nbytes + idx.nbytes
+            self._bump("bytes_put", data.nbytes + idx.nbytes)
             return jsparse.BCOO(
                 (jax.device_put(data), jax.device_put(idx)),
                 shape=(c.rows, self.n),
             )
         dense = np.asarray(c.to_dense(self.dtype) if isinstance(c, CsrChunk)
                            else c, self.dtype)
-        self.stats["bytes_put"] += dense.nbytes
+        self._bump("bytes_put", dense.nbytes)
         return jax.device_put(dense)
 
     def live_order(self, live_chunks) -> list:
@@ -425,7 +434,7 @@ class FeatureChunked:
         runs over the live subsequence, so skipping keeps the double buffer.
         """
         order = self.live_order(live_chunks)
-        self.stats["chunks_skipped"] += self.n_chunks - len(order)
+        self._bump("chunks_skipped", self.n_chunks - len(order))
         if not order:
             return
         nxt = self._device_form(order[0])

@@ -49,12 +49,15 @@ testable property rather than a hope.
 from __future__ import annotations
 
 import functools
+import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.core.rules.programs import PROGRAMS, stack_bounds
 from repro.core.screening import (
     SAFE_TAU,
@@ -174,8 +177,9 @@ def screen_bounds_stream(
         for i, c in enumerate(fc.chunks):
             dense = c.to_dense(fc.dtype) if isinstance(c, CsrChunk) else c
             rows = dense.shape[0]
-            fc.stats["puts"] += 1
+            fc._bump("puts")
             fc.stats["max_put_rows"] = max(fc.stats["max_put_rows"], rows)
+            obs_metrics.gauge("stream.max_put_rows").set_max(rows)
             parts.append(screen_bounds_op(jnp.asarray(dense, fc.dtype), y,
                                           lam1, lam2, theta1, delta=delta))
         return jnp.concatenate(parts)
@@ -401,6 +405,7 @@ def screen_step_stream(
     """
     from repro.kernels.ops import fista_use_pallas  # lazy: no import cycle
 
+    _tt0 = time.perf_counter()
     y_key = y
     d_one, d_y, d_sq = fixed_reductions(fc, y)
     y = jnp.asarray(y, fc.dtype)
@@ -449,7 +454,12 @@ def screen_step_stream(
             ~live, np.diff(fc.offsets).astype(np.int64))
         bounds = jnp.where(jnp.asarray(dead_feat), stale_bounds, bounds)
     # NaN-safe keep: a non-finite bound certifies nothing — keep the feature
-    return ~(bounds < tau), bounds, anchor, live
+    keep = ~(bounds < tau)
+    if obs_trace.enabled():
+        obs_trace.complete("stream.screen", _tt0, time.perf_counter(),
+                           live=int(np.count_nonzero(live)),
+                           chunks=int(fc.n_chunks), skip=bool(skip))
+    return keep, bounds, anchor, live
 
 
 def _pallas_step(fc, y_key, y, lam1, lam2, theta1, delta, cache, live, skip):
@@ -465,17 +475,18 @@ def _pallas_step(fc, y_key, y, lam1, lam2, theta1, delta, cache, live, skip):
     for i, c in enumerate(fc.chunks):
         s, e = fc.chunk_bounds(i)
         if not live[i] and skip:
-            fc.stats["chunks_skipped"] += 1
+            fc._bump("chunks_skipped")
             bounds_parts.append(jnp.zeros((e - s,), fc.dtype))  # stamped over
             d_parts.append(cache.d_theta_slice(i))
             continue
         dense = c.to_dense(fc.dtype) if isinstance(c, CsrChunk) else c
         dense = np.asarray(dense, fc.dtype)
-        fc.stats["puts"] += 1
-        fc.stats["chunks_streamed"] += 1
-        fc.stats["bytes_put"] += dense.nbytes
+        fc._bump("puts")
+        fc._bump("chunks_streamed")
+        fc._bump("bytes_put", dense.nbytes)
         fc.stats["max_put_rows"] = max(fc.stats["max_put_rows"],
                                        dense.shape[0])
+        obs_metrics.gauge("stream.max_put_rows").set_max(dense.shape[0])
         dev = jnp.asarray(dense)
         bounds_parts.append(screen_bounds_op(dev, y, lam1, lam2, theta1,
                                              delta=delta))

@@ -39,11 +39,14 @@ solve transfer volume tracks the certified support, not ``m``.
 
 from __future__ import annotations
 
+import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import trace as obs_trace
 
 from repro.core.screening import (
     SAFE_TAU,
@@ -234,6 +237,7 @@ def fista_solve_chunked(
         return w_new, b_new, u_new, obj_new
 
     eps = float(jnp.finfo(fc.dtype).eps)
+    _tt0 = time.perf_counter()
     while k < max_iters:
         inv_Le = inv_L * backoff if guards else inv_L
         t_next = 0.5 * (1.0 + float(jnp.sqrt(1.0 + 4.0 * t * t)))
@@ -314,6 +318,8 @@ def fista_solve_chunked(
             keep = np.asarray(~(_finalize_bounds(red, sh) < screen_tau))
             new_fmask = fmask & keep
             n_screens += 1
+            obs_trace.instant("stream.solve.screen", iter=k,
+                              kept=int(new_fmask.sum()))
             if new_fmask.sum() < fmask.sum():
                 fmask = new_fmask
                 masked = True
@@ -327,6 +333,10 @@ def fista_solve_chunked(
                 w_prev, b_prev, u_prev, t = w, b, u, 1.0
                 rel_prev = rel_prev2 = float("inf")
 
+    if obs_trace.enabled():
+        obs_trace.complete("stream.solve", _tt0, time.perf_counter(),
+                           iters=k, converged=bool(converged),
+                           screens=n_screens, kept=int(fmask.sum()))
     if report is not None:
         report.update(
             screens=n_screens,
